@@ -1,0 +1,69 @@
+"""Paper Table 6 (§6.2b): classification vs regression model families,
+plain-argmax evaluation (same features, training set, capacity), plus
+per-family inference latency (the Ridge/MLP-Reg/RF-Reg comparison)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core import training as T
+from repro.core.baselines import BestMethodClassifier, PerMethodRegressor
+from repro.core.mlp import Scaler
+
+from benchmarks.common import emit, load_artifacts, timeit_us
+
+FAMILIES = [
+    ("classification", "LogisticReg", "logistic"),
+    ("classification", "MLP", "mlp"),
+    ("classification", "RandomForest", "rf"),
+    ("regression", "Ridge", "ridge"),
+    ("regression", "MLP-Reg", "mlp"),
+    ("regression", "RF-Reg", "rf"),
+]
+
+
+def run(verbose=True):
+    coll_train, coll_val, _ = load_artifacts(verbose=False)
+    feats = F.MINIMAL_FEATURES
+    x_tr, y_tr, _ = T.assemble_xy(coll_train, feats)
+    scaler = Scaler.fit(x_tr)
+    xs_tr = scaler.transform(x_tr)
+    best_tr = y_tr.argmax(axis=1)
+
+    rows = []
+    for family, label, kind in FAMILIES:
+        if family == "classification":
+            model = BestMethodClassifier(kind, len(T.METHOD_ORDER)).fit(
+                xs_tr, best_tr)
+            choose = lambda xs: model.predict(xs)
+        else:
+            model = PerMethodRegressor(kind).fit(xs_tr, y_tr)
+            choose = lambda xs: model.predict(xs).argmax(1)
+
+        per_ds, agg = {}, []
+        for (ds, pt), cell in coll_val.cells.items():
+            x, y, _ = T.assemble_xy(
+                T.Collection(cells={(ds, pt): cell}, table=coll_val.table),
+                feats)
+            picks = choose(scaler.transform(x))
+            rec = [cell.recall[T.METHOD_ORDER[p]][i]
+                   for i, p in enumerate(picks)]
+            per_ds.setdefault(ds, []).extend(rec)
+            agg.extend(rec)
+        # inference latency per query (batch-1 calls)
+        x1 = xs_tr[:1]
+        lat = timeit_us(choose, x1, repeat=7, number=5) / 5
+        rows.append({
+            "family": family, "model": label,
+            "yahoo800k": round(float(np.mean(per_ds["yahoo800k"])), 4),
+            "dbpedia560k": round(float(np.mean(per_ds["dbpedia560k"])), 4),
+            "aggregate": round(float(np.mean(agg)), 4),
+            "us_per_query": round(lat, 2)})
+        if verbose:
+            r = rows[-1]
+            print(f"  {family:14s} {label:12s} agg={r['aggregate']:.4f} "
+                  f"yahoo={r['yahoo800k']:.4f} dbp={r['dbpedia560k']:.4f} "
+                  f"{r['us_per_query']:8.2f} us/q", flush=True)
+    path = emit(rows, "table6_cls_vs_reg")
+    return rows, path

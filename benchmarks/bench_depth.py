@@ -1,0 +1,44 @@
+"""Paper Table 7 (§6.2c): MLP depth ablation — routing recall and per-query
+inference latency for 2/3/4 hidden layers."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core import training as T
+
+from benchmarks.common import emit, load_artifacts, timeit_us
+from benchmarks.bench_feature_ablation import routed_recall
+
+DEPTHS = {2: (64, 32), 3: (64, 32, 16), 4: (64, 32, 16, 8)}
+
+
+def run(verbose=True):
+    coll_train, coll_val, _ = load_artifacts(verbose=False)
+    rows = []
+    for depth, hidden in DEPTHS.items():
+        models, scaler = T.train_models(coll_train, F.MINIMAL_FEATURES,
+                                        seed=0, hidden=hidden, epochs=120)
+        rec = routed_recall(coll_val, models, scaler, F.MINIMAL_FEATURES,
+                            table=coll_train.table)
+        # per-query latency: 5 method forwards on a single feature vector
+        # (production numpy inference path — see core/mlp.forward_np)
+        from repro.core import mlp as mlp_mod
+        import numpy as _np
+        params = [models[m] for m in T.METHOD_ORDER]
+        x1 = _np.zeros((1, 5), _np.float32)
+
+        def five_forwards(x):
+            for p in params:
+                mlp_mod.forward_np(p, x)
+
+        five_forwards(x1)   # warm
+        lat = timeit_us(five_forwards, x1, repeat=9, number=50) / 50
+        rows.append({"hidden_layers": depth, "recall": round(rec, 4),
+                     "us_per_query": round(lat, 2)})
+        if verbose:
+            print(f"  depth={depth} recall={rec:.4f} {lat:7.2f} us/q",
+                  flush=True)
+    path = emit(rows, "table7_depth")
+    return rows, path

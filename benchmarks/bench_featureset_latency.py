@@ -1,0 +1,62 @@
+"""Paper Table 5 (§6.2a): end-to-end per-query latency under the n=2 vs n=3
+candidate feature sets on the two real-text validation datasets — the
+tie-break that selects the 3-feature minimal set (lid_mean steers the
+router away from latency-heavy methods)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.predicates import Predicate
+from repro.core import features as F
+from repro.core import training as T
+from repro.core.router import MLRouter
+from repro.data.ann_synth import get_dataset, make_queries
+
+from benchmarks.common import emit, load_artifacts
+
+FEATURE_SETS = {
+    2: ["selectivity", "pred"],
+    3: F.MINIMAL_FEATURES,            # selectivity, lid_mean, pred
+}
+
+
+def run(verbose=True, n_queries: int = 150):
+    coll_train, coll_val, _ = load_artifacts(verbose=False)
+    rows = []
+    routers = {}
+    for n, feats in FEATURE_SETS.items():
+        models, scaler = T.train_models(coll_train, feats, seed=0, epochs=120)
+        routers[n] = MLRouter(feature_names=feats, methods=T.METHOD_ORDER,
+                              models=models, scaler=scaler,
+                              table=coll_train.table)
+    for ds_name in ("dbpedia560k", "yahoo800k"):
+        ds = get_dataset(ds_name)
+        lat = {}
+        for n, router in routers.items():
+            total = 0.0
+            for pred in (Predicate.AND, Predicate.OR):
+                qs = make_queries(ds, pred, n_queries, seed=11,
+                                  with_ground_truth=False)
+                # warm the jits for whatever this router dispatches to
+                router.route_and_search(ds, qs.vectors[:8], qs.bitmaps[:8],
+                                        pred, 10, 0.9, CANDIDATE_METHODS)
+                t0 = time.perf_counter()
+                router.route_and_search(ds, qs.vectors, qs.bitmaps, pred,
+                                        10, 0.9, CANDIDATE_METHODS)
+                total += time.perf_counter() - t0
+            lat[n] = total / (2 * n_queries) * 1e6
+        rows.append({"dataset": ds_name,
+                     "n2_latency_us": round(lat[2], 1),
+                     "n3_latency_us": round(lat[3], 1),
+                     "speedup": round(lat[2] / lat[3], 2)})
+        if verbose:
+            r = rows[-1]
+            print(f"  {ds_name:14s} n=2 {r['n2_latency_us']:9.1f}us  "
+                  f"n=3 {r['n3_latency_us']:9.1f}us  ({r['speedup']}x)",
+                  flush=True)
+    path = emit(rows, "table5_featureset_latency")
+    return rows, path

@@ -1,0 +1,78 @@
+"""Paper Figs 2 & 5: recall-QPS Pareto per (validation dataset × predicate) —
+every baseline (method, ps) point from table B, the RuleRouter's pick, the
+Oracle bound, and the ML Router curve traced by sweeping T with REAL
+execution (search wall-clock + routing overhead included, as in §6.3)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.ann.dataset import recall_at_k
+from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.predicates import Predicate
+from repro.core import features as F
+from repro.core.oracle import oracle_recall, oracle_choice
+from repro.core.rule_router import RuleRouter
+from repro.core.training import METHOD_ORDER
+from repro.data.ann_synth import get_dataset, make_queries
+
+from benchmarks.common import emit, load_artifacts
+
+T_SWEEP = (0.5, 0.8, 0.9, 0.95, 0.99)
+
+
+def run(verbose=True, n_queries: int = 200):
+    coll_train, coll_val, router = load_artifacts(verbose=False)
+    rows = []
+    rule = RuleRouter()
+    for (ds_name, pt), cell in sorted(coll_val.cells.items()):
+        ds = get_dataset(ds_name)
+        pred = Predicate(pt)
+        # --- baselines: every (method, ps) point from B ---
+        for m, ps_id, rec, qps in cell.sweep:
+            rows.append({"dataset": ds_name, "pred": pred.name,
+                         "series": m, "point": ps_id,
+                         "recall": round(rec, 4), "qps": round(qps, 1)})
+        # --- RuleRouter pick ---
+        dsf = F.dataset_features(ds)
+        pick = rule.route(pred, dsf.values["lid_mean"],
+                          dsf.values["label_cardinality"])
+        best_of_pick = max((s for s in cell.sweep if s[0] == pick),
+                           key=lambda s: (round(s[2], 3), s[3]))
+        rows.append({"dataset": ds_name, "pred": pred.name,
+                     "series": "RuleRouter", "point": pick,
+                     "recall": round(best_of_pick[2], 4),
+                     "qps": round(best_of_pick[3], 1)})
+        # --- Oracle (recall bound; QPS estimated from chosen methods) ---
+        orc = oracle_recall(coll_val, ds_name, pt)
+        choice = oracle_choice(coll_val, ds_name, pt)
+        o_time = 0.0
+        for ci in choice:
+            m = METHOD_ORDER[ci]
+            best = max((s for s in cell.sweep if s[0] == m),
+                       key=lambda s: (round(s[2], 3), s[3]))
+            o_time += 1.0 / max(best[3], 1e-9)
+        rows.append({"dataset": ds_name, "pred": pred.name,
+                     "series": "Oracle", "point": "",
+                     "recall": round(float(orc.mean()), 4),
+                     "qps": round(len(choice) / o_time, 1)})
+        # --- ML Router: REAL execution across the T sweep ---
+        qs = make_queries(ds, pred, n_queries, seed=1)   # same seed family
+        for t_thresh in T_SWEEP:
+            t0 = time.perf_counter()
+            ids, dec = router.route_and_search(
+                ds, qs.vectors, qs.bitmaps, pred, 10, t_thresh,
+                CANDIDATE_METHODS)
+            dt = time.perf_counter() - t0
+            rec = recall_at_k(ids, qs.ground_truth).mean()
+            rows.append({"dataset": ds_name, "pred": pred.name,
+                         "series": "MLRouter", "point": f"T={t_thresh}",
+                         "recall": round(float(rec), 4),
+                         "qps": round(qs.q / dt, 1)})
+            if verbose:
+                print(f"  {ds_name:14s} {pred.name:8s} T={t_thresh:4} "
+                      f"recall={rec:.3f} qps={qs.q/dt:8.1f}", flush=True)
+    path = emit(rows, "pareto")
+    return rows, path

@@ -1,0 +1,79 @@
+"""Paper §6.3 routing-latency breakdown: bitmap selectivity + feature
+scaling + 5 MLP forwards + table lookup, per predicate type; median / p95 /
+max across all validation queries, and the routing-to-query latency ratio."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.ann.predicates import Predicate
+from repro.core import features as F
+from repro.core import mlp as mlp_mod
+from repro.core import training as T
+from repro.data.ann_synth import get_dataset, make_queries
+
+from benchmarks.common import emit, load_artifacts
+
+
+def run(verbose=True, n_queries: int = 100):
+    _, coll_val, router = load_artifacts(verbose=False)
+    params = [router.models[m] for m in router.methods]
+    per_query, comp = [], {"selectivity": [], "forwards": [], "lookup": []}
+    for ds_name in sorted({k[0] for k in coll_val.cells}):
+        ds = get_dataset(ds_name)
+        dsf = F.dataset_features(ds)
+        for pred in Predicate:
+            qs = make_queries(ds, pred, n_queries, seed=23,
+                              with_ground_truth=False)
+            pt = int(pred)
+            ps_cache = {m: router.table.best_qps_setting(ds_name, pt, m, 0.9)
+                        for m in router.methods}
+            for qi in range(qs.q):
+                t0 = time.perf_counter()
+                sel = ds.selectivity(qs.bitmaps[qi], pred)      # bitmap step
+                t1 = time.perf_counter()
+                x = np.array([[sel, dsf.values["lid_mean"],
+                               pred == 0, pred == 1, pred == 2]],
+                             dtype=np.float32)
+                xs = router.scaler.transform(x)
+                r_hat = [float(mlp_mod.forward_np(p, xs)[0, 0])
+                         for p in params]
+                t2 = time.perf_counter()
+                passing = [m for m, r in zip(router.methods, r_hat)
+                           if r >= 0.9 and ps_cache[m] is not None]
+                if passing:
+                    max(passing, key=lambda m: ps_cache[m][1]["qps"])
+                else:
+                    router.methods[int(np.argmax(r_hat))]
+                t3 = time.perf_counter()
+                comp["selectivity"].append((t1 - t0) * 1e6)
+                comp["forwards"].append((t2 - t1) * 1e6)
+                comp["lookup"].append((t3 - t2) * 1e6)
+                per_query.append((t3 - t0) * 1e6)
+    per_query = np.array(per_query)
+    # search latency reference: median per-query search time from table B
+    search_lat = []
+    for (ds, pt), cell in coll_val.cells.items():
+        for m, ps_id, rec, qps in cell.sweep:
+            search_lat.append(1e6 / max(qps, 1e-9))
+    rows = [{
+        "median_us": round(float(np.median(per_query)), 1),
+        "p95_us": round(float(np.percentile(per_query, 95)), 1),
+        "max_us": round(float(per_query.max()), 1),
+        "selectivity_med_us": round(float(np.median(comp["selectivity"])), 1),
+        "mlp_forwards_med_us": round(float(np.median(comp["forwards"])), 1),
+        "lookup_med_us": round(float(np.median(comp["lookup"])), 1),
+        "median_search_us": round(float(np.median(search_lat)), 1),
+        "routing_ratio_pct": round(100 * float(np.median(per_query)) /
+                                   float(np.median(search_lat)), 2)}]
+    if verbose:
+        r = rows[0]
+        print(f"  routing: median={r['median_us']}us p95={r['p95_us']}us "
+              f"max={r['max_us']}us  (sel {r['selectivity_med_us']} + "
+              f"mlp {r['mlp_forwards_med_us']} + lookup "
+              f"{r['lookup_med_us']})  ratio={r['routing_ratio_pct']}%",
+              flush=True)
+    path = emit(rows, "routing_latency")
+    return rows, path

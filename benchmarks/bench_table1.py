@@ -1,0 +1,36 @@
+"""Paper Table 1: best-performing method per (training dataset × predicate
+type), alongside LID_mean and card(V) — the observations RuleRouter encodes."""
+
+from __future__ import annotations
+
+from repro.ann.predicates import Predicate
+from repro.ann.methods import PAPER_NAMES
+from repro.core import features as F
+from repro.data.ann_synth import get_dataset
+
+from benchmarks.common import emit, load_artifacts
+
+
+def run(verbose=True):
+    coll_train, _, _ = load_artifacts(verbose=False)
+    rows = []
+    for ds_name in sorted({k[0] for k in coll_train.cells}):
+        ds = get_dataset(ds_name)
+        dsf = F.dataset_features(ds)
+        row = {"dataset": ds_name,
+               "lid_mean": round(dsf.values["lid_mean"], 1),
+               "card": int(dsf.values["label_cardinality"])}
+        for pred in Predicate:
+            cell = coll_train.cells[(ds_name, int(pred))]
+            # winner = max mean recall, tie-break QPS (from the sweep)
+            best = max(cell.sweep,
+                       key=lambda s: (round(s[2], 3), s[3]))
+            row[pred.name] = PAPER_NAMES.get(best[0], best[0])
+        rows.append(row)
+    path = emit(rows, "table1_best_method")
+    if verbose:
+        for r in rows:
+            print(f"  {r['dataset']:14s} LID={r['lid_mean']:6.1f} "
+                  f"card={r['card']:6d} EQ={r['EQUALITY']:14s} "
+                  f"AND={r['AND']:14s} OR={r['OR']}")
+    return rows, path

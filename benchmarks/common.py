@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: artifact loading, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.common import artifacts_dir, enable_compilation_cache
+
+
+def load_artifacts(verbose=True):
+    """(coll_train, coll_val, router) — built on first use, cached after."""
+    enable_compilation_cache()
+    from repro.core import training as T
+
+    return T.build_all(verbose=verbose)
+
+
+def out_path(name: str) -> str:
+    return os.path.join(artifacts_dir("bench"), name)
+
+
+def emit(rows: list[dict], name: str, *, echo_cols=None) -> str:
+    """Write rows to artifacts/bench/<name>.csv and echo a preview."""
+    if not rows:
+        return ""
+    cols = list(rows[0].keys())
+    path = out_path(name + ".csv")
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    return path
+
+
+def timeit_us(fn, *args, repeat: int = 5, number: int = 1) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn(*args)
+        times.append((time.perf_counter() - t0) / number)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,66 @@
+"""Benchmark orchestrator — one harness per paper table/figure plus the
+roofline report. Prints ``name,us_per_call,derived`` CSV summary lines and
+writes per-harness CSVs under artifacts/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,pareto,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,pareto,fig4,table5,table6,"
+                         "table7,latency,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_table1, bench_pareto,
+                            bench_feature_ablation, bench_featureset_latency,
+                            bench_cls_vs_reg, bench_depth,
+                            bench_routing_latency, bench_kernels,
+                            bench_roofline)
+
+    harnesses = {
+        "table1": ("paper Table 1: best method grid", bench_table1.run),
+        "pareto": ("paper Figs 2+5: recall-QPS Pareto", bench_pareto.run),
+        "fig4": ("paper Fig 4: feature-count ablation",
+                 bench_feature_ablation.run),
+        "table5": ("paper Table 5: n=2 vs n=3 latency",
+                   bench_featureset_latency.run),
+        "table6": ("paper Table 6: classification vs regression",
+                   bench_cls_vs_reg.run),
+        "table7": ("paper Table 7: MLP depth", bench_depth.run),
+        "latency": ("paper §6.3: routing latency breakdown",
+                    bench_routing_latency.run),
+        "kernels": ("fused mask+distance+topk vs two-pass",
+                    bench_kernels.run),
+        "roofline": ("roofline terms from the dry-run artifacts",
+                     bench_roofline.run),
+    }
+    sel = args.only.split(",") if args.only else list(harnesses)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in sel:
+        desc, fn = harnesses[key]
+        print(f"# == {key}: {desc} ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            rows, path = fn(verbose=True)
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{key},{dt:.0f},rows={len(rows)};csv={path}", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{key},-1,ERROR={type(e).__name__}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Filtered-ANN engine: label bitmaps, predicates, datasets, and the six
+TPU-native filtered-ANN methods the router selects among."""
+
+from repro.ann.predicates import Predicate
+from repro.ann.dataset import ANNDataset
+
+__all__ = ["Predicate", "ANNDataset"]

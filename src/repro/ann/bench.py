@@ -1,0 +1,53 @@
+"""Measurement harness: run (dataset × predicate × method × param-setting),
+recording per-query recall@k and wall-clock QPS — the raw material for the
+offline benchmark table B and the router training set."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.ann import engine
+from repro.ann.dataset import ANNDataset, QuerySet, recall_at_k
+from repro.ann.predicates import Predicate
+
+
+@dataclasses.dataclass
+class RunResult:
+    dataset: str
+    pred: int
+    method: str
+    ps_id: str
+    recall_per_query: np.ndarray   # [Q]
+    mean_recall: float
+    qps: float
+    latency_s: float
+    ids: np.ndarray                # [Q, k]
+
+
+def run_method(ds: ANNDataset, method: engine.Method, setting,
+               qs: QuerySet, *, warmup: bool = True) -> RunResult:
+    index = engine.get_index(method, ds, setting.build)
+    sp = setting.search_dict
+    if warmup:  # exclude jit compile from the QPS measurement
+        method.search(ds, index, qs.vectors[:8], qs.bitmaps[:8], qs.pred,
+                      qs.k, sp)
+    t0 = time.perf_counter()
+    ids = method.search(ds, index, qs.vectors, qs.bitmaps, qs.pred, qs.k, sp)
+    dt = time.perf_counter() - t0
+    rec = recall_at_k(ids, qs.ground_truth)
+    return RunResult(
+        dataset=ds.name, pred=int(qs.pred), method=method.name,
+        ps_id=setting.ps_id, recall_per_query=rec,
+        mean_recall=float(rec.mean()), qps=qs.q / max(dt, 1e-9),
+        latency_s=dt, ids=ids)
+
+
+def sweep(ds: ANNDataset, methods: dict, qs: QuerySet) -> list[RunResult]:
+    out = []
+    for m in methods.values():
+        for setting in m.param_settings():
+            out.append(run_method(ds, m, setting, qs))
+    return out

@@ -1,0 +1,217 @@
+"""Shared execution machinery for filtered-ANN methods.
+
+* `DeviceData` — per-dataset device-resident tensors (vectors, norms,
+  bitmaps, group tables), cached per dataset.
+* word-looped predicate masks that avoid materialising `[Q, N, W]`
+  temporaries (predicate type is a *traced* scalar so one compiled
+  executable serves all three predicates).
+* query chunking: every method's jitted inner function runs on fixed-size
+  query chunks (static shapes), with host-side padding of the tail chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann.dataset import ANNDataset
+from repro.ann.predicates import Predicate
+
+DEFAULT_QCHUNK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceData:
+    vectors: jax.Array        # [N, d] f32
+    norms: jax.Array          # [N] f32
+    bitmaps: jax.Array        # [N, W] uint32
+    group_bitmaps: jax.Array  # [G, W] uint32
+    group_start: jax.Array    # [G] i32
+    group_size: jax.Array     # [G] i32
+    group_centroids: jax.Array  # [G, d] f32
+    group_cnorms: jax.Array     # [G] f32
+
+
+_DEVICE_CACHE: dict[int, DeviceData] = {}
+_ARRAY_CACHE: dict[int, object] = {}
+
+
+def as_device(x):
+    """id-cached np→device conversion (keeps QPS timing free of re-uploads)."""
+    import jax.numpy as _jnp
+
+    key = id(x)
+    if key not in _ARRAY_CACHE:
+        _ARRAY_CACHE[key] = _jnp.asarray(x)
+    return _ARRAY_CACHE[key]
+
+
+def device_data(ds: ANNDataset) -> DeviceData:
+    key = id(ds)
+    if key not in _DEVICE_CACHE:
+        g = ds.n_groups
+        cent = np.zeros((g, ds.dim), dtype=np.float32)
+        for j in range(g):
+            s, l = int(ds.group_start[j]), int(ds.group_size[j])
+            cent[j] = ds.vectors[s:s + l].mean(0)
+        _DEVICE_CACHE[key] = DeviceData(
+            vectors=jnp.asarray(ds.vectors),
+            norms=jnp.asarray(ds.norms_sq),
+            bitmaps=jnp.asarray(ds.bitmaps),
+            group_bitmaps=jnp.asarray(ds.group_bitmaps),
+            group_start=jnp.asarray(ds.group_start),
+            group_size=jnp.asarray(ds.group_size),
+            group_centroids=jnp.asarray(cent),
+            group_cnorms=jnp.asarray((cent ** 2).sum(1).astype(np.float32)),
+        )
+    return _DEVICE_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# predicate masks with traced predicate index (one executable, 3 predicates)
+# ---------------------------------------------------------------------------
+
+def mask_shared(base_bm: jax.Array, q_bm: jax.Array, pred_idx) -> jax.Array:
+    """base [N, W] × query [Q, W] -> bool [Q, N], word-looped (no 3-D temp)."""
+    n, w = base_bm.shape
+    q = q_bm.shape[0]
+
+    def eq_():
+        acc = jnp.ones((q, n), bool)
+        for i in range(w):
+            acc &= base_bm[None, :, i] == q_bm[:, i, None]
+        return acc
+
+    def and_():
+        acc = jnp.ones((q, n), bool)
+        for i in range(w):
+            qw = q_bm[:, i, None]
+            acc &= (base_bm[None, :, i] & qw) == qw
+        return acc
+
+    def or_():
+        acc = jnp.zeros((q, n), bool)
+        for i in range(w):
+            acc |= (base_bm[None, :, i] & q_bm[:, i, None]) != 0
+        return acc
+
+    return jax.lax.switch(pred_idx, [eq_, and_, or_])
+
+
+def mask_cand(cand_bm: jax.Array, q_bm: jax.Array, pred_idx) -> jax.Array:
+    """candidates [Q, C, W] × query [Q, W] -> bool [Q, C]."""
+    q, c, w = cand_bm.shape
+
+    def eq_():
+        acc = jnp.ones((q, c), bool)
+        for i in range(w):
+            acc &= cand_bm[:, :, i] == q_bm[:, i, None]
+        return acc
+
+    def and_():
+        acc = jnp.ones((q, c), bool)
+        for i in range(w):
+            qw = q_bm[:, i, None]
+            acc &= (cand_bm[:, :, i] & qw) == qw
+        return acc
+
+    def or_():
+        acc = jnp.zeros((q, c), bool)
+        for i in range(w):
+            acc |= (cand_bm[:, :, i] & q_bm[:, i, None]) != 0
+        return acc
+
+    return jax.lax.switch(pred_idx, [eq_, and_, or_])
+
+
+# ---------------------------------------------------------------------------
+# query chunking
+# ---------------------------------------------------------------------------
+
+def run_chunked(fn, n_queries: int, *arrays, chunk: int = DEFAULT_QCHUNK,
+                extra_host=None):
+    """Run `fn(chunked_arrays..., extra_host_chunk...)` over fixed-size query
+    chunks; pads the tail chunk; returns np.concatenate of outputs.
+
+    arrays: per-query arrays, leading axis Q. extra_host: same, but kept as
+    numpy (for host-side lookups already resolved to per-query values).
+    """
+    outs = []
+    for s in range(0, n_queries, chunk):
+        e = min(s + chunk, n_queries)
+        pad = chunk - (e - s)
+        parts = []
+        for a in arrays:
+            part = a[s:e]
+            if pad:
+                part = np.concatenate([part, np.repeat(part[-1:], pad, axis=0)], axis=0)
+            parts.append(part)
+        hparts = []
+        if extra_host is not None:
+            for a in extra_host:
+                part = a[s:e]
+                if pad:
+                    part = np.concatenate([part, np.repeat(part[-1:], pad, axis=0)], axis=0)
+                hparts.append(part)
+        res = fn(*parts, *hparts)
+        res = np.asarray(res)
+        outs.append(res[: e - s])
+    return np.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# method registry base
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSetting:
+    ps_id: str
+    build: tuple       # sorted (key, value) pairs — hashable
+    search: tuple
+
+    @property
+    def build_dict(self):
+        return dict(self.build)
+
+    @property
+    def search_dict(self):
+        return dict(self.search)
+
+
+def ps(ps_id: str, build: dict | None = None, search: dict | None = None) -> ParamSetting:
+    return ParamSetting(ps_id,
+                        tuple(sorted((build or {}).items())),
+                        tuple(sorted((search or {}).items())))
+
+
+class Method:
+    """Interface all filtered-ANN methods implement."""
+
+    name: str = "?"
+
+    def param_settings(self) -> list[ParamSetting]:
+        raise NotImplementedError
+
+    def build(self, ds: ANNDataset, build_params: dict):
+        """Offline index build; returns opaque index object."""
+        return None
+
+    def search(self, ds: ANNDataset, index, qvecs: np.ndarray,
+               qbms: np.ndarray, pred: Predicate, k: int,
+               search_params: dict) -> np.ndarray:
+        """Batched filtered search; returns [Q, k] int32 ids (−1 pad)."""
+        raise NotImplementedError
+
+
+_INDEX_CACHE: dict = {}
+
+
+def get_index(method: Method, ds: ANNDataset, build_params: tuple):
+    key = (method.name, ds.name, ds.n, build_params)
+    if key not in _INDEX_CACHE:
+        _INDEX_CACHE[key] = method.build(ds, dict(build_params))
+    return _INDEX_CACHE[key]

@@ -1,0 +1,71 @@
+"""IVF coarse quantizer: k-means build (numpy, offline) + padded list layout.
+
+Lists are stored as a dense padded `[nlist, max_list]` int32 matrix (−1
+padding) — the gather-friendly TPU layout (no pointer chasing; a probe is a
+contiguous row gather followed by an MXU distance block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: np.ndarray       # [nlist, d] float32
+    centroid_norms: np.ndarray  # [nlist] float32
+    lists: np.ndarray           # [nlist, max_list] int32, −1 pad
+    list_len: np.ndarray        # [nlist] int32
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 8, seed: int = 0,
+           sample: int = 20000) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    if n > sample:
+        x_fit = x[rng.choice(n, sample, replace=False)]
+    else:
+        x_fit = x
+    k = min(k, x_fit.shape[0])
+    cent = x_fit[rng.choice(x_fit.shape[0], k, replace=False)].copy()
+    for _ in range(iters):
+        d = (cent ** 2).sum(1)[None, :] - 2.0 * x_fit @ cent.T
+        assign = d.argmin(1)
+        for j in range(k):
+            m = assign == j
+            if m.any():
+                cent[j] = x_fit[m].mean(0)
+    return cent.astype(np.float32)
+
+
+def assign_to_centroids(x: np.ndarray, cent: np.ndarray, block: int = 8192) -> np.ndarray:
+    out = np.empty(x.shape[0], dtype=np.int64)
+    cn = (cent ** 2).sum(1)
+    for s in range(0, x.shape[0], block):
+        xb = x[s:s + block]
+        d = cn[None, :] - 2.0 * xb @ cent.T
+        out[s:s + block] = d.argmin(1)
+    return out
+
+
+def build_ivf(vectors: np.ndarray, nlist: int, *, seed: int = 0,
+              max_list_cap: int | None = None) -> IVFIndex:
+    cent = kmeans(vectors, nlist, seed=seed)
+    nlist = cent.shape[0]
+    assign = assign_to_centroids(vectors, cent)
+    lens = np.bincount(assign, minlength=nlist)
+    max_list = int(lens.max()) if lens.size else 1
+    if max_list_cap is not None:
+        max_list = min(max_list, max_list_cap)
+    lists = np.full((nlist, max_list), -1, dtype=np.int32)
+    fill = np.zeros(nlist, dtype=np.int64)
+    for i, a in enumerate(assign):
+        f = fill[a]
+        if f < max_list:
+            lists[a, f] = i
+            fill[a] = f + 1
+    return IVFIndex(centroids=cent,
+                    centroid_norms=(cent ** 2).sum(1).astype(np.float32),
+                    lists=lists, list_len=fill.astype(np.int32))

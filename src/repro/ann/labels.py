@@ -1,0 +1,64 @@
+"""Packed label bitmaps.
+
+The paper uses Roaring bitmaps on CPU for selectivity / predicate checks.
+The TPU-native equivalent is a dense packed-uint32 bitmap tensor: one row of
+``ceil(|U|/32)`` words per vector, evaluated word-parallel on the VPU with
+``bitwise_and/or`` + ``population_count``.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_words(universe: int) -> int:
+    """Number of uint32 words needed for a universe of `universe` labels."""
+    return max(1, (int(universe) + 31) // 32)
+
+
+def pack_one(labels: Iterable[int], universe: int) -> np.ndarray:
+    """Pack one label set into a `[W]` uint32 bitmap."""
+    words = np.zeros(n_words(universe), dtype=np.uint32)
+    for l in labels:
+        if not 0 <= l < universe:
+            raise ValueError(f"label {l} outside universe [0,{universe})")
+        words[l >> 5] |= np.uint32(1) << np.uint32(l & 31)
+    return words
+
+
+def pack_label_sets(label_sets: Sequence[Iterable[int]], universe: int) -> np.ndarray:
+    """Pack `N` label sets into a `[N, W]` uint32 bitmap matrix."""
+    out = np.zeros((len(label_sets), n_words(universe)), dtype=np.uint32)
+    for i, ls in enumerate(label_sets):
+        for l in ls:
+            out[i, l >> 5] |= np.uint32(1) << np.uint32(l & 31)
+    return out
+
+
+def unpack_one(bitmap: np.ndarray) -> frozenset[int]:
+    """Inverse of `pack_one` (host-side utility)."""
+    labels = []
+    for w, word in enumerate(np.asarray(bitmap, dtype=np.uint32)):
+        word = int(word)
+        b = 0
+        while word:
+            if word & 1:
+                labels.append((w << 5) + b)
+            word >>= 1
+            b += 1
+    return frozenset(labels)
+
+
+def bitmap_key(bitmap: np.ndarray) -> bytes:
+    """Hashable host-side key for a bitmap (used by group / pattern lookup
+    tables, mirroring the paper's precomputed set-count hash table)."""
+    return np.ascontiguousarray(bitmap, dtype=np.uint32).tobytes()
+
+
+def popcount(bitmaps: jax.Array) -> jax.Array:
+    """Total set-bit count along the last (word) axis."""
+    return jnp.sum(jax.lax.population_count(bitmaps), axis=-1).astype(jnp.int32)

@@ -1,0 +1,30 @@
+"""The six filtered-ANN methods (TPU-native adaptations — DESIGN.md §2)."""
+
+from repro.ann.methods.prefilter import PreFilter
+from repro.ann.methods.postfilter import PostFilter
+from repro.ann.methods.labelnav import LabelNav
+from repro.ann.methods.sieve import Sieve
+from repro.ann.methods.ivf_gamma import IVFGamma
+from repro.ann.methods.fvamana import FVamana
+
+# Candidate pool the router selects among — mirrors the paper's five
+# (UNG, Post-filter, SIEVE, ACORN-γ, FilteredVamana).
+CANDIDATE_METHODS = {
+    "labelnav": LabelNav(),       # UNG analogue
+    "postfilter": PostFilter(),   # Post-filter analogue
+    "sieve": Sieve(),             # SIEVE analogue
+    "ivf_gamma": IVFGamma(),      # ACORN-γ analogue
+    "fvamana": FVamana(),         # FilteredVamana analogue
+}
+
+ALL_METHODS = {"prefilter": PreFilter(), **CANDIDATE_METHODS}
+
+# paper-name aliases for reporting
+PAPER_NAMES = {
+    "prefilter": "Pre-filter",
+    "postfilter": "Post-filter",
+    "labelnav": "UNG",
+    "sieve": "SIEVE",
+    "ivf_gamma": "ACORN-g",
+    "fvamana": "FilteredVamana",
+}

@@ -1,0 +1,67 @@
+"""FVamana — the FilteredVamana analogue (hybrid graph search).
+
+Offline: α-pruned Vamana-style graph + per-label entry points (the
+label-aware part of FilteredVamana's build). Online: fixed-iteration
+batched best-first search seeded at the medoid plus the query labels'
+entry points; traversal routes through predicate-failing nodes (they keep
+the graph navigable) but only predicate-passing pool entries are eligible
+for the final top-k — label-aware pruning at result granularity.
+`L_search` is the paper's quality knob.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.ann import engine, graph, topk
+from repro.ann.dataset import ANNDataset
+from repro.ann.labels import unpack_one
+from repro.ann.predicates import Predicate
+
+
+class FVamana(engine.Method):
+    name = "fvamana"
+
+    MAX_SEEDS = 5
+
+    def param_settings(self):
+        # FilteredVamana Table 3: R ∈ {32,64}, L_search ∈ {16..128}
+        return [
+            engine.ps("L16", {"r": 32}, {"l_search": 16}),
+            engine.ps("L32", {"r": 32}, {"l_search": 32}),
+            engine.ps("L64", {"r": 32}, {"l_search": 64}),
+            engine.ps("L128", {"r": 32}, {"l_search": 128}),
+        ]
+
+    def build(self, ds: ANNDataset, build_params: dict) -> graph.VamanaGraph:
+        return graph.build_graph(ds.vectors, ds.bitmaps, ds.universe,
+                                 r=int(build_params.get("r", 32)), seed=17)
+
+    def search(self, ds, index: graph.VamanaGraph, qvecs, qbms,
+               pred: Predicate, k: int, search_params: dict) -> np.ndarray:
+        dev = engine.device_data(ds)
+        pred_idx = jnp.int32(int(Predicate(pred)))
+        l_search = int(search_params["l_search"])
+        nq = qvecs.shape[0]
+
+        # host-side seed assembly: medoid + query-label entry points
+        seeds = np.full((nq, self.MAX_SEEDS), -1, dtype=np.int32)
+        seeds[:, 0] = index.medoid
+        for qi in range(nq):
+            labs = sorted(unpack_one(qbms[qi]))[: self.MAX_SEEDS - 1]
+            for j, l in enumerate(labs):
+                seeds[qi, 1 + j] = index.label_entry[l]
+
+        nbrs = engine.as_device(index.neighbors)
+
+        def fn(qv, qb, sd):
+            pool_ids, pool_d = graph.beam_search(
+                qv, sd, nbrs, dev.vectors, dev.norms,
+                l_search=l_search, iters=l_search)
+            cbm = dev.bitmaps[jnp.maximum(pool_ids, 0)]
+            ok = engine.mask_cand(cbm, qb, pred_idx) & (pool_ids >= 0)
+            ids, _ = topk.topk_ids(pool_d, pool_ids, k, valid=ok)
+            return ids
+
+        return engine.run_chunked(fn, nq, qvecs, qbms, seeds)

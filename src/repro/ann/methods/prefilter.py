@@ -1,0 +1,45 @@
+"""Pre-filter: exact masked brute-force scan (recall = 1 by construction).
+
+The compute hot-spot of the whole engine — on TPU this is the Pallas
+`masked_topk` kernel (repro/kernels); the jnp path below is the
+numerically identical reference used on CPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann import engine, topk
+from repro.ann.dataset import ANNDataset
+from repro.ann.predicates import Predicate
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _search(qvecs, qbms, pred_idx, vectors, norms, bitmaps, *, k: int):
+    scores = topk.score_all(qvecs, vectors, norms)            # [Q, N]
+    mask = engine.mask_shared(bitmaps, qbms, pred_idx)        # [Q, N]
+    scores = jnp.where(mask, scores, topk.INF)
+    neg, idx = jax.lax.top_k(-scores, k)
+    return jnp.where(jnp.isinf(neg), -1, idx).astype(jnp.int32)
+
+
+class PreFilter(engine.Method):
+    name = "prefilter"
+
+    def param_settings(self):
+        return [engine.ps("exact")]
+
+    def build(self, ds: ANNDataset, build_params: dict):
+        return None
+
+    def search(self, ds, index, qvecs, qbms, pred: Predicate, k: int,
+               search_params: dict) -> np.ndarray:
+        dev = engine.device_data(ds)
+        pred_idx = jnp.int32(int(Predicate(pred)))
+        fn = lambda qv, qb: _search(qv, qb, pred_idx, dev.vectors,
+                                    dev.norms, dev.bitmaps, k=k)
+        return engine.run_chunked(fn, qvecs.shape[0], qvecs, qbms)

@@ -1,0 +1,63 @@
+"""Predicate evaluation over packed label bitmaps.
+
+Three predicate types (paper §2.1):
+  * Equality   : L_i == L_q
+  * AND        : L_q ⊆ L_i   (containment)
+  * OR         : L_q ∩ L_i ≠ ∅ (overlap)
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+
+class Predicate(enum.IntEnum):
+    EQUALITY = 0
+    AND = 1
+    OR = 2
+
+    @classmethod
+    def parse(cls, s: "str | Predicate") -> "Predicate":
+        if isinstance(s, Predicate):
+            return s
+        return {
+            "equality": cls.EQUALITY, "eq": cls.EQUALITY,
+            "and": cls.AND, "containment": cls.AND,
+            "or": cls.OR, "overlap": cls.OR,
+        }[str(s).lower()]
+
+
+PREDICATES = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+
+
+def eval_predicate(base_bm, query_bm, pred: Predicate):
+    """Evaluate `pred` between every base bitmap and the query bitmap(s).
+
+    base_bm : uint32 [..., W]
+    query_bm: uint32 broadcastable to base_bm (e.g. [W] or [Q, 1, W])
+    returns : bool   [...] (word axis reduced)
+    """
+    pred = Predicate(pred)
+    if pred == Predicate.EQUALITY:
+        return jnp.all(base_bm == query_bm, axis=-1)
+    if pred == Predicate.AND:
+        return jnp.all((base_bm & query_bm) == query_bm, axis=-1)
+    if pred == Predicate.OR:
+        return jnp.any((base_bm & query_bm) != 0, axis=-1)
+    raise ValueError(pred)
+
+
+def eval_predicate_np(base_bm, query_bm, pred: Predicate):
+    """Host (numpy) twin of `eval_predicate` for offline index builds."""
+    import numpy as np
+
+    pred = Predicate(pred)
+    if pred == Predicate.EQUALITY:
+        return np.all(base_bm == query_bm, axis=-1)
+    if pred == Predicate.AND:
+        return np.all((base_bm & query_bm) == query_bm, axis=-1)
+    if pred == Predicate.OR:
+        return np.any((base_bm & query_bm) != 0, axis=-1)
+    raise ValueError(pred)

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, save_pytree,
+                                         restore_pytree)
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]

@@ -1,0 +1,136 @@
+"""Checkpointing: sharding-agnostic save/restore + rotation + async save.
+
+Arrays are written as one `.npz` with path-flattened keys plus a JSON
+manifest (tree structure, dtypes, step metadata). Writes are atomic
+(tmp + rename), so a preemption mid-save never corrupts the latest
+checkpoint. Restore returns host arrays that the caller `device_put`s
+with *its* shardings — which is exactly what elastic resharding needs
+(restore on a different mesh than the one that saved).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    dtypes = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.name == "bfloat16":    # npz can't round-trip ml_dtypes
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out, dtypes
+
+
+def save_pytree(path: str, tree, *, metadata: dict | None = None) -> None:
+    """Atomic save of an arbitrary pytree of arrays."""
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, dtypes = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "keys": sorted(flat),
+                   "dtypes": dtypes, "metadata": metadata or {}}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    import ml_dtypes
+
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                       for x in p)
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(getattr(leaf, "shape", ()))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"checkpoint mismatch at {key}: "
+                             f"{arr.shape} vs {want}")
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_metadata(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
+class CheckpointManager:
+    """Step-indexed checkpoint directory with rotation and async save."""
+
+    def __init__(self, directory: str, *, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree, *, metadata: dict | None = None,
+             background: bool = False) -> None:
+        meta = {"step": step, **(metadata or {})}
+        if background:
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, meta)
+
+    def _save_sync(self, step, tree, meta):
+        save_pytree(self._step_dir(step), tree, metadata=meta)
+        self._rotate()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def restore(self, like, step: int | None = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        tree = restore_pytree(self._step_dir(step), like)
+        meta = restore_metadata(self._step_dir(step))
+        return tree, meta
+
+    def _rotate(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,39 @@
+"""Shared utilities: artifact paths, persistent compilation cache, timers."""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def artifacts_dir(*sub: str) -> str:
+    d = os.path.join(os.environ.get("REPRO_ARTIFACTS", os.path.join(_REPO_ROOT, "artifacts")), *sub)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+_CACHE_ENABLED = False
+
+
+def enable_compilation_cache() -> None:
+    """Persistent XLA compilation cache — big win for repeated CLI runs."""
+    global _CACHE_ENABLED
+    if _CACHE_ENABLED:
+        return
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", artifacts_dir("jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    _CACHE_ENABLED = True
+
+
+@contextlib.contextmanager
+def timer():
+    """`with timer() as t: ...; t()` -> elapsed seconds."""
+    t0 = time.perf_counter()
+    elapsed = [0.0]
+    yield lambda: elapsed[0]
+    elapsed[0] = time.perf_counter() - t0

@@ -1,0 +1,5 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, get_config, registry
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "get_config", "registry"]

@@ -1,0 +1,17 @@
+"""internlm2-20b [arXiv:2403.17297]: dense decoder with GQA.
+
+48L, d_model 6144, 48H (GQA kv=8), d_ff 16384, vocab 92544."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=92544, microbatch_seqs=1,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="internlm2-20b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    remat=False,
+)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: query-aware routing for filtered ANN.
+
+Modules: features (22-feature extraction), table (offline benchmark table
+B), rule_router (Alg. 1), mlp (MLP-Reg), forest (RandomForest), baselines
+(ablation model families), router (Alg. 2 ML Router), training (offline
+stage), oracle (upper bound)."""
+
+from repro.core.router import MLRouter
+from repro.core.rule_router import RuleRouter
+from repro.core.table import BenchmarkTable
+
+__all__ = ["MLRouter", "RuleRouter", "BenchmarkTable"]

@@ -1,0 +1,202 @@
+"""Feature extraction — all 22 candidate features from paper §4.2.
+
+Groups:
+  (1) 6 query-aware     — n_labels, selectivity, min/max/mean per-label
+                          frequency, label co-occurrence;
+  (2) 15 dataset-level  — size, dim, LID mean/median/std, relative-contrast
+                          median / 5–95% trimmed mean / p95, label
+                          cardinality, label entropy, #unique label
+                          combinations, avg labels per vector, distribution
+                          factor (mean sliced Wasserstein), correlation
+                          ratio, normalized correlation ratio;
+  (3) 1 predicate type  — categorical (one-hot in the model input, counted
+                          as a single feature as in the paper).
+
+The final minimal set (paper §6.2): ``selectivity, lid_mean, pred``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import numpy as np
+
+from repro.ann import labels as lb
+from repro.ann.dataset import ANNDataset
+from repro.ann.predicates import Predicate
+
+QUERY_FEATURES = [
+    "n_labels", "selectivity", "min_label_freq", "max_label_freq",
+    "mean_label_freq", "label_cooccurrence",
+]
+DATASET_FEATURES = [
+    "size", "dim", "lid_mean", "lid_median", "lid_std",
+    "rc_median", "rc_trimmed_mean", "rc_p95",
+    "label_cardinality", "label_entropy", "n_label_combinations",
+    "avg_labels_per_vector", "distribution_factor",
+    "correlation_ratio", "normalized_correlation_ratio",
+]
+NUMERIC_FEATURES = QUERY_FEATURES + DATASET_FEATURES   # 21 numeric
+ALL_FEATURES = NUMERIC_FEATURES + ["pred"]             # + categorical = 22
+
+MINIMAL_FEATURES = ["selectivity", "lid_mean", "pred"]  # paper's final set
+
+
+# ---------------------------------------------------------------------------
+# dataset-level features
+# ---------------------------------------------------------------------------
+
+def _knn_dists(vectors: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:
+    """[Q, k] ascending Euclidean distances (self-matches removed)."""
+    n2 = (vectors ** 2).sum(1)
+    d = n2[None, :] - 2.0 * queries @ vectors.T + (queries ** 2).sum(1)[:, None]
+    d = np.maximum(d, 0.0)
+    kk = min(k + 1, d.shape[1])
+    part = np.partition(d, kk - 1, axis=1)[:, :kk]
+    part = np.sort(part, axis=1)
+    # drop a zero self-distance column if present
+    out = np.where(part[:, :1] < 1e-9, part[:, 1:kk], part[:, :kk - 1]) \
+        if kk > 1 else part
+    return np.sqrt(out)
+
+
+def lid_mle(r: np.ndarray) -> np.ndarray:
+    """Maximum-likelihood LID per query from ascending kNN distances r [Q,k]
+    (paper Eq. 3)."""
+    rk = r[:, -1:]
+    ratio = np.clip(r / np.maximum(rk, 1e-12), 1e-12, 1.0)
+    m = np.mean(np.log(ratio), axis=1)
+    return -1.0 / np.minimum(m, -1e-9)
+
+
+def _sliced_w1(a: np.ndarray, b: np.ndarray, n_proj: int, rng) -> float:
+    """Mean sliced Wasserstein-1 distance between point sets a and b."""
+    d = a.shape[1]
+    dirs = rng.normal(size=(n_proj, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    qs = np.linspace(0.02, 0.98, 25)
+    tot = 0.0
+    for u in dirs:
+        pa = np.quantile(a @ u, qs)
+        pb = np.quantile(b @ u, qs)
+        tot += np.abs(pa - pb).mean()
+    return tot / n_proj
+
+
+@dataclasses.dataclass
+class DatasetFeatures:
+    values: dict[str, float]
+    label_freq: np.ndarray      # [U] fraction of vectors carrying each label
+
+
+_DS_FEATURE_CACHE: dict[int, DatasetFeatures] = {}
+
+
+def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
+                     seed: int = 0) -> DatasetFeatures:
+    if id(ds) in _DS_FEATURE_CACHE:
+        return _DS_FEATURE_CACHE[id(ds)]
+    rng = np.random.default_rng(seed)
+    n = ds.n
+    idx = rng.choice(n, size=min(sample, n), replace=False)
+    r = _knn_dists(ds.vectors, ds.vectors[idx], k)
+    lid = lid_mle(r)
+    rc = r[:, -1] / np.maximum(r[:, 0], 1e-12)
+
+    # label structure
+    label_freq = np.zeros(ds.universe, dtype=np.float64)
+    sizes = ds.group_size.astype(np.float64)
+    for g in range(ds.n_groups):
+        for l in lb.unpack_one(ds.group_bitmaps[g]):
+            label_freq[l] += sizes[g]
+    label_freq /= n
+    p = label_freq[label_freq > 0]
+    entropy = float(-(p * np.log(p)).sum())
+    avg_labels = float(label_freq.sum())
+
+    # distribution factor + correlation ratios over frequent labels
+    freq_labels = np.argsort(-label_freq)[:64]
+    freq_labels = [int(l) for l in freq_labels if label_freq[l] * n >= 20]
+    df_vals, cr_num, cr_norm_num, cr_den = [], 0.0, 0.0, 0.0
+    glob_idx = rng.choice(n, size=min(1024, n), replace=False)
+    lid_global = float(np.mean(lid))
+    for l in freq_labels[:32]:
+        word, bit = l >> 5, np.uint32(1) << np.uint32(l & 31)
+        mem = np.nonzero((ds.bitmaps[:, word] & bit) != 0)[0]
+        if mem.size < 20:
+            continue
+        sub = ds.vectors[mem[rng.permutation(mem.size)[:256]]]
+        df_vals.append(_sliced_w1(sub, ds.vectors[glob_idx], 6, rng))
+        r_sub = _knn_dists(sub, sub[: min(64, sub.shape[0])], min(10, sub.shape[0] - 2))
+        lid_sub = float(np.mean(lid_mle(r_sub)))
+        rnd = ds.vectors[rng.choice(n, size=sub.shape[0], replace=False)]
+        r_rnd = _knn_dists(rnd, rnd[: min(64, rnd.shape[0])], min(10, rnd.shape[0] - 2))
+        lid_rnd = float(np.mean(lid_mle(r_rnd)))
+        w = float(mem.size)
+        cr_num += w * lid_sub
+        cr_norm_num += w * (lid_sub / max(lid_rnd, 1e-9))
+        cr_den += w
+
+    tm_lo, tm_hi = np.quantile(rc, [0.05, 0.95])
+    trimmed = rc[(rc >= tm_lo) & (rc <= tm_hi)]
+    values = {
+        "size": float(n),
+        "dim": float(ds.dim),
+        "lid_mean": float(np.mean(lid)),
+        "lid_median": float(np.median(lid)),
+        "lid_std": float(np.std(lid)),
+        "rc_median": float(np.median(rc)),
+        "rc_trimmed_mean": float(trimmed.mean() if trimmed.size else rc.mean()),
+        "rc_p95": float(np.quantile(rc, 0.95)),
+        "label_cardinality": float(ds.universe),
+        "label_entropy": entropy,
+        "n_label_combinations": float(ds.n_groups),
+        "avg_labels_per_vector": avg_labels,
+        "distribution_factor": float(np.mean(df_vals)) if df_vals else 0.0,
+        "correlation_ratio": float(cr_num / cr_den / max(lid_global, 1e-9)) if cr_den else 1.0,
+        "normalized_correlation_ratio": float(cr_norm_num / cr_den) if cr_den else 1.0,
+    }
+    feats = DatasetFeatures(values=values, label_freq=label_freq)
+    _DS_FEATURE_CACHE[id(ds)] = feats
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# per-query features
+# ---------------------------------------------------------------------------
+
+def query_features(ds: ANNDataset, dsf: DatasetFeatures, qbm: np.ndarray,
+                   pred: Predicate) -> dict[str, float]:
+    labs = sorted(lb.unpack_one(qbm))
+    freqs = np.array([dsf.label_freq[l] for l in labs]) if labs else np.zeros(1)
+    sel = ds.selectivity(qbm, pred)
+    cooc = ds.selectivity(qbm, Predicate.AND)   # containment fraction
+    return {
+        "n_labels": float(len(labs)),
+        "selectivity": float(sel),
+        "min_label_freq": float(freqs.min()),
+        "max_label_freq": float(freqs.max()),
+        "mean_label_freq": float(freqs.mean()),
+        "label_cooccurrence": float(cooc),
+    }
+
+
+def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
+                   feature_names: list[str]) -> np.ndarray:
+    """[Q, F(+2 for one-hot pred)] raw feature matrix in `feature_names`
+    order; 'pred' expands to a 3-way one-hot."""
+    dsf = dataset_features(ds)
+    nq = qbms.shape[0]
+    cols = []
+    qf = [query_features(ds, dsf, qbms[i], pred) for i in range(nq)]
+    for name in feature_names:
+        if name == "pred":
+            oh = np.zeros((nq, 3))
+            oh[:, int(Predicate(pred))] = 1.0
+            cols.append(oh)
+        elif name in QUERY_FEATURES:
+            cols.append(np.array([q[name] for q in qf])[:, None])
+        else:
+            cols.append(np.full((nq, 1), dsf.values[name]))
+    return np.concatenate(cols, axis=1).astype(np.float32)

@@ -1,0 +1,118 @@
+"""MLP-Reg — the paper's router model (§4.3): per-candidate-method 2-hidden-
+layer (64, 32) ReLU MLP regressors trained with MSE + Adam, plus the MLP
+*classifier* variant used by the §6.2(b) ablation. Pure JAX."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamConfig, adam_init, adam_update
+
+
+@dataclasses.dataclass
+class Scaler:
+    mean: np.ndarray
+    std: np.ndarray
+
+    @staticmethod
+    def fit(x: np.ndarray) -> "Scaler":
+        return Scaler(mean=x.mean(0), std=x.std(0) + 1e-8)
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        return ((x - self.mean) / self.std).astype(np.float32)
+
+
+def init_mlp(sizes: tuple[int, ...], key) -> list:
+    params = []
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout)) * jnp.sqrt(2.0 / din)
+        params.append({"w": w, "b": jnp.zeros((dout,))})
+    return params
+
+
+def forward(params: list, x: jax.Array) -> jax.Array:
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    out = h @ params[-1]["w"] + params[-1]["b"]
+    return out
+
+
+def _mse_loss(params, x, y):
+    pred = forward(params, x)[:, 0]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _ce_loss(params, x, y):
+    logits = forward(params, x)
+    return -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), y[:, None], axis=1))
+
+
+@partial(jax.jit, static_argnames=("cfg", "classification"))
+def _train_epoch(params, opt, xb, yb, cfg, classification):
+    loss_fn = _ce_loss if classification else _mse_loss
+
+    def step(carry, batch):
+        params, opt = carry
+        x, y = batch
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt = adam_update(grads, opt, params, cfg)
+        return (params, opt), loss
+
+    (params, opt), losses = jax.lax.scan(step, (params, opt), (xb, yb))
+    return params, opt, losses.mean()
+
+
+def train_mlp(x: np.ndarray, y: np.ndarray, *, hidden=(64, 32),
+              n_out: int = 1, classification: bool = False,
+              epochs: int = 200, batch: int = 256, lr: float = 1e-3,
+              seed: int = 0):
+    """Returns trained params (list of layer dicts). y: [N] float (reg) or
+    [N] int class labels (cls)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    sizes = (x.shape[1],) + tuple(hidden) + (n_out,)
+    params = init_mlp(sizes, key)
+    cfg = AdamConfig(lr=lr)
+    opt = adam_init(params, cfg)
+    n = x.shape[0]
+    batch = min(batch, n)
+    steps = n // batch
+    x = x.astype(np.float32)
+    y = y.astype(np.int32 if classification else np.float32)
+    for _ in range(epochs):
+        perm = rng.permutation(n)[: steps * batch]
+        xb = jnp.asarray(x[perm].reshape(steps, batch, -1))
+        yb = jnp.asarray(y[perm].reshape(steps, batch, *y.shape[1:]))
+        params, opt, _ = _train_epoch(params, opt, xb, yb, cfg, classification)
+    return params
+
+
+@jax.jit
+def predict(params: list, x: jax.Array) -> jax.Array:
+    return forward(params, x)
+
+
+def forward_np(params: list, x: np.ndarray) -> np.ndarray:
+    """Pure-numpy inference twin of `forward` — per-query routing runs in
+    single-digit µs (no device dispatch), which is what makes the router's
+    latency overhead negligible (§6.3). `params` are numpy layer dicts."""
+    h = x
+    for layer in params[:-1]:
+        h = np.maximum(h @ layer["w"] + layer["b"], 0.0)
+    return h @ params[-1]["w"] + params[-1]["b"]
+
+
+def params_to_numpy(params: list) -> list:
+    return [{k: np.asarray(v) for k, v in l.items()} for l in params]
+
+
+def params_from_numpy(params: list) -> list:
+    return [{k: jnp.asarray(v) for k, v in l.items()} for l in params]

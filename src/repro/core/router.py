@@ -1,0 +1,123 @@
+"""ML Router — paper §4 / Algorithm 2.
+
+Per-query pipeline: extract features → five MLP-Reg forwards (one per
+candidate method) → threshold filter `r̂_m ≥ T` → pick the (method,
+parameter-setting) with max QPS from the offline benchmark table B →
+fallback to argmax-r̂ when no method passes.
+
+TPU-idiomatic addition (DESIGN.md §3): `route_and_search` routes a *batch*
+of queries with one fused forward per model, then groups queries by chosen
+(method, ps) and executes each group as a single batched search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+
+import numpy as np
+
+from repro.ann.dataset import ANNDataset
+from repro.ann.predicates import Predicate
+from repro.core import features as F
+from repro.core import mlp
+from repro.core.table import BenchmarkTable
+
+
+@dataclasses.dataclass
+class MLRouter:
+    feature_names: list            # e.g. F.MINIMAL_FEATURES
+    methods: list                  # candidate method names, fixed order
+    models: dict                   # method -> MLP params (numpy)
+    scaler: mlp.Scaler
+    table: BenchmarkTable
+
+    # ---- prediction -----------------------------------------------------
+    def predict_recalls(self, ds: ANNDataset, qbms: np.ndarray,
+                        pred: Predicate) -> np.ndarray:
+        """[Q, M] predicted recall@10 per candidate method (numpy fast
+        path: 5 shallow forwards cost single-digit µs per query)."""
+        x = F.feature_matrix(ds, qbms, pred, self.feature_names)
+        return self.predict_recalls_from_features(x)
+
+    def predict_recalls_from_features(self, x_raw: np.ndarray) -> np.ndarray:
+        xs = self.scaler.transform(x_raw)
+        out = np.zeros((x_raw.shape[0], len(self.methods)), dtype=np.float32)
+        for j, m in enumerate(self.methods):
+            out[:, j] = mlp.forward_np(self.models[m], xs)[:, 0]
+        return out
+
+    # ---- Algorithm 2 ------------------------------------------------------
+    def route_from_predictions(self, r_hat: np.ndarray, ds_name: str,
+                               pred: Predicate, t: float):
+        """Vectorised Algorithm 2. Returns list of (method, ps_id) per query."""
+        pt = int(Predicate(pred))
+        # per-(ds,pt,m) best-QPS setting meeting T — query independent
+        ps_of, qps_of = {}, {}
+        for m in self.methods:
+            hit = self.table.best_qps_setting(ds_name, pt, m, t)
+            if hit is not None:
+                ps_of[m], qps_of[m] = hit[0], hit[1]["qps"]
+        decisions = []
+        for qi in range(r_hat.shape[0]):
+            passing = [m for j, m in enumerate(self.methods)
+                       if r_hat[qi, j] >= t and m in ps_of]
+            if passing:
+                m_star = max(passing, key=lambda m: qps_of[m])
+                decisions.append((m_star, ps_of[m_star]))
+            else:  # fallback: argmax predicted recall, max-recall setting
+                m_star = self.methods[int(np.argmax(r_hat[qi]))]
+                hit = self.table.best_qps_setting(ds_name, pt, m_star, t) \
+                    or self.table.max_recall_setting(ds_name, pt, m_star)
+                decisions.append((m_star, hit[0] if hit else None))
+        return decisions
+
+    def route(self, ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
+              t: float):
+        r_hat = self.predict_recalls(ds, qbms, pred)
+        return self.route_from_predictions(r_hat, ds.name, pred, t)
+
+    # ---- batched dispatch --------------------------------------------------
+    def route_and_search(self, ds: ANNDataset, qvecs: np.ndarray,
+                         qbms: np.ndarray, pred: Predicate, k: int,
+                         t: float, methods_impl: dict):
+        """Route, then execute each (method, ps) group as one batched search.
+        Returns (ids [Q, k], decisions)."""
+        from repro.ann import engine
+
+        decisions = self.route(ds, qbms, pred, t)
+        out = np.full((qvecs.shape[0], k), -1, dtype=np.int32)
+        groups: dict = {}
+        for qi, d in enumerate(decisions):
+            groups.setdefault(d, []).append(qi)
+        for (m_name, ps_id), idxs in groups.items():
+            method = methods_impl[m_name]
+            by_id = {s.ps_id: s for s in method.param_settings()}
+            # B may not cover a brand-new deployment dataset yet: fall back
+            # to the method's max-budget setting until it is benchmarked.
+            setting = by_id.get(ps_id, method.param_settings()[-1])
+            index = engine.get_index(method, ds, setting.build)
+            idxs = np.asarray(idxs)
+            out[idxs] = method.search(ds, index, qvecs[idxs], qbms[idxs],
+                                      pred, k, setting.search_dict)
+        return out, decisions
+
+    # ---- persistence ----
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump({
+                "feature_names": self.feature_names,
+                "methods": self.methods,
+                "models": self.models,
+                "scaler": (self.scaler.mean, self.scaler.std),
+                "table": self.table.entries,
+            }, f)
+
+    @staticmethod
+    def load(path: str) -> "MLRouter":
+        with open(path, "rb") as f:
+            d = pickle.load(f)
+        return MLRouter(
+            feature_names=d["feature_names"], methods=d["methods"],
+            models=d["models"], scaler=mlp.Scaler(*d["scaler"]),
+            table=BenchmarkTable(entries=d["table"]))

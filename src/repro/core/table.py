@@ -1,0 +1,65 @@
+"""The offline benchmark table B (paper Eq. 6):
+
+    B[ds, pt, m, ps] = (recall, QPS)
+
+built by benchmarking every (method, parameter setting) on every
+(dataset, predicate type) combination, exactly as the paper's offline
+stage does. Persisted as JSON under artifacts/."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass
+class BenchmarkTable:
+    entries: dict  # (ds, pt:int, method, ps_id) -> {"recall": float, "qps": float}
+
+    @staticmethod
+    def new() -> "BenchmarkTable":
+        return BenchmarkTable(entries={})
+
+    def add(self, ds: str, pt: int, method: str, ps_id: str,
+            recall: float, qps: float) -> None:
+        self.entries[(ds, int(pt), method, ps_id)] = {
+            "recall": float(recall), "qps": float(qps)}
+
+    def settings(self, ds: str, pt: int, method: str):
+        out = []
+        for (d, p, m, ps_id), v in self.entries.items():
+            if (d, p, m) == (ds, int(pt), method):
+                out.append((ps_id, v))
+        return out
+
+    def best_qps_setting(self, ds: str, pt: int, method: str, t: float):
+        """argmax_ps QPS s.t. recall >= T  (Alg. 2 line 8); None if no
+        setting meets T."""
+        cands = [(ps_id, v) for ps_id, v in self.settings(ds, pt, method)
+                 if v["recall"] >= t]
+        if not cands:
+            return None
+        return max(cands, key=lambda kv: kv[1]["qps"])
+
+    def max_recall_setting(self, ds: str, pt: int, method: str):
+        """Fallback (Alg. 2 line 14): the max-recall setting."""
+        cands = self.settings(ds, pt, method)
+        if not cands:
+            return None
+        return max(cands, key=lambda kv: (kv[1]["recall"], kv[1]["qps"]))
+
+    # ---- persistence ----
+    def save(self, path: str) -> None:
+        rows = [{"ds": k[0], "pt": k[1], "method": k[2], "ps": k[3], **v}
+                for k, v in self.entries.items()]
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+    @staticmethod
+    def load(path: str) -> "BenchmarkTable":
+        with open(path) as f:
+            rows = json.load(f)
+        t = BenchmarkTable.new()
+        for r in rows:
+            t.add(r["ds"], r["pt"], r["method"], r["ps"], r["recall"], r["qps"])
+        return t

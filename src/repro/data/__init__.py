@@ -1,0 +1,2 @@
+"""Data substrate: synthetic filtered-ANN datasets (mirroring the paper's
+train/validation pools) and the deterministic token pipeline for LM training."""

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: predicate selectivity counting over packed bitmaps.
+
+Computes |{i : P(L_i, L_q)}| for a query batch — the router's per-query
+`selectivity` feature (the paper's Roaring-bitmap step). Grid iterates base
+blocks sequentially per query tile and accumulates counts in the revisited
+output block (standard Pallas reduction pattern)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.masked_topk import _predicate_mask_block
+
+
+def _kernel(qbm_ref, bm_ref, out_ref, *, pred: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mask = _predicate_mask_block(bm_ref[...], qbm_ref[...], pred)
+    out_ref[...] += jnp.sum(mask.astype(jnp.int32), axis=1)
+
+
+def selectivity_count(qbms, bitmaps, *, pred: int, bq: int = 128,
+                      bn: int = 2048, interpret: bool = False):
+    """qbms [Q, W], bitmaps [N, W] -> counts [Q] int32. Q%bq==0, N%bn==0."""
+    q, w = qbms.shape
+    n = bitmaps.shape[0]
+    assert q % bq == 0 and n % bn == 0
+    kernel = functools.partial(_kernel, pred=pred)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // bq, n // bn),
+        in_specs=[
+            pl.BlockSpec((bq, w), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bn, w), lambda qt, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda qt, nb: (qt,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        interpret=interpret,
+    )(qbms, bitmaps)

@@ -1,0 +1,85 @@
+"""Jitted wrappers around the Pallas kernels: padding to block multiples,
+cross-block merge, CPU interpret-mode fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import masked_topk as mk
+from repro.kernels import bitmap_filter as bf
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x, mult, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, dtype=x.dtype)], axis=0)
+
+
+@partial(jax.jit, static_argnames=("pred", "k", "bq", "bn", "interpret"))
+def masked_topk(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int,
+                bq: int = mk.DEFAULT_BQ, bn: int = mk.DEFAULT_BN,
+                interpret: bool | None = None):
+    """Fused filtered brute-force top-k. Returns (ids [Q,k] i32, dists [Q,k]).
+
+    Handles arbitrary Q/N by padding to block multiples; padded base rows
+    get +sentinel norms (never selected) and padded ids map back to −1.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    q, _ = qvecs.shape
+    n = base.shape[0]
+    bq_eff = min(bq, max(8, q))
+    qv = _pad_rows(qvecs, bq_eff)
+    qb = _pad_rows(qbms, bq_eff)
+    bs = _pad_rows(base, bn)
+    nm = _pad_rows(norms, bn, fill=mk.PAD_SCORE)
+    bm = _pad_rows(bitmaps, bn)
+    outd, outi = mk.masked_topk_blocks(
+        qv, qb, bs, nm, bm, pred=pred, k=k, bq=bq_eff, bn=bn,
+        interpret=interpret)
+    nb = outd.shape[0]
+    qp = qv.shape[0]
+    d_all = jnp.moveaxis(outd, 0, 1).reshape(qp, nb * k)
+    i_all = jnp.moveaxis(outi, 0, 1).reshape(qp, nb * k)
+    # drop padded-row hits and sentinel scores
+    bad = (i_all >= n) | (i_all < 0) | (d_all >= mk.PAD_SCORE)
+    d_all = jnp.where(bad, jnp.inf, d_all)
+    neg, sel = jax.lax.top_k(-d_all, k)
+    ids = jnp.take_along_axis(i_all, sel, axis=1)
+    ids = jnp.where(jnp.isinf(neg), -1, ids)
+    return ids[:q], -neg[:q]
+
+
+@partial(jax.jit, static_argnames=("pred", "bq", "bn", "interpret"))
+def selectivity(qbms, bitmaps, *, pred: int, bq: int = 128, bn: int = 2048,
+                interpret: bool | None = None):
+    """Per-query predicate match counts [Q] i32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = qbms.shape[0]
+    n = bitmaps.shape[0]
+    bq_eff = min(bq, max(8, q))
+    bn_eff = min(bn, max(256, n))
+    qb = _pad_rows(qbms, bq_eff)
+    bm = _pad_rows(bitmaps, bn_eff)
+    counts = bf.selectivity_count(qb, bm, pred=pred, bq=bq_eff, bn=bn_eff,
+                                  interpret=interpret)
+    # padded base rows have all-zero bitmaps: they match EQUALITY and AND
+    # (vacuous containment) iff the query label set is empty — subtract
+    # that contribution exactly. OR never matches a zero bitmap.
+    pad_n = bm.shape[0] - n
+    if pad_n and pred in (0, 1):
+        empty_q = jnp.all(qb == 0, axis=1)
+        counts = counts - jnp.where(empty_q, pad_n, 0).astype(jnp.int32)
+    return counts[:q]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (bitwise-identical semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def predicate_mask_ref(bitmaps, qbms, pred: int):
+    """bitmaps [N, W], qbms [Q, W] -> bool [Q, N]."""
+    b = bitmaps[None, :, :]
+    q = qbms[:, None, :]
+    if pred == 0:
+        return jnp.all(b == q, axis=-1)
+    if pred == 1:
+        return jnp.all((b & q) == q, axis=-1)
+    if pred == 2:
+        return jnp.any((b & q) != 0, axis=-1)
+    raise ValueError(pred)
+
+
+def masked_topk_ref(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int):
+    """Exact masked top-k: ids [Q, k] i32 (−1 pad), dists [Q, k] f32."""
+    scores = norms[None, :].astype(jnp.float32) - 2.0 * jnp.dot(
+        qvecs, base.T, preferred_element_type=jnp.float32)
+    mask = predicate_mask_ref(bitmaps, qbms, pred)
+    s = jnp.where(mask, scores, jnp.inf)
+    neg, idx = jax.lax.top_k(-s, k)
+    ids = jnp.where(jnp.isinf(neg), -1, idx).astype(jnp.int32)
+    return ids, -neg
+
+
+def selectivity_ref(qbms, bitmaps, *, pred: int):
+    return jnp.sum(predicate_mask_ref(bitmaps, qbms, pred),
+                   axis=1).astype(jnp.int32)

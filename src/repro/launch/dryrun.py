@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh) cell
+lowers AND compiles on the production meshes, and harvest the roofline
+inputs (memory_analysis, cost_analysis, per-collective bytes) from the
+compiled artifact.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and the dry-run needs 512 placeholder host devices to build
+the (2, 16, 16) multi-pod mesh. Smoke tests and benchmarks never import
+this module, so they keep seeing 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
+
+Each cell's result (status, memory stats, FLOPs, collective bytes, wall
+compile time) is cached as JSON under artifacts/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import artifacts_dir, enable_compilation_cache
+from repro.configs.base import (SHAPES, ARCH_IDS, get_config,
+                                shape_supported)
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models import common, lm
+from repro.optim import adam as adam_mod
+
+FSDP_PARAM_THRESHOLD = 3e9   # shard params over data axes above this
+
+
+OPT_LEVELS = {
+    "none": {"ctx": {}, "cfg": {}},
+    # §Perf iteration 1+2: activation sharding constraints + sequence-
+    # parallel LSE flash decode for S-sharded KV caches
+    "v1": {"ctx": {"opt_acts": True, "opt_flash_decode": True}, "cfg": {}},
+    # §Perf iteration 3: + attention head-sharding pins and 4x larger
+    # microbatches for the FSDP giants — ZeRO-3 weight all-gathers are
+    # re-issued per accumulation step, so accum 16->4 cuts gather volume
+    # 4x at the cost of 4x activation memory (remat-bounded)
+    "v2": {"ctx": {"opt_acts": True, "opt_flash_decode": True,
+                   "qc_train": 512},
+           "cfg": {"microbatch_seqs": 4}},
+    # §Perf iteration 4: v2's accum 16->4 overflows HBM on the 236B
+    # (temp 51.7 GB CPU-f32 ≈ 26 GB bf16 > 16 GB); accum 16->8 is the
+    # fit-constrained optimum (2x fewer ZeRO-3 re-gathers, temp halved)
+    "v3": {"ctx": {"opt_acts": True, "opt_flash_decode": True,
+                   "qc_train": 512},
+           "cfg": {"microbatch_seqs": 2}},
+}
+
+
+def _apply_opt_cfg(cfg, opt: str):
+    import dataclasses as _dc
+
+    over = dict(OPT_LEVELS[opt]["cfg"])
+    if over.get("microbatch_seqs") and cfg.microbatch_seqs >= over["microbatch_seqs"]:
+        over.pop("microbatch_seqs")        # only raise, never lower
+    return _dc.replace(cfg, **over) if over else cfg
+
+
+def build_ctx(mesh, axes, shape, opt: str = "none"):
+    kw = {"qc_train": 1024, "qc_prefill": 256, "gla_chunk": 256}
+    kw.update(OPT_LEVELS[opt]["ctx"])
+    return lm.ModelCtx(mesh=mesh, tp_axis=axes.tp_axis,
+                       dp_axes=axes.dp_axes, tp_size=axes.tp_size,
+                       dp_size=axes.dp_size, **kw)
+
+
+def shard(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt: str = "none"):
+    """Returns (lowered, meta) for one cell."""
+    cfg = _apply_opt_cfg(get_config(arch), opt)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(mesh)
+    ctx = build_ctx(mesh, axes, shape, opt)
+    param_sds, desc = SP.param_structs(cfg)
+    n_params = common.count_params(desc)
+    fsdp = n_params > FSDP_PARAM_THRESHOLD
+    pspecs = SP.param_partition(desc, axes, fsdp=fsdp)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_params": n_params, "fsdp": fsdp,
+            "family": cfg.family}
+
+    with mesh:
+        if shape.kind == "train":
+            accum = ST.accum_steps(cfg, shape, axes.dp_size)
+            meta["accum_steps"] = accum
+            opt_cfg = ST.default_opt_cfg(cfg)
+            opt_desc = adam_mod.adam_state_desc(desc, opt_cfg)
+            opt_sds = common.shape_structs(opt_desc)
+            opt_specs = SP.param_partition(opt_desc, axes, fsdp=fsdp)
+            batch_sds = SP.batch_specs(cfg, shape)
+            bspecs = SP.batch_partition(cfg, shape, axes)
+            step = ST.make_train_step(cfg, ctx, accum=accum, opt_cfg=opt_cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shard(mesh, pspecs), shard(mesh, opt_specs),
+                              shard(mesh, bspecs)),
+                out_shardings=(shard(mesh, pspecs), shard(mesh, opt_specs),
+                               None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(param_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds = SP.batch_specs(cfg, shape)
+            bspecs = SP.batch_partition(cfg, shape, axes)
+            cache_sds, cache_specs = SP.cache_structs(cfg, shape, axes)
+            step = ST.make_prefill_step(cfg, ctx)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shard(mesh, pspecs), shard(mesh, bspecs)),
+                out_shardings=(None, shard(mesh, cache_specs)))
+            lowered = jitted.lower(param_sds, batch_sds)
+        else:  # decode
+            cache_sds, cache_specs = SP.cache_structs(cfg, shape, axes)
+            bspec = SP.batch_partition(cfg, shape, axes)["tokens"]
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = ST.make_decode_step(cfg, ctx)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shard(mesh, pspecs), shard(mesh, cache_specs),
+                              NamedSharding(mesh, bspec), None),
+                out_shardings=(None, shard(mesh, cache_specs)),
+                donate_argnums=(1,))
+            lowered = jitted.lower(param_sds, cache_sds, tokens, pos)
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, keep_hlo: bool = False, opt: str = "none") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod, opt)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_stats = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_stats[attr] = int(v)
+        print(f"[{arch} {shape_name} {mesh_name}] memory_analysis:",
+              mem_stats, flush=True)
+        try:
+            cost = dict(compiled.cost_analysis())
+            cost = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float))}
+        except Exception:
+            cost = {}
+        print(f"[{arch} {shape_name} {mesh_name}] cost_analysis "
+              f"flops={cost.get('flops')}", flush=True)
+        hlo_text = compiled.as_text()
+        summary = analyze(hlo_text)
+        result = {**meta, "status": "ok",
+                  "lower_s": round(t_lower, 1),
+                  "compile_s": round(t_compile, 1),
+                  "memory": mem_stats,
+                  "cost_analysis": cost,
+                  "hlo_dot_flops": summary.dot_flops,
+                  "hlo_hbm_bytes": summary.hbm_bytes,
+                  "collective_bytes": summary.coll_bytes,
+                  "collective_by_kind": dict(summary.coll_by_kind),
+                  "hlo_size_chars": len(hlo_text)}
+        if keep_hlo:
+            sub = "dryrun" if opt == "none" else f"dryrun_{opt}"
+            path = os.path.join(artifacts_dir(sub, "hlo"),
+                                f"{arch}_{shape_name}_{mesh_name}.hlo")
+            with open(path, "w") as f:
+                f.write(hlo_text)
+            result["hlo_path"] = path
+        return result
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def cell_path(arch, shape_name, mesh_name, opt: str = "none"):
+    sub = "dryrun" if opt == "none" else f"dryrun_{opt}"
+    return os.path.join(artifacts_dir(sub),
+                        f"{arch}_{shape_name}_{mesh_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--opt", default="none", choices=list(OPT_LEVELS))
+    args = ap.parse_args()
+    enable_compilation_cache()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                path = cell_path(arch, shape_name, mesh_name, args.opt)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"cached   {arch:18s} {shape_name:12s} "
+                              f"{mesh_name}: {prev['status']}", flush=True)
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                res = run_cell(arch, shape_name, multi_pod,
+                               keep_hlo=args.keep_hlo, opt=args.opt)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                tag = res["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    extra = (f"compile={res['compile_s']}s "
+                             f"flops={res['hlo_dot_flops']:.3e} "
+                             f"coll={res['collective_bytes']:.3e}B")
+                elif tag == "error":
+                    extra = res["error"][:160]
+                print(f"{tag:8s} {arch:18s} {shape_name:12s} {mesh_name}: "
+                      f"{extra}", flush=True)
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skipped={n_skip} errors={n_err}",
+          flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,253 @@
+"""Static analysis of compiled (SPMD-partitioned) HLO text.
+
+Extracts the three roofline ingredients per device:
+  * dot FLOPs            — every `dot` op, 2·K·|out| (K resolved through a
+                           per-computation symbol table), loop-aware;
+  * HBM traffic bytes    — operand+output bytes of real ops at fusion
+                           boundaries (bitcast/GTE/parameter/tuple excluded);
+  * collective bytes     — all-reduce / all-gather / reduce-scatter /
+                           all-to-all / collective-permute output bytes,
+                           split per collective class.
+
+Loop awareness: `while` bodies (jax.lax.scan/fori — layer stacks, grad
+accumulation, query chunking) appear once in HLO text but execute
+trip-count times; we recover trip counts from the loop condition's
+compare-against-constant and multiply through nested loops. `conditional`
+branches contribute their maximum. Fusion computations are descended for
+FLOPs (dots stay dots) but not bytes (fused intermediates never touch HBM).
+
+All shapes in post-partitioning HLO are per-device, so every number this
+module reports is per-chip. Note: the XLA *CPU* backend upcasts bf16 dots
+to f32, so byte counts from CPU-compiled HLO over-estimate a TPU's bf16
+traffic by ≤2× — stated in EXPERIMENTS.md §Roofline methodology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that are pure bookkeeping — no HBM traffic of their own
+NO_TRAFFIC_OPS = {"bitcast", "get-tuple-element", "parameter", "tuple",
+                  "constant", "after-all", "partition-id", "replica-id",
+                  "iota", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMPARE_RE = re.compile(
+    r"compare\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\s*\).*direction=(LT|GT|LE|GE)")
+
+
+def _shapes_in(text: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(DTYPE_BYTES[dt] * n for dt, n, _ in _shapes_in(text))
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    whiles: list = dataclasses.field(default_factory=list)   # (cond, body)
+    fusions: list = dataclasses.field(default_factory=list)
+    calls: list = dataclasses.field(default_factory=list)
+    conditionals: list = dataclasses.field(default_factory=list)
+    constants: dict = dataclasses.field(default_factory=dict)
+    compares: list = dataclasses.field(default_factory=list)
+
+
+def parse_hlo(text: str):
+    comps: dict[str, CompStats] = {}
+    cur: CompStats | None = None
+    symtab: dict[str, list] = {}
+    entry_name = None
+    for raw in text.splitlines():
+        if not raw.strip():
+            continue
+        if not raw.startswith(" ") and raw.rstrip().endswith("{") \
+                and "->" in raw:
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", raw)
+            if m:
+                cur = comps.setdefault(m.group(2), CompStats())
+                symtab = {}
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        line = raw.strip()
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        # output shape = first shape group on the RHS (covers tuples too)
+        rhs_head = rhs.split("(", 1)[0]
+        out_shapes = _shapes_in(rhs_head)
+        if out_shapes:
+            symtab[name] = out_shapes[0][2]        # dims of first component
+        opm = _OP_RE.search(rhs)
+        op = opm.group(1) if opm else ""
+
+        cm = _CONST_RE.search(rhs)
+        if cm and "constant(" in rhs:
+            cur.constants[name] = int(cm.group(1))
+        pm = _COMPARE_RE.search(rhs)
+        if pm:
+            cur.compares.append((pm.group(1), pm.group(2), pm.group(3)))
+
+        # collectives
+        matched_coll = None
+        for kind in COLLECTIVES:
+            if op in (kind, kind + "-start"):
+                matched_coll = kind
+                break
+        if matched_coll:
+            nbytes = _bytes_of(rhs_head)
+            cur.coll_bytes += nbytes
+            cur.coll_by_kind[matched_coll] += nbytes
+
+        # dot FLOPs: 2 * K * |out|
+        if op == "dot":
+            out_elems = 1
+            for dim in (out_shapes[0][2] if out_shapes else []):
+                out_elems *= dim
+            ops_m = re.search(r"dot\(([^)]*)\)", rhs)
+            k = 1
+            if ops_m:
+                first_operand = ops_m.group(1).split(",")[0].strip()
+                first_operand = first_operand.lstrip("%")
+                lhs_dims = symtab.get(first_operand)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if lhs_dims and cdims and cdims.group(1):
+                    for idx in cdims.group(1).split(","):
+                        i = int(idx)
+                        if i < len(lhs_dims):
+                            k *= lhs_dims[i]
+            cur.dot_flops += 2.0 * k * out_elems
+
+        # HBM traffic (skip bookkeeping ops; count output shape bytes —
+        # operand bytes are the producing op's outputs, already counted)
+        if op not in NO_TRAFFIC_OPS and op:
+            cur.hbm_bytes += _bytes_of(rhs_head)
+
+        # structure
+        if op == "while":
+            mcond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            mbody = re.search(r"body=%?([\w\.\-]+)", rhs)
+            if mcond and mbody:
+                cur.whiles.append((mcond.group(1), mbody.group(1)))
+        elif op == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", rhs)
+            if m:
+                cur.fusions.append(m.group(1))
+        elif op == "conditional":
+            b = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if b:
+                cur.conditionals.append(
+                    [x.strip().lstrip("%") for x in b.group(1).split(",")])
+        elif op in ("call", "async-start") or " to_apply=" in rhs:
+            if not matched_coll and op not in ("reduce", "reduce-window",
+                                               "scatter", "select-and-scatter",
+                                               "sort", "map"):
+                m = re.search(r"to_apply=%?([\w\.\-]+)", rhs)
+                if m:
+                    cur.calls.append(m.group(1))
+
+    return comps, entry_name
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    for a, b, _direction in cond.compares:
+        for name in (b, a):
+            if name in cond.constants:
+                return max(1, cond.constants[name])
+    if len(cond.constants) == 1:
+        return max(1, next(iter(cond.constants.values())))
+    return 1
+
+
+@dataclasses.dataclass
+class HLOSummary:
+    dot_flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+
+
+def analyze(text: str) -> HLOSummary:
+    comps, entry = parse_hlo(text)
+    memo: dict = {}
+
+    def walk(name: str, in_fusion: bool, depth=0):
+        if depth > 64 or name not in comps:
+            return (0.0, 0.0, 0.0, {})
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = (0.0, 0.0, 0.0, {})      # cycle guard
+        c = comps[name]
+        flops = c.dot_flops
+        hbm = 0.0 if in_fusion else c.hbm_bytes
+        coll = c.coll_bytes
+        kinds = dict(c.coll_by_kind)
+
+        def acc(res, mult=1.0):
+            nonlocal flops, hbm, coll
+            flops += res[0] * mult
+            hbm += res[1] * mult
+            coll += res[2] * mult
+            for k, v in res[3].items():
+                kinds[k] = kinds.get(k, 0.0) + v * mult
+
+        for cond, body in c.whiles:
+            trip = _trip_count(comps, cond)
+            acc(walk(body, in_fusion, depth + 1), trip)
+            acc(walk(cond, in_fusion, depth + 1), trip)
+        for f in c.fusions:
+            acc(walk(f, True, depth + 1))
+        for f in c.calls:
+            acc(walk(f, in_fusion, depth + 1))
+        for branches in c.conditionals:
+            results = [walk(b, in_fusion, depth + 1) for b in branches]
+            if results:
+                best = max(results, key=lambda r: r[0] + r[1])
+                acc(best)
+        memo[key] = (flops, hbm, coll, kinds)
+        return memo[key]
+
+    flops, hbm, coll, kinds = walk(entry, False) if entry else (0, 0, 0, {})
+    return HLOSummary(dot_flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                      coll_by_kind=kinds)

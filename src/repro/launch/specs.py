@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input stand-ins + PartitionSpecs for every
+(architecture × input shape × mesh) dry-run cell. No device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import MeshAxes
+from repro.models import common, lm
+from repro.optim import adam as adam_mod
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the step's data inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: one new token against an s-long cache
+        d = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.encoder_layers and shape.kind != "decode":
+        d["enc_inputs"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return d
+
+
+def batch_partition(cfg: ModelConfig, shape: ShapeSpec, axes: MeshAxes):
+    dp = axes.dp_axes if len(axes.dp_axes) > 1 else axes.dp_axes[0]
+    bdim = dp if shape.global_batch % axes.dp_size == 0 else None
+    out = {"tokens": P(bdim, None)}
+    if shape.kind == "train":
+        out["targets"] = P(bdim, None)
+    if cfg.encoder_layers and shape.kind != "decode":
+        out["enc_inputs"] = P(bdim, None, None)
+    return out
+
+
+def param_structs(cfg: ModelConfig):
+    desc = lm.model_desc(cfg)
+    return common.shape_structs(desc, dtype=jnp.dtype(cfg.param_dtype)), desc
+
+
+def param_partition(desc, axes: MeshAxes, *, fsdp: bool):
+    return common.partition_specs(
+        desc, tp_axis=axes.tp_axis, tp_size=axes.tp_size,
+        fsdp_axes=axes.dp_axes if fsdp else (),
+        fsdp_size=axes.dp_size if fsdp else 1)
+
+
+def opt_structs(desc, cfg: ModelConfig, opt_cfg):
+    """ShapeDtypeStructs + PartitionSpecs for the Adam state."""
+    return adam_mod.adam_state_desc(desc, opt_cfg,
+                                    param_dtype=jnp.dtype(cfg.param_dtype))
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeSpec, axes: MeshAxes):
+    """Decode cache ShapeDtypeStructs + PartitionSpecs.
+
+    KV caches shard batch over data; the sequence axis shards over `model`
+    when kv-heads don't divide the TP axis (DESIGN.md §5)."""
+    desc = lm.cache_desc(cfg, shape.global_batch, shape.seq_len)
+    structs = common.shape_structs(desc)
+
+    dp = axes.dp_axes if len(axes.dp_axes) > 1 else axes.dp_axes[0]
+    b_ok = shape.global_batch % axes.dp_size == 0
+
+    def spec(d: common.ParamDesc):
+        # cache descs mark the batch dim via `fsdp`; layer stacking shifts
+        # every dim index by one, so resolve against the actual shape.
+        parts = [None] * len(d.shape)
+        if (b_ok and d.fsdp is not None and d.fsdp < len(d.shape)
+                and d.shape[d.fsdp] == shape.global_batch):
+            parts[d.fsdp] = dp
+        if d.tp is not None and d.tp < len(d.shape) \
+                and d.shape[d.tp] % axes.tp_size == 0 and parts[d.tp] is None:
+            parts[d.tp] = axes.tp_axis
+        return P(*parts)
+
+    specs = common.map_descs(spec, desc)
+    return structs, specs

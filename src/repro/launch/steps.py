@@ -1,0 +1,99 @@
+"""Step builders: train_step (grad-accum microbatching + remat + AdamW) and
+serve steps (prefill / decode). Pure functions of (params, opt, batch) so
+dry-run lowering needs only ShapeDtypeStructs."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+
+
+def default_opt_cfg(cfg: ModelConfig) -> AdamConfig:
+    return AdamConfig(lr=3e-4, weight_decay=0.01, compress=cfg.opt_compress)
+
+
+def accum_steps(cfg: ModelConfig, shape: ShapeSpec, dp_size: int) -> int:
+    per_replica = max(1, shape.global_batch // dp_size)
+    return max(1, per_replica // max(cfg.microbatch_seqs, 1))
+
+
+def make_train_step(cfg: ModelConfig, ctx: lm.ModelCtx, *, accum: int,
+                    opt_cfg: AdamConfig | None = None, max_grad_norm=1.0):
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+
+    def train_step(params, opt_state, batch):
+        b = batch["tokens"].shape[0]
+        mb = b // accum
+
+        def loss_fn(p, mbatch):
+            return lm.forward_train(p, mbatch, cfg, ctx)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            from jax.sharding import PartitionSpec as P
+            dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+            def split(a):
+                # [B, ...] -> [accum, B/accum, ...]; row b -> (b % accum,
+                # b // accum) so each microbatch spans every data shard.
+                out = a.reshape(mb, accum, *a.shape[1:]).swapaxes(0, 1)
+                return jax.lax.with_sharding_constraint(
+                    out, P(None, dp, *([None] * (a.ndim - 1))))
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mbatch):
+                g_acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "step": opt_state["step"]}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: lm.ModelCtx):
+    def prefill_step(params, batch):
+        return lm.forward_prefill(params, batch, cfg, ctx)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: lm.ModelCtx):
+    def decode_step(params, cache, tokens, pos):
+        return lm.forward_decode(params, cache, tokens, pos, cfg, ctx)
+    return decode_step
+
+
+def init_train_state(cfg: ModelConfig, key, opt_cfg: AdamConfig | None = None):
+    """Materialised params + optimizer state (examples/smoke scale only)."""
+    from repro.models import common
+
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+    desc = lm.model_desc(cfg)
+    params = common.init_params(desc, key,
+                                dtype=jnp.dtype(cfg.param_dtype))
+    return params, adam_init(params, opt_cfg)

@@ -1,0 +1,3 @@
+"""Composable LM substrate: GQA/MLA attention, MoE, xLSTM/Mamba SSM blocks,
+decoder-only and encoder-decoder assemblies, parameter descriptors with
+TP/FSDP sharding annotations."""

@@ -1,0 +1,124 @@
+"""Parameter descriptors + shared layer math.
+
+Every model declares its parameters as a pytree of `ParamDesc` — shape,
+dtype, and *which dimension* shards over tensor-parallel ("model") and
+FSDP ("data"(+"pod")) mesh axes. From one descriptor tree we derive:
+
+  * real initialised parameters (smoke tests / examples),
+  * `jax.ShapeDtypeStruct`s (the 512-device dry-run never allocates),
+  * `PartitionSpec`s for pjit in_shardings (TP/FSDP/EP placement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: tuple
+    dtype: Any = jnp.float32
+    tp: int | None = None       # dim sharded over the "model" axis
+    fsdp: int | None = None     # dim sharded over the data(+pod) axes
+    scale: float | None = None  # init std; default fan-in
+    zero: bool = False          # zero-init (biases, norm offsets...)
+    one: bool = False           # ones-init (norm scales)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def map_descs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_desc)
+
+
+# ---- derivations -----------------------------------------------------------
+
+def init_params(tree, key, dtype=None):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_desc)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = dtype or d.dtype
+        if d.one:
+            out.append(jnp.ones(d.shape, dt))
+        elif d.zero:
+            out.append(jnp.zeros(d.shape, dt))
+        else:
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(
+                d.shape[0] if len(d.shape) <= 2 else np.prod(d.shape[:-1]))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt))
+    return treedef.unflatten(out)
+
+
+def shape_structs(tree, dtype=None):
+    return map_descs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype), tree)
+
+
+def partition_specs(tree, *, tp_axis="model", tp_size: int,
+                    fsdp_axes=(), fsdp_size: int = 1):
+    """PartitionSpecs honouring divisibility (falls back to replication)."""
+
+    def spec(d: ParamDesc):
+        parts = [None] * len(d.shape)
+        if d.tp is not None and tp_size > 1 and d.shape[d.tp] % tp_size == 0:
+            parts[d.tp] = tp_axis
+        if (d.fsdp is not None and fsdp_axes and fsdp_size > 1
+                and d.fsdp != d.tp and parts[d.fsdp] is None
+                and d.shape[d.fsdp] % fsdp_size == 0):
+            parts[d.fsdp] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+        return P(*parts)
+
+    return map_descs(spec, tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(tree, is_leaf=is_desc))
+
+
+# ---- layer math -------------------------------------------------------------
+
+def cast_floats(tree, dtype):
+    """Cast all floating leaves to `dtype` (params -> compute dtype)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, tree)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x [..., S, H, hd]; positions [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,534 @@
+"""Model assembly: decoder-only LMs (dense / MoE / MLA / SSM / hybrid) and
+the Whisper-style encoder-decoder, from one ParamDesc tree.
+
+Uniform-block models scan over a stacked [L, ...] parameter tree with
+`jax.checkpoint` remat per layer; heterogeneous stacks (xLSTM's
+sLSTM/mLSTM mix) unroll. Decode threads a per-layer cache pytree through
+the same scan. Sliding-window archs (Hymba) use a ring-buffer KV cache of
+window size — the sub-quadratic decode path that makes long_500k viable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.common import ParamDesc, is_desc, map_descs, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Execution context: mesh + axis names + chunking knobs."""
+    mesh: Any = None
+    tp_axis: str = "model"
+    dp_axes: tuple = ("data",)
+    tp_size: int = 1
+    dp_size: int = 1
+    qc_train: int = 1024
+    qc_prefill: int = 256
+    gla_chunk: int = 256
+    # perf knobs (EXPERIMENTS.md §Perf) — baseline keeps both off
+    opt_acts: bool = False         # Megatron-style activation constraints
+    opt_flash_decode: bool = False # shard_map LSE decode for S-sharded caches
+
+
+def _shard_act(x, ctx: "ModelCtx", tail=()):
+    """Constrain an activation to P(dp, *tail) when opt_acts is on."""
+    if ctx is None or not ctx.opt_acts or ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    spec = [dp] + [None] * (x.ndim - 1)
+    for i, ax in enumerate(tail):
+        d = x.ndim - len(tail) + i
+        if ax is not None and x.shape[d] % ctx.tp_size == 0:
+            spec[d] = ax
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# layer structure
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> tuple:
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+        return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+    if cfg.encoder_layers:
+        return ("dec",) * cfg.n_layers
+    if cfg.family == "hybrid":
+        return ("hymba",) * cfg.n_layers
+    if cfg.family == "ssm":
+        return ("mlstm",) * cfg.n_layers
+    return ("attn",) * cfg.n_layers
+
+
+def layer_desc(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    ln = lambda: ParamDesc((d,), one=True)
+    if kind == "attn":
+        p = {"ln1": ln(),
+             "attn": A.mla_desc(cfg) if cfg.use_mla else A.gqa_desc(cfg),
+             "ln2": ln()}
+        if cfg.is_moe:
+            p["moe"] = M.moe_desc(cfg)
+        else:
+            p["mlp"] = M.mlp_desc(cfg)
+        return p
+    if kind == "mlstm":
+        return {"ln1": ln(), "mlstm": S.mlstm_desc(cfg)}
+    if kind == "slstm":
+        return {"ln1": ln(), "slstm": S.slstm_desc(cfg)}
+    if kind == "hymba":
+        return {"ln1": ln(), "attn": A.gqa_desc(cfg),
+                "mamba": S.mamba_desc(cfg), "ln2": ln(),
+                "mlp": M.mlp_desc(cfg)}
+    if kind == "enc":   # whisper encoder block (bidirectional, gelu MLP)
+        return {"ln1": ln(), "attn": A.gqa_desc(cfg), "ln2": ln(),
+                "mlp": M.mlp_desc(cfg, gated=False)}
+    if kind == "dec":   # whisper decoder block (self + cross + gelu MLP)
+        return {"ln1": ln(), "attn": A.gqa_desc(cfg),
+                "lnx": ln(), "cross": A.cross_desc(cfg), "ln2": ln(),
+                "mlp": M.mlp_desc(cfg, gated=False)}
+    raise ValueError(kind)
+
+
+def _stack_desc(desc: dict, n: int) -> dict:
+    def add_dim(d: ParamDesc) -> ParamDesc:
+        return ParamDesc((n,) + d.shape, d.dtype,
+                         tp=None if d.tp is None else d.tp + 1,
+                         fsdp=None if d.fsdp is None else d.fsdp + 1,
+                         scale=d.scale, zero=d.zero, one=d.one)
+    return map_descs(add_dim, desc)
+
+
+def model_desc(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    kinds = layer_kinds(cfg)
+    tree: dict = {
+        "embed": ParamDesc((cfg.vocab, d), tp=0, fsdp=1, scale=0.02),
+        "ln_f": ParamDesc((d,), one=True),
+        "head": ParamDesc((d, cfg.vocab), tp=1, fsdp=0),
+    }
+    if len(set(kinds)) == 1:
+        tree["layers"] = _stack_desc(layer_desc(cfg, kinds[0]), cfg.n_layers)
+    else:
+        tree["layers"] = tuple(layer_desc(cfg, k) for k in kinds)
+    if cfg.encoder_layers:
+        tree["enc_pos"] = ParamDesc((cfg.encoder_seq, d), scale=0.02, fsdp=0)
+        tree["enc_layers"] = _stack_desc(layer_desc(cfg, "enc"),
+                                         cfg.encoder_layers)
+        tree["enc_ln_f"] = ParamDesc((d,), one=True)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, lp, x, cfg: ModelConfig, ctx: ModelCtx,
+                 positions, enc_kv=None, *, qc: int):
+    """Residual block (train/prefill shared math). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "enc", "dec"):
+        h = _shard_act(rms_norm(x, lp["ln1"], cfg.norm_eps), ctx)
+        if cfg.use_mla:
+            y = A.mla_train(lp["attn"], h, cfg, positions, qc=qc)
+        else:
+            y = A.gqa_train(lp["attn"], h, cfg, positions,
+                            causal=(kind != "enc"), qc=qc, ctx=ctx)
+        x = _shard_act(x + _shard_act(y, ctx), ctx)
+        if kind == "dec":
+            h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+            x = x + A.cross_attend(lp["cross"], h, enc_kv, cfg, qc=qc)
+        h = _shard_act(rms_norm(x, lp["ln2"], cfg.norm_eps), ctx)
+        if "moe" in lp:
+            y, aux = M.moe_apply(lp["moe"], h, cfg, ctx)
+        else:
+            y = M.mlp_apply(lp["mlp"], h, gated=(kind == "attn"),
+                            act=jax.nn.silu if kind == "attn" else jax.nn.gelu,
+                            ctx=ctx)
+        return _shard_act(x + _shard_act(y, ctx), ctx), aux
+    if kind == "mlstm":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        return x + S.mlstm_train(lp["mlstm"], h, cfg, chunk=ctx.gla_chunk), aux
+    if kind == "slstm":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, _ = S.slstm_train(lp["slstm"], h, cfg)
+        return x + y, aux
+    if kind == "hymba":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y_attn = A.gqa_train(lp["attn"], h, cfg, positions, qc=qc, ctx=ctx)
+        y_ssm = S.mamba_train(lp["mamba"], h, cfg, chunk=ctx.gla_chunk)
+        x = x + 0.5 * (y_attn + y_ssm)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + M.mlp_apply(lp["mlp"], h), aux
+    raise ValueError(kind)
+
+
+def _run_layers(params, x, cfg: ModelConfig, ctx: ModelCtx, positions,
+                enc_kv=None, *, qc: int):
+    kinds = layer_kinds(cfg)
+    aux_tot = jnp.zeros((), jnp.float32)
+    if isinstance(params["layers"], tuple):        # heterogeneous: unroll
+        for kind, lp in zip(kinds, params["layers"]):
+            body = lambda xx, lp=lp, kind=kind: _apply_block(
+                kind, lp, xx, cfg, ctx, positions, enc_kv, qc=qc)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, aux = body(x)
+            aux_tot += aux
+        return x, aux_tot
+
+    kind = kinds[0]
+
+    def body(carry, lp):
+        x, aux_tot = carry
+        x, aux = _apply_block(kind, lp, x, cfg, ctx, positions, enc_kv, qc=qc)
+        return (x, aux_tot + aux), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux_tot), _ = jax.lax.scan(scan_body, (x, aux_tot), params["layers"])
+    return x, aux_tot
+
+
+# ---------------------------------------------------------------------------
+# public forwards
+# ---------------------------------------------------------------------------
+
+def _encode(params, enc_inputs, cfg: ModelConfig, ctx: ModelCtx):
+    """Whisper encoder over precomputed frame embeddings [B, S_enc, D]."""
+    x = enc_inputs.astype(jnp.dtype(cfg.compute_dtype)) + \
+        params["enc_pos"].astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        xx, _ = carry
+        xx, aux = _apply_block("enc", lp, xx, cfg, ctx, positions,
+                               qc=ctx.qc_train)
+        return (xx, aux), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                             params["enc_layers"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward_train(params, batch, cfg: ModelConfig, ctx: ModelCtx):
+    """batch: {tokens [B,S], targets [B,S], (enc_inputs [B,Se,D])}.
+    Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    compute_dt = jnp.dtype(cfg.compute_dtype)
+    from repro.models.common import cast_floats
+    params = cast_floats(params, compute_dt)
+    x = params["embed"][tokens]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    enc_kv = None
+    if cfg.encoder_layers:
+        enc_out = _encode(params, batch["enc_inputs"], cfg, ctx)
+        # cross K/V computed once per layer inside blocks would recompute the
+        # encoder; instead share one projection set per layer via scan input.
+        enc_kv = enc_out   # projected per-layer below
+    x, aux = _run_layers_encdec(params, x, cfg, ctx, positions, enc_kv) \
+        if cfg.encoder_layers else _run_layers(params, x, cfg, ctx,
+                                               positions, qc=ctx.qc_train)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(targets, 0)[..., None],
+                               axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + 0.01 * aux / max(cfg.n_layers, 1)
+    return total, {"loss": loss, "aux": aux,
+                   "tokens": jnp.sum(mask).astype(jnp.float32)}
+
+
+def _run_layers_encdec(params, x, cfg, ctx, positions, enc_out):
+    def body(carry, lp):
+        xx, aux_tot = carry
+        kv = A.cross_kv(lp["cross"], enc_out, cfg)
+        xx, aux = _apply_block("dec", lp, xx, cfg, ctx, positions, kv,
+                               qc=ctx.qc_train)
+        return (xx, aux_tot + aux), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache structure + prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_desc(cfg: ModelConfig, batch: int, s_max: int) -> Any:
+    """Per-layer cache descriptor tree (ShapeDtypeStruct-compatible)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    kinds = layer_kinds(cfg)
+
+    def one(kind: str):
+        if kind == "attn":
+            if cfg.use_mla:
+                return {"c_kv": ParamDesc((batch, s_max, cfg.kv_lora_rank),
+                                          dt, fsdp=0, tp=1),
+                        "k_r": ParamDesc((batch, s_max, cfg.mla_rope_dim),
+                                         dt, fsdp=0, tp=1)}
+            kv_shardable = cfg.n_kv_heads % 16 == 0
+            return {"k": ParamDesc((batch, s_max, cfg.n_kv_heads, cfg.hd), dt,
+                                   fsdp=0, tp=2 if kv_shardable else 1),
+                    "v": ParamDesc((batch, s_max, cfg.n_kv_heads, cfg.hd), dt,
+                                   fsdp=0, tp=2 if kv_shardable else 1)}
+        if kind == "dec":
+            return {"k": ParamDesc((batch, s_max, cfg.n_kv_heads, cfg.hd), dt,
+                                   fsdp=0, tp=2),
+                    "v": ParamDesc((batch, s_max, cfg.n_kv_heads, cfg.hd), dt,
+                                   fsdp=0, tp=2),
+                    "xk": ParamDesc((batch, cfg.encoder_seq, cfg.n_heads,
+                                     cfg.hd), dt, fsdp=0, tp=2),
+                    "xv": ParamDesc((batch, cfg.encoder_seq, cfg.n_heads,
+                                     cfg.hd), dt, fsdp=0, tp=2)}
+        if kind == "hymba":
+            w = min(cfg.sliding_window or s_max, s_max)
+            return {"k": ParamDesc((batch, w, cfg.n_kv_heads, cfg.hd), dt, fsdp=0),
+                    "v": ParamDesc((batch, w, cfg.n_kv_heads, cfg.hd), dt, fsdp=0),
+                    "slot_pos": ParamDesc((w,), jnp.int32),
+                    "state": ParamDesc(S.mamba_state_shape(cfg, batch),
+                                       jnp.float32, fsdp=0, tp=1)}
+        if kind == "mlstm":
+            return {"state": ParamDesc(S.mlstm_state_shape(cfg, batch),
+                                       jnp.float32, fsdp=0, tp=1)}
+        if kind == "slstm":
+            z = (batch, cfg.n_heads, cfg.hd)
+            return {"c": ParamDesc(z, jnp.float32, fsdp=0, tp=1),
+                    "n": ParamDesc(z, jnp.float32, fsdp=0, tp=1),
+                    "h": ParamDesc(z, dt, fsdp=0, tp=1),
+                    "m": ParamDesc(z, jnp.float32, fsdp=0, tp=1)}
+        raise ValueError(kind)
+
+    kinds_eff = ["dec" if cfg.encoder_layers else k for k in kinds]
+    if len(set(kinds_eff)) == 1:
+        return _stack_desc(one(kinds_eff[0]), cfg.n_layers)
+    return tuple(one(k) for k in kinds_eff)
+
+
+def _decode_block(kind: str, lp, cache, x, cfg, ctx, pos):
+    if kind in ("attn", "dec"):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            y, cache2 = A.mla_decode(lp["attn"], h, cache, cfg, pos)
+        elif (ctx.opt_flash_decode and ctx.tp_size > 1
+              and cfg.n_kv_heads % ctx.tp_size != 0
+              and cache["k"].shape[1] % ctx.tp_size == 0):
+            # S-sharded cache: sequence-parallel LSE decode (perf opt)
+            y, cache2 = A.gqa_decode_flash(lp["attn"], h, cache, cfg, pos,
+                                           ctx)
+        else:
+            y, cache2 = A.gqa_decode(lp["attn"], h, cache, cfg, pos)
+        x = x + y
+        if kind == "dec":
+            h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+            x = x + A.cross_attend(lp["cross"], h,
+                                   {"k": cache["xk"], "v": cache["xv"]},
+                                   cfg, qc=1)
+            cache2 = {**cache2, "xk": cache["xk"], "xv": cache["xv"]}
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = M.moe_apply(lp["moe"], h, cfg, ctx)
+        else:
+            y = M.mlp_apply(lp["mlp"], h, gated=(kind == "attn"),
+                            act=jax.nn.silu if kind == "attn" else jax.nn.gelu)
+        return x + y, cache2
+    if kind == "hymba":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y_attn, ring = _gqa_decode_ring(
+            lp["attn"], h, {"k": cache["k"], "v": cache["v"],
+                            "slot_pos": cache["slot_pos"]}, cfg, pos)
+        y_ssm, state = S.mamba_decode(lp["mamba"], h, cache["state"], cfg)
+        x = x + 0.5 * (y_attn + y_ssm)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + M.mlp_apply(lp["mlp"], h), {**ring, "state": state}
+    if kind == "mlstm":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, state = S.mlstm_decode(lp["mlstm"], h, cache["state"], cfg)
+        return x + y, {"state": state}
+    if kind == "slstm":
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, st = S.slstm_train(lp["slstm"], h, cfg, state0=(
+            cache["c"], cache["n"], cache["h"], cache["m"]))
+        return x + y, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+    raise ValueError(kind)
+
+
+def _gqa_decode_ring(p, x, cache, cfg: ModelConfig, pos):
+    """Sliding-window ring-buffer KV cache decode (Hymba / SWA)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    w = cache["k"].shape[1]
+    q, knew, vnew = A._qkv(p, x, cfg, pos[None] if pos.ndim == 0 else pos)
+    slot = pos % w
+    k = jax.lax.dynamic_update_slice(cache["k"], knew, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], vnew, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    valid = (slot_pos <= pos) & (slot_pos > pos - (cfg.sliding_window or w))
+    qr = q.reshape(b, 1, kv, h // kv, hd)
+    scores = jnp.einsum("bqgrh,btgh->bgrqt", qr, k,
+                        preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, A.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqt,btgh->bqgrh", probs, v).reshape(b, 1, -1)
+    return out @ p["wo"], {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+def forward_decode(params, cache, tokens, pos, cfg: ModelConfig,
+                   ctx: ModelCtx):
+    """One decode step. tokens [B,1], pos scalar int32 (current position).
+    Returns (logits [B,1,V], new cache)."""
+    compute_dt = jnp.dtype(cfg.compute_dtype)
+    from repro.models.common import cast_floats
+    params = cast_floats(params, compute_dt)
+    x = params["embed"][tokens]
+    kinds = layer_kinds(cfg)
+    kinds_eff = ["dec" if cfg.encoder_layers else k for k in kinds]
+    if isinstance(params["layers"], tuple):
+        new_cache = []
+        for kind, lp, cl in zip(kinds_eff, params["layers"], cache):
+            x, c2 = _decode_block(kind, lp, cl, x, cfg, ctx, pos)
+            new_cache.append(c2)
+        new_cache = tuple(new_cache)
+    else:
+        def body(x, sl):
+            lp, cl = sl
+            x, c2 = _decode_block(kinds_eff[0], lp, cl, x, cfg, ctx, pos)
+            return x, c2
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def forward_prefill(params, batch, cfg: ModelConfig, ctx: ModelCtx,
+                    prompt_len: int | None = None):
+    """Prefill: full-sequence forward returning next-token logits + cache.
+
+    `prompt_len` (static int) marks the true prompt end when the token
+    batch is right-padded to the cache length: recurrent layers mask
+    writes beyond it (their state must not absorb padding), the Hymba
+    ring cache is sliced to the window *ending at* prompt_len, and logits
+    are taken at prompt_len-1. None = the whole sequence is real (the
+    dry-run path)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    compute_dt = jnp.dtype(cfg.compute_dtype)
+    from repro.models.common import cast_floats
+    params = cast_floats(params, compute_dt)
+    x = params["embed"][tokens]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    valid = None if prompt_len is None else \
+        (positions < prompt_len)                       # [S] bool
+    kinds = layer_kinds(cfg)
+    kinds_eff = ["dec" if cfg.encoder_layers else k for k in kinds]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(params, batch["enc_inputs"], cfg, ctx)
+
+    def _mask_writes(k, log_f):
+        """Zero recurrent writes (k) and freeze decay (f=1) beyond prompt."""
+        if valid is None:
+            return k, log_f
+        vk = valid[None, :, None, None]
+        return jnp.where(vk, k, 0).astype(k.dtype), \
+            jnp.where(valid[None, :, None], log_f, 0.0)
+
+    def prefill_block(kind, lp, x):
+        if kind in ("attn",):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                y, c = A.mla_prefill(lp["attn"], h, cfg, positions,
+                                     qc=ctx.qc_prefill)
+            else:
+                y, c = A.gqa_prefill(lp["attn"], h, cfg, positions,
+                                     qc=ctx.qc_prefill)
+            x = x + y
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                y, _ = M.moe_apply(lp["moe"], h, cfg, ctx)
+            else:
+                y = M.mlp_apply(lp["mlp"], h)
+            return x + y, c
+        if kind == "dec":
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, c = A.gqa_prefill(lp["attn"], h, cfg, positions,
+                                 qc=ctx.qc_prefill)
+            x = x + y
+            kv = A.cross_kv(lp["cross"], enc_out, cfg)
+            h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+            x = x + A.cross_attend(lp["cross"], h, kv, cfg, qc=ctx.qc_prefill)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + M.mlp_apply(lp["mlp"], h, gated=False, act=jax.nn.gelu)
+            return x, {"k": c["k"], "v": c["v"], "xk": kv["k"], "xv": kv["v"]}
+        if kind == "mlstm":
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v, log_f, o = S._mlstm_qkvgates(lp["mlstm"], h, cfg)
+            k, log_f = _mask_writes(k, log_f)
+            y, st = S.gla_chunk_scan(q, k, v, log_f, chunk=ctx.gla_chunk)
+            y = (y.reshape(b, s, -1) * o) @ lp["mlstm"]["wo"]
+            return x + y, {"state": st}
+        if kind == "slstm":
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, st = S.slstm_train(lp["slstm"], h, cfg, valid=valid)
+            return x + y, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+        if kind == "hymba":
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y_attn, c = A.gqa_prefill(lp["attn"], h, cfg, positions,
+                                      qc=ctx.qc_prefill)
+            q, kk, vv, log_f = S._mamba_qkv(lp["mamba"], h, cfg)
+            kk, log_f = _mask_writes(kk, log_f)
+            y_ssm, st = S.gla_chunk_scan(q, kk, vv, log_f,
+                                         chunk=ctx.gla_chunk, normalize=False)
+            y_ssm = y_ssm.reshape(b, s, -1) @ lp["mamba"]["w_out"]
+            x = x + 0.5 * (y_attn + y_ssm)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + M.mlp_apply(lp["mlp"], h)
+            w = min(cfg.sliding_window or s, s)
+            end = s if prompt_len is None else prompt_len
+            # ring slot j holds the latest position p < end with p % w == j
+            slots = jnp.arange(w, dtype=jnp.int32)
+            start = end - w
+            p_j = start + ((slots - start) % w)
+            ring_idx = jnp.clip(p_j, 0, s - 1)
+            ring_k = jnp.take(c["k"], ring_idx, axis=1)
+            ring_v = jnp.take(c["v"], ring_idx, axis=1)
+            slot_pos = jnp.where((p_j >= 0) & (p_j < end), p_j,
+                                 jnp.int32(2 ** 30))
+            return x, {"k": ring_k, "v": ring_v,
+                       "slot_pos": slot_pos.astype(jnp.int32), "state": st}
+        raise ValueError(kind)
+
+    if isinstance(params["layers"], tuple):
+        caches = []
+        for kind, lp in zip(kinds_eff, params["layers"]):
+            x, c = prefill_block(kind, lp, x)
+            caches.append(c)
+        cache = tuple(caches)
+    else:
+        def body(x, lp):
+            return prefill_block(kinds_eff[0], lp, x)
+        x, cache = jax.lax.scan(body, x, params["layers"])
+    last = (s - 1) if prompt_len is None else (prompt_len - 1)
+    x = rms_norm(x[:, last:last + 1], params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, cache

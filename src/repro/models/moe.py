@@ -1,0 +1,159 @@
+"""Dense MLPs and the Mixture-of-Experts layer.
+
+MoE executes under `shard_map`: tokens are data-sharded and **replicated
+across the TP axis**, expert weights shard over the TP axis — expert-
+parallel ([E, ...] split, DeepSeek: 160 % 16 == 0) when E divides the TP
+axis, otherwise tensor-parallel inside every expert ([.., F, ..] split,
+Grok: 8 experts on 16-way TP → F/16). Either way each TP shard computes
+only its slice and one `psum` over the TP axis combines — the same
+collective a TP dense MLP needs, so EP costs no extra all-to-all under
+this layout (tokens are never exchanged across data shards).
+
+Dispatch is gather-based (sort-free): top-k assignment → position-in-
+expert by cumsum → an int [E, C] slot table scatter → row gather into
+[E, C, D] expert batches. Capacity C = T_local·k/E·capacity_factor;
+overflow tokens drop (contribute zero), standard for capacity routing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDesc
+
+
+# ---------------------------- dense MLP ----------------------------
+
+def mlp_desc(cfg: ModelConfig, d_ff: int | None = None,
+             gated: bool = True) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    p = {"w_up": ParamDesc((d, f), tp=1, fsdp=0),
+         "w_down": ParamDesc((f, d), tp=0, fsdp=1)}
+    if gated:
+        p["w_gate"] = ParamDesc((d, f), tp=1, fsdp=0)
+    return p
+
+
+def mlp_apply(p, x, *, gated: bool = True, act=jax.nn.silu, ctx=None):
+    up = x @ p["w_up"]
+    h = act(x @ p["w_gate"]) * up if gated else act(up)
+    if ctx is not None and getattr(ctx, "opt_acts", False):
+        from repro.models.lm import _shard_act
+        h = _shard_act(h, ctx, tail=(ctx.tp_axis,))
+    return h @ p["w_down"]
+
+
+# ---------------------------- MoE ----------------------------
+
+def moe_desc(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    ep = e % 16 == 0  # advisory only; real decision in partition sizes
+    p = {
+        "wg": ParamDesc((d, e)),                               # router gate
+        "w_gate": ParamDesc((e, d, f), tp=0 if ep else 2, fsdp=1),
+        "w_up": ParamDesc((e, d, f), tp=0 if ep else 2, fsdp=1),
+        "w_down": ParamDesc((e, f, d), tp=0 if ep else 1, fsdp=2),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_desc(cfg, d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def _moe_local(x, wg, w_gate, w_up, w_down, *, cfg: ModelConfig,
+               tp_axis: str, expert_parallel: bool):
+    """Per-shard MoE body (inside shard_map).
+
+    x [T_loc, D] (local token rows, replicated over TP);
+    expert weights are the local slice: EP -> [E_loc, D, F];
+    TP-in-expert -> [E, D, F_loc]."""
+    t, d = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    cap = max(4, int(t * k / e * cfg.capacity_factor + 0.999) // 4 * 4)
+
+    logits = (x.astype(jnp.float32) @ wg.astype(jnp.float32))      # [T, E]
+    gval, gidx = jax.lax.top_k(logits, k)                          # [T, k]
+    weights = jax.nn.softmax(gval, axis=-1)                        # [T, k]
+
+    # position-in-expert over (token-major, slot-minor) order
+    flat_e = gidx.reshape(-1)                                      # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)            # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot                      # count before
+    slot_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    valid = slot_pos < cap
+
+    # slot table [E, cap] of source token rows (-1 = empty)
+    tok_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    table = jnp.full((e, cap), -1, jnp.int32).at[
+        flat_e, jnp.minimum(slot_pos, cap - 1)].set(
+        jnp.where(valid, tok_ids, -1), mode="drop")
+    occupied = table >= 0
+
+    if expert_parallel:
+        tp_i = jax.lax.axis_index(tp_axis)
+        e_loc = w_gate.shape[0]
+        local_table = jax.lax.dynamic_slice_in_dim(table, tp_i * e_loc, e_loc, 0)
+        local_occ = jax.lax.dynamic_slice_in_dim(occupied, tp_i * e_loc, e_loc, 0)
+    else:
+        local_table, local_occ = table, occupied
+        e_loc = e
+
+    xin = x[jnp.maximum(local_table, 0)]                           # [E_loc, C, D]
+    xin = xin * local_occ[..., None].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", xin, w_up)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down)                    # [E_loc, C, D]
+
+    # combine: route each slot's output back to its token, weighted
+    if expert_parallel:
+        full = jnp.zeros((e, cap, d), out.dtype)
+        out_full = jax.lax.dynamic_update_slice_in_dim(
+            full, out, tp_i * e_loc, 0)
+    else:
+        out_full = out
+    slot_out = out_full[flat_e, jnp.minimum(slot_pos, cap - 1)]    # [T*k, D]
+    slot_out = slot_out * valid[:, None].astype(out.dtype)
+    y = jnp.einsum("tkd,tk->td", slot_out.reshape(t, k, d),
+                   weights.astype(out.dtype))
+    y = jax.lax.psum(y, tp_axis)
+
+    # load-balance auxiliary loss (Switch-style), for training metrics
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    ce = jnp.mean(onehot.reshape(t, k, e).sum(1).astype(jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, ctx):
+    """x [B, S, D] -> (y, aux_loss). ctx: ModelCtx with mesh/axes."""
+    b, s, d = x.shape
+    ep = (cfg.n_experts % ctx.tp_size == 0) and ctx.tp_size > 1
+    dp_axes = ctx.dp_axes
+    xf = x.reshape(b * s, d)
+
+    def body(xl, wg, w1, w2, w3):
+        y, aux = _moe_local(xl, wg, w1, w2, w3, cfg=cfg,
+                            tp_axis=ctx.tp_axis, expert_parallel=ep)
+        return y, jax.lax.pmean(aux, dp_axes if len(dp_axes) > 1 else dp_axes[0])
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    if ep:
+        wspec1 = P(ctx.tp_axis, None, None)
+        wspec2 = P(ctx.tp_axis, None, None)
+    else:
+        wspec1 = P(None, None, ctx.tp_axis)
+        wspec2 = P(None, ctx.tp_axis, None)
+    y, aux = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(dp, None), P(None, None), wspec1, wspec1, wspec2),
+        out_specs=(P(dp, None), P()),
+        check_vma=False,
+    )(xf, p["wg"], p["w_gate"], p["w_up"], p["w_down"])
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x)
+    return y, aux

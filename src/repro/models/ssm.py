@@ -1,0 +1,241 @@
+"""Recurrent sequence mixers: gated linear attention chunk-scan (the shared
+TPU-native primitive), mLSTM (xLSTM matrix memory), sLSTM (xLSTM scalar
+memory, truly recurrent), and Mamba-style SSD heads (Hymba).
+
+Hardware adaptation: mLSTM/Mamba recurrences are computed in **chunkwise
+parallel form** — within a chunk, decay-weighted attention on the MXU;
+across chunks, a `lax.scan` carries the [dk, dv] matrix state. This is the
+standard SSD/GLA duality and is what makes these layers train at matmul
+throughput on TPU while keeping O(1)-state decode (the reason these archs
+run the long_500k shape)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDesc
+
+
+# ---------------------------------------------------------------------------
+# GLA chunk scan: y_t = (q_t / z_t) · Σ_{u≤t} (∏_{j=u+1..t} f_j) k_u v_uᵀ
+# ---------------------------------------------------------------------------
+
+def gla_chunk_scan(q, k, v, log_f, state0=None, *, chunk: int = 256,
+                   normalize: bool = True):
+    """q,k [B,S,H,dk], v [B,S,H,dv], log_f [B,S,H] (≤0 decay logs).
+
+    Returns (y [B,S,H,dv], final state [B,H,dk,dv(+1)]).
+    If normalize, a ones-column is appended to v to carry the xLSTM
+    normalizer n; outputs are divided by max(|q·n|, 1)."""
+    b, s, h, dk = q.shape
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0
+    n_chunks = s // c
+    qc = jnp.moveaxis(q.reshape(b, n_chunks, c, h, dk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, c, h, dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, c, h, dv), 1, 0)
+    fc = jnp.moveaxis(log_f.reshape(b, n_chunks, c, h), 1, 0)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(state, inputs):
+        qi, ki, vi, fi = inputs                  # [B,c,H,*]
+        cum = jnp.cumsum(fi.astype(jnp.float32), axis=1)       # [B,c,H]
+        tot = cum[:, -1:]                                       # [B,1,H]
+        # intra-chunk decay-weighted attention (causal)
+        qd = qi.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        kd = ki.astype(jnp.float32) * jnp.exp(-cum)[..., None]
+        att = jnp.einsum("bqhd,bkhd->bhqk", qd, kd)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        att = jnp.where(causal[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhqk,bkhv->bqhv", att, vi.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum("bqhd,bhdv->bqhv", qd, state)
+        # state update
+        kdec = ki.astype(jnp.float32) * jnp.exp(tot - cum)[..., None]
+        state = jnp.exp(tot)[:, 0, :, None, None] * state + \
+            jnp.einsum("bkhd,bkhv->bhdv", kdec, vi.astype(jnp.float32))
+        return state, y_intra + y_inter
+
+    state, ys = jax.lax.scan(step, state0, (qc, kc, vc, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv)
+    if normalize:
+        n = y[..., -1:]
+        y = y[..., :-1] / jnp.maximum(jnp.abs(n), 1.0)
+    return y.astype(q.dtype), state
+
+
+def gla_decode_step(q1, k1, v1, log_f1, state, *, normalize: bool = True):
+    """One-token recurrent update. q1/k1 [B,1,H,dk], v1 [B,1,H,dv],
+    log_f1 [B,1,H], state [B,H,dk,dv(+1)]. Returns (y [B,1,H,dv], state)."""
+    if normalize:
+        v1 = jnp.concatenate([v1, jnp.ones(v1.shape[:-1] + (1,), v1.dtype)], -1)
+    f = jnp.exp(log_f1.astype(jnp.float32))[:, 0, :, None, None]   # [B,H,1,1]
+    kv = jnp.einsum("bhd,bhv->bhdv", k1[:, 0].astype(jnp.float32),
+                    v1[:, 0].astype(jnp.float32))
+    state = f * state + kv
+    y = jnp.einsum("bhd,bhdv->bhv", q1[:, 0].astype(jnp.float32), state)
+    if normalize:
+        n = y[..., -1:]
+        y = y[..., :-1] / jnp.maximum(jnp.abs(n), 1.0)
+    return y[:, None].astype(q1.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory + exponential gating
+# ---------------------------------------------------------------------------
+
+def mlstm_desc(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": ParamDesc((d, h * hd), tp=1, fsdp=0),
+        "wk": ParamDesc((d, h * hd), tp=1, fsdp=0),
+        "wv": ParamDesc((d, h * hd), tp=1, fsdp=0),
+        "wi": ParamDesc((d, h)),        # input gate (exp)
+        "wf": ParamDesc((d, h)),        # forget gate
+        "wo_gate": ParamDesc((d, h * hd), tp=1, fsdp=0),
+        "wo": ParamDesc((h * hd, d), tp=0, fsdp=1),
+    }
+
+
+def _mlstm_qkvgates(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd)
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    log_f = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))  # [B,S,H]
+    i_gate = jnp.exp(jnp.minimum((x @ p["wi"]).astype(jnp.float32), 8.0))
+    k = k * i_gate[..., None].astype(k.dtype)   # fold input gate into writes
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return q, k, v, log_f, o
+
+
+def mlstm_train(p, x, cfg: ModelConfig, *, chunk: int = 256):
+    b, s, _ = x.shape
+    q, k, v, log_f, o = _mlstm_qkvgates(p, x, cfg)
+    y, _ = gla_chunk_scan(q, k, v, log_f, chunk=chunk)
+    y = y.reshape(b, s, -1) * o
+    return y @ p["wo"]
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig):
+    b = x.shape[0]
+    q, k, v, log_f, o = _mlstm_qkvgates(p, x, cfg)
+    y, state = gla_decode_step(q, k, v, log_f, state)
+    y = y.reshape(b, 1, -1) * o
+    return y @ p["wo"], state
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    return (batch, cfg.n_heads, cfg.hd, cfg.hd + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, h_{t-1} recurrence — lax.scan over time
+# ---------------------------------------------------------------------------
+
+def slstm_desc(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wx": ParamDesc((d, h * hd * 4), tp=1, fsdp=0),    # i,f,z,o from x
+        "wr": ParamDesc((h, hd, hd * 4), tp=0, fsdp=1),    # block-diag recurrence
+        "wo": ParamDesc((h * hd, d), tp=0, fsdp=1),
+    }
+
+
+def slstm_train(p, x, cfg: ModelConfig, state0=None, valid=None):
+    """valid: optional [S] bool — False positions write nothing (i=0) and
+    keep state (f=1); used by padded-prefill serving."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    gx = (x @ p["wx"]).reshape(b, s, h, hd * 4)
+
+    if state0 is None:
+        state0 = slstm_init_state(cfg, b, h_dtype=x.dtype)
+
+    if valid is None:
+        valid = jnp.ones((s,), bool)
+
+    def step(carry, inputs):
+        gxt, v_t = inputs
+        c, n, hprev, m = carry                 # each [B,H,hd]
+        g = gxt + jnp.einsum("bhd,hdf->bhf", hprev, p["wr"])
+        gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        log_i = jnp.where(v_t, jnp.minimum(gi, 8.0), -30.0)
+        log_f = jnp.where(v_t, jax.nn.log_sigmoid(gf), 0.0)
+        m_new = jnp.maximum(log_f + m, log_i)
+        c = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * jnp.tanh(gz)
+        n = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+        hnew = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        hkeep = jnp.where(v_t, hnew.astype(gxt.dtype), hprev)
+        return (c, n, hkeep, m_new), hnew
+
+    carry, ys = jax.lax.scan(step, state0,
+                             (jnp.moveaxis(gx, 1, 0), valid))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * hd).astype(x.dtype)
+    return y @ p["wo"], carry
+
+
+def slstm_decode(p, x, state, cfg: ModelConfig):
+    y, state = slstm_train(p, x, cfg, state0=state)
+    return y, state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, h_dtype=jnp.float32):
+    z = jnp.zeros((batch, cfg.n_heads, cfg.hd), jnp.float32)
+    return (z, z, z.astype(h_dtype), z - 10.0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style SSD heads (Hymba): scalar-decay GLA with small state dim
+# ---------------------------------------------------------------------------
+
+def mamba_desc(cfg: ModelConfig) -> dict:
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.ssm_state
+    hd = cfg.hd
+    return {
+        "w_in": ParamDesc((d, h * hd), tp=1, fsdp=0),     # values (x path)
+        "w_b": ParamDesc((d, h * n)),                      # input proj B (keys)
+        "w_c": ParamDesc((d, h * n)),                      # output proj C (queries)
+        "w_dt": ParamDesc((d, h)),                         # per-head step size
+        "a_log": ParamDesc((h,), zero=True),               # per-head decay base
+        "w_out": ParamDesc((h * hd, d), tp=0, fsdp=1),
+    }
+
+
+def _mamba_qkv(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, n, hd = cfg.n_heads, cfg.ssm_state, cfg.hd
+    v = (x @ p["w_in"]).reshape(b, s, h, hd)
+    kk = (x @ p["w_b"]).reshape(b, s, h, n)
+    q = (x @ p["w_c"]).reshape(b, s, h, n)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32))      # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [H] < 0
+    log_f = dt * a[None, None, :]
+    v = v * dt[..., None].astype(v.dtype)      # Euler-step input scaling
+    return q, kk, v, log_f
+
+
+def mamba_train(p, x, cfg: ModelConfig, *, chunk: int = 256):
+    b, s, _ = x.shape
+    q, k, v, log_f = _mamba_qkv(p, x, cfg)
+    y, _ = gla_chunk_scan(q, k, v, log_f, chunk=chunk, normalize=False)
+    return y.reshape(b, s, -1) @ p["w_out"]
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    b = x.shape[0]
+    q, k, v, log_f = _mamba_qkv(p, x, cfg)
+    y, state = gla_decode_step(q, k, v, log_f, state, normalize=False)
+    return y.reshape(b, 1, -1) @ p["w_out"], state
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int):
+    return (batch, cfg.n_heads, cfg.ssm_state, cfg.hd)

@@ -1,0 +1,8 @@
+"""Optimizers and distributed-optimization tricks (pytree-generic)."""
+
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = ["AdamConfig", "adam_init", "adam_update", "cosine_schedule",
+           "linear_warmup_cosine", "clip_by_global_norm"]

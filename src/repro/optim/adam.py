@@ -1,0 +1,133 @@
+"""AdamW on arbitrary pytrees — shared by the LM trainer and the router MLPs.
+
+Supports optional 8-bit moment quantization (`compress=True`): moments are
+stored as int8 **in the parameter's own shape** with per-block f32 scales
+along the last axis, so the optimizer state inherits the parameter's
+TP/FSDP sharding exactly — an 8×(+scales) optimizer-memory saving that is
+one of the framework's distributed-optimization tricks (DESIGN.md §5).
+Dequantize → update → requantize happens inside the jitted step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDesc, is_desc, map_descs
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    compress: bool = False       # 8-bit moment storage
+    block: int = 256             # quantization block size (last axis)
+
+
+def _block_of(n: int, block: int) -> int:
+    return block if (n % block == 0 and n >= block) else n
+
+
+def _quantize(x: jax.Array, block: int):
+    """x [*, n] -> (q int8 [*, n], scale f32 [*, n/blk])."""
+    n = x.shape[-1]
+    blk = _block_of(n, block)
+    nb = n // blk
+    xb = x.reshape(x.shape[:-1] + (nb, blk))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale[..., 0].astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, block: int):
+    n = q.shape[-1]
+    blk = _block_of(n, block)
+    nb = n // blk
+    qb = q.reshape(q.shape[:-1] + (nb, blk)).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(q.shape)
+
+
+# ---- state ------------------------------------------------------------------
+
+def adam_init(params: Any, cfg: AdamConfig):
+    def zeros_like(p):
+        if cfg.compress:
+            q, s = _quantize(jnp.zeros(p.shape, jnp.float32), cfg.block)
+            return {"q": q, "s": s}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros_like, params),
+        "nu": jax.tree.map(zeros_like, params),
+    }
+
+
+def adam_state_desc(param_desc: Any, cfg: AdamConfig, param_dtype=None):
+    """ParamDesc tree for the optimizer state (for dry-run specs)."""
+    del param_dtype
+
+    def moment(d: ParamDesc):
+        if not cfg.compress:
+            return ParamDesc(d.shape, jnp.float32, tp=d.tp, fsdp=d.fsdp)
+        n = d.shape[-1]
+        blk = _block_of(n, cfg.block)
+        s_shape = d.shape[:-1] + (n // blk,)
+        last = len(d.shape) - 1
+
+        def keep(ax):
+            return None if ax is None or (ax == last and n // blk != n) else ax
+        return {
+            "q": ParamDesc(d.shape, jnp.int8, tp=d.tp, fsdp=d.fsdp),
+            "s": ParamDesc(s_shape, jnp.float32,
+                           tp=d.tp if d.tp != last else None,
+                           fsdp=d.fsdp if d.fsdp != last else None),
+        }
+
+    mu = map_descs(moment, param_desc)
+    return {"step": ParamDesc((), jnp.int32), "mu": mu,
+            "nu": map_descs(moment, param_desc)}
+
+
+def adam_update(grads: Any, state: Any, params: Any, cfg: AdamConfig,
+                lr_scale=1.0):
+    """Returns (new_params, new_state). Pure/jittable."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        if cfg.compress:
+            mu_f = _dequantize(mu["q"], mu["s"], cfg.block)
+            nu_f = _dequantize(nu["q"], nu["s"], cfg.block)
+        else:
+            mu_f, nu_f = mu, nu
+        mu_f = cfg.b1 * mu_f + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu_f + (1 - cfg.b2) * (g * g)
+        update = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (update + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.compress:
+            mq, ms = _quantize(mu_f, cfg.block)
+            nq, ns = _quantize(nu_f, cfg.block)
+            return new_p.astype(p.dtype), {"q": mq, "s": ms}, {"q": nq, "s": ns}
+        return new_p.astype(p.dtype), mu_f, nu_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_params, {"step": step, "mu": new_mu, "nu": new_nu}

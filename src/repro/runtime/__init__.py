@@ -1,0 +1,3 @@
+from repro.runtime.fault import StepMonitor, PreemptionHandler, elastic_reshard
+
+__all__ = ["StepMonitor", "PreemptionHandler", "elastic_reshard"]

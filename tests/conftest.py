@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+from repro.ann.dataset import ANNDataset
+from repro.data.ann_synth import DatasetSpec, synthesize, make_queries
+from repro.ann.predicates import Predicate
+
+
+TINY_SPEC = DatasetSpec("tiny", 600, 24, 40, 6, 8, 1.3, 2.0, 0.5, 0.3, 7)
+
+
+@pytest.fixture(scope="session")
+def tiny_ds() -> ANNDataset:
+    return synthesize(TINY_SPEC)
+
+
+@pytest.fixture(scope="session")
+def tiny_queries(tiny_ds):
+    return {pred: make_queries(tiny_ds, pred, 25, seed=3)
+            for pred in (Predicate.EQUALITY, Predicate.AND, Predicate.OR)}
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,65 @@
+"""Feature extraction: the 22-feature set, LID estimator, feature matrix."""
+
+import numpy as np
+import pytest
+
+from repro.ann.predicates import Predicate
+from repro.core import features as F
+
+
+def test_feature_inventory():
+    assert len(F.QUERY_FEATURES) == 6
+    assert len(F.DATASET_FEATURES) == 15
+    assert len(F.ALL_FEATURES) == 22
+    assert F.MINIMAL_FEATURES == ["selectivity", "lid_mean", "pred"]
+
+
+def test_lid_mle_gaussian_scales_with_dim():
+    rng = np.random.default_rng(0)
+    lids = []
+    for d in (4, 16):
+        x = rng.normal(size=(4000, d)).astype(np.float32)
+        r = F._knn_dists(x, x[:128], 20)
+        lids.append(float(np.mean(F.lid_mle(r))))
+    assert lids[1] > lids[0] > 1.0
+
+
+def test_dataset_features_sane(tiny_ds):
+    dsf = F.dataset_features(tiny_ds)
+    v = dsf.values
+    assert v["size"] == tiny_ds.n
+    assert v["dim"] == tiny_ds.dim
+    assert v["label_cardinality"] == tiny_ds.universe
+    assert v["n_label_combinations"] == tiny_ds.n_groups
+    assert v["lid_mean"] > 0 and np.isfinite(v["lid_mean"])
+    assert v["rc_median"] >= 1.0
+    assert v["label_entropy"] > 0
+    assert 0 < v["avg_labels_per_vector"] < 10
+    assert np.isfinite(v["distribution_factor"])
+    assert (dsf.label_freq >= 0).all() and dsf.label_freq.max() <= 1.0
+
+
+def test_query_features_selectivity(tiny_ds, tiny_queries):
+    dsf = F.dataset_features(tiny_ds)
+    qs = tiny_queries[Predicate.AND]
+    for i in range(5):
+        qf = F.query_features(tiny_ds, dsf, qs.bitmaps[i], Predicate.AND)
+        assert qf["selectivity"] == pytest.approx(
+            tiny_ds.selectivity(qs.bitmaps[i], Predicate.AND))
+        assert qf["min_label_freq"] <= qf["mean_label_freq"] \
+            <= qf["max_label_freq"]
+        # co-occurrence == AND selectivity by definition
+        assert qf["label_cooccurrence"] == pytest.approx(qf["selectivity"])
+
+
+def test_feature_matrix_shapes(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.OR]
+    x = F.feature_matrix(tiny_ds, qs.bitmaps, Predicate.OR,
+                         F.MINIMAL_FEATURES)
+    # selectivity + lid_mean + 3-way one-hot
+    assert x.shape == (qs.q, 5)
+    assert (x[:, 2:5].sum(1) == 1).all()
+    x_all = F.feature_matrix(tiny_ds, qs.bitmaps[:4], Predicate.OR,
+                             F.NUMERIC_FEATURES)
+    assert x_all.shape == (4, 21)
+    assert np.isfinite(x_all).all()

@@ -1,0 +1,100 @@
+"""Pallas kernel validation (interpret mode) against the jnp oracles:
+shape/dtype sweeps + hypothesis-random bitmaps + edge cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand_case(rng, q, n, d, w, dtype=np.float32, label_density=0.1):
+    qv = rng.normal(size=(q, d)).astype(dtype)
+    base = rng.normal(size=(n, d)).astype(dtype)
+    norms = (base.astype(np.float64) ** 2).sum(1).astype(np.float32)
+    bm = (rng.random((n, w, 32)) < label_density)
+    bm = (bm * (1 << np.arange(32, dtype=np.uint64))).sum(-1).astype(np.uint32)
+    qb = (rng.random((q, w, 32)) < 0.05)
+    qb = (qb * (1 << np.arange(32, dtype=np.uint64))).sum(-1).astype(np.uint32)
+    return (jnp.asarray(qv), jnp.asarray(qb), jnp.asarray(base),
+            jnp.asarray(norms), jnp.asarray(bm))
+
+
+def _same_sets(ids_a, ids_b):
+    for i in range(ids_a.shape[0]):
+        a = set(np.asarray(ids_a[i][ids_a[i] >= 0]).tolist())
+        b = set(np.asarray(ids_b[i][ids_b[i] >= 0]).tolist())
+        if a != b:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("q,n,d,w", [
+    (8, 1000, 32, 1), (16, 2048, 64, 4), (4, 300, 96, 2), (32, 4096, 128, 8),
+])
+@pytest.mark.parametrize("pred", [0, 1, 2])
+def test_masked_topk_shapes(q, n, d, w, pred, rng):
+    case = _rand_case(rng, q, n, d, w)
+    ids, dists = ops.masked_topk(*case, pred=pred, k=10)
+    rids, rdists = ref.masked_topk_ref(*case, pred=pred, k=10)
+    assert ids.shape == (q, 10)
+    assert _same_sets(ids, rids)
+    # distances of valid hits must match
+    valid = np.asarray(ids) >= 0
+    np.testing.assert_allclose(np.asarray(dists)[valid],
+                               np.asarray(rdists)[np.asarray(rids) >= 0],
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_masked_topk_dtypes(dtype, rng):
+    case = _rand_case(rng, 8, 1024, 64, 2, dtype=np.float32)
+    if dtype == jnp.bfloat16:
+        case = (case[0].astype(jnp.bfloat16), case[1],
+                case[2].astype(jnp.bfloat16), case[3], case[4])
+    ids, _ = ops.masked_topk(*case, pred=2, k=5)
+    rids, _ = ref.masked_topk_ref(*case, pred=2, k=5)
+    assert _same_sets(ids, rids)
+
+
+def test_masked_topk_no_matches(rng):
+    qv, qb, base, norms, bm = _rand_case(rng, 4, 512, 16, 1)
+    bm = jnp.zeros_like(bm)          # nothing matches AND/OR
+    qb = jnp.ones_like(qb)
+    ids, dists = ops.masked_topk(qv, qb, base, norms, bm, pred=1, k=10)
+    assert (np.asarray(ids) == -1).all()
+
+
+def test_masked_topk_fewer_than_k(rng):
+    qv, qb, base, norms, bm = _rand_case(rng, 4, 512, 16, 1)
+    bm = jnp.zeros_like(bm).at[:3].set(jnp.asarray(qb[0])[None, :])
+    qb = jnp.tile(qb[:1], (4, 1))
+    ids, _ = ops.masked_topk(qv, qb, base, norms, bm, pred=0, k=10)
+    assert ((np.asarray(ids) >= 0).sum(1) == 3).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(50, 400), st.integers(0, 2))
+def test_selectivity_matches_ref(q, n, pred):
+    rng = np.random.default_rng(q * 1000 + n)
+    _, qb, _, _, bm = _rand_case(rng, q, n, 8, 2)
+    got = ops.selectivity(qb, bm, pred=pred)
+    want = ref.selectivity_ref(qb, bm, pred=pred)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_selectivity_empty_query_equality(rng):
+    _, _, _, _, bm = _rand_case(rng, 2, 256, 8, 2)
+    qb = jnp.zeros((2, 2), jnp.uint32)
+    got = ops.selectivity(qb, bm, pred=0)
+    want = ref.selectivity_ref(qb, bm, pred=0)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_kernel_block_shape_sweep(rng):
+    case = _rand_case(rng, 16, 2048, 64, 2)
+    want, _ = ref.masked_topk_ref(*case, pred=1, k=10)
+    for bq, bn in [(8, 256), (16, 1024), (16, 2048)]:
+        ids, _ = ops.masked_topk(*case, pred=1, k=10, bq=bq, bn=bn)
+        assert _same_sets(ids, want), (bq, bn)

@@ -1,0 +1,79 @@
+"""Bitmap packing + predicate semantics (hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ann import labels as lb
+from repro.ann.predicates import Predicate, eval_predicate, eval_predicate_np
+
+label_sets = st.sets(st.integers(0, 99), max_size=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(label_sets)
+def test_pack_unpack_roundtrip(ls):
+    bm = lb.pack_one(ls, 100)
+    assert lb.unpack_one(bm) == frozenset(ls)
+
+
+@settings(max_examples=30, deadline=None)
+@given(label_sets, label_sets)
+def test_predicate_semantics(li, lq):
+    bi = lb.pack_one(li, 100)[None, :]
+    bq = lb.pack_one(lq, 100)[None, :]
+    eq = bool(eval_predicate_np(bi, bq, Predicate.EQUALITY)[0])
+    an = bool(eval_predicate_np(bi, bq, Predicate.AND)[0])
+    orr = bool(eval_predicate_np(bi, bq, Predicate.OR)[0])
+    assert eq == (set(li) == set(lq))
+    assert an == set(lq).issubset(set(li))
+    assert orr == bool(set(lq) & set(li))
+    # equality implies containment; containment of nonempty implies overlap
+    if eq:
+        assert an
+    if an and lq:
+        assert orr
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(label_sets, min_size=1, max_size=10), label_sets)
+def test_jnp_matches_np(sets, lq):
+    import jax.numpy as jnp
+
+    base = lb.pack_label_sets(sets, 100)
+    q = lb.pack_one(lq, 100)
+    for pred in Predicate:
+        a = eval_predicate_np(base, q[None, :], pred)
+        b = np.asarray(eval_predicate(jnp.asarray(base), jnp.asarray(q), pred))
+        assert (a == b).all()
+
+
+def test_popcount():
+    import jax.numpy as jnp
+
+    bm = lb.pack_label_sets([{1, 2, 3}, set(), {0, 99}], 100)
+    counts = np.asarray(lb.popcount(jnp.asarray(bm)))
+    assert counts.tolist() == [3, 0, 2]
+
+
+def test_pack_out_of_range():
+    with pytest.raises(ValueError):
+        lb.pack_one([100], 100)
+
+
+def test_group_structure(tiny_ds):
+    # group-sorted layout: every vector's bitmap equals its group's bitmap
+    for g in range(tiny_ds.n_groups):
+        s, l = int(tiny_ds.group_start[g]), int(tiny_ds.group_size[g])
+        assert (tiny_ds.bitmaps[s:s + l] == tiny_ds.group_bitmaps[g]).all()
+    assert int(tiny_ds.group_size.sum()) == tiny_ds.n
+
+
+def test_selectivity_matches_bruteforce(tiny_ds, tiny_queries):
+    from repro.ann.predicates import Predicate
+
+    for pred, qs in tiny_queries.items():
+        for i in range(5):
+            sel = tiny_ds.selectivity(qs.bitmaps[i], pred)
+            mask = tiny_ds.matching_mask(qs.bitmaps[i], pred)
+            assert sel == pytest.approx(mask.mean())

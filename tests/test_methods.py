@@ -1,0 +1,84 @@
+"""Filtered-ANN method invariants on the tiny dataset."""
+
+import numpy as np
+import pytest
+
+from repro.ann import bench
+from repro.ann.dataset import recall_at_k
+from repro.ann.methods import ALL_METHODS, CANDIDATE_METHODS
+from repro.ann.predicates import Predicate, PREDICATES
+
+
+@pytest.mark.parametrize("pred", PREDICATES)
+def test_prefilter_recall_is_one(tiny_ds, tiny_queries, pred):
+    m = ALL_METHODS["prefilter"]
+    r = bench.run_method(tiny_ds, m, m.param_settings()[0], tiny_queries[pred])
+    assert r.mean_recall == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("name", list(CANDIDATE_METHODS))
+@pytest.mark.parametrize("pred", PREDICATES)
+def test_results_satisfy_predicate(tiny_ds, tiny_queries, name, pred):
+    """Every returned id must satisfy the query predicate (no false hits)."""
+    m = CANDIDATE_METHODS[name]
+    qs = tiny_queries[pred]
+    r = bench.run_method(tiny_ds, m, m.param_settings()[-1], qs)
+    for qi in range(qs.q):
+        mask = tiny_ds.matching_mask(qs.bitmaps[qi], pred)
+        for vid in r.ids[qi]:
+            if vid >= 0:
+                assert mask[vid], (name, pred, qi, vid)
+
+
+@pytest.mark.parametrize("name", list(CANDIDATE_METHODS))
+def test_no_duplicate_results(tiny_ds, tiny_queries, name):
+    m = CANDIDATE_METHODS[name]
+    qs = tiny_queries[Predicate.OR]
+    r = bench.run_method(tiny_ds, m, m.param_settings()[-1], qs)
+    for qi in range(qs.q):
+        ids = r.ids[qi][r.ids[qi] >= 0]
+        assert len(ids) == len(set(ids.tolist())), (name, qi)
+
+
+def test_labelnav_equality_exact(tiny_ds, tiny_queries):
+    """The UNG analogue is exact on Equality (its structural sweet spot)."""
+    m = CANDIDATE_METHODS["labelnav"]
+    r = bench.run_method(tiny_ds, m, m.param_settings()[0],
+                         tiny_queries[Predicate.EQUALITY])
+    assert r.mean_recall == pytest.approx(1.0)
+
+
+def test_param_settings_monotone_recall(tiny_ds, tiny_queries):
+    """Bigger search budgets should not reduce recall materially."""
+    qs = tiny_queries[Predicate.AND]
+    for name in ("postfilter", "ivf_gamma", "fvamana"):
+        m = CANDIDATE_METHODS[name]
+        settings = m.param_settings()
+        lo = bench.run_method(tiny_ds, m, settings[0], qs).mean_recall
+        hi = bench.run_method(tiny_ds, m, settings[-1], qs).mean_recall
+        assert hi >= lo - 0.05, (name, lo, hi)
+
+
+def test_recall_at_k_contract():
+    gt = np.array([[1, 2, -1, -1], [5, 6, 7, 8]], dtype=np.int32)
+    res = np.array([[2, 9, 9, 9], [5, 6, 7, 8]], dtype=np.int32)
+    rec = recall_at_k(res, gt)
+    assert rec[0] == pytest.approx(0.5)   # 1 of min(k=4,|TopK|=2)
+    assert rec[1] == pytest.approx(1.0)
+
+
+def test_empty_result_query(tiny_ds):
+    """A label set absent from the dataset gives zero Equality matches."""
+    from repro.ann import labels as lb
+    from repro.ann.dataset import QuerySet
+
+    qbm = lb.pack_one([0, 1, 2, 3, 4, 5, 6, 7], tiny_ds.universe)[None, :]
+    if tiny_ds.group_id_of_bitmap(qbm[0]) >= 0:
+        pytest.skip("label set unexpectedly present")
+    qs = QuerySet(dataset="tiny", pred=Predicate.EQUALITY,
+                  vectors=tiny_ds.vectors[:1].copy(), bitmaps=qbm,
+                  ground_truth=np.full((1, 10), -1, np.int32), k=10)
+    m = CANDIDATE_METHODS["labelnav"]
+    r = bench.run_method(tiny_ds, m, m.param_settings()[0], qs)
+    assert (r.ids == -1).all()
+    assert r.mean_recall == pytest.approx(1.0)   # vacuous query

@@ -1,0 +1,128 @@
+"""Router logic: benchmark table selection, Algorithm 2 (incl. fallback),
+RuleRouter tree, MLP-Reg convergence, end-to-end routing quality."""
+
+import numpy as np
+import pytest
+
+from repro.ann.predicates import Predicate
+from repro.core.mlp import Scaler, train_mlp, predict, params_from_numpy, params_to_numpy
+from repro.core.router import MLRouter
+from repro.core.rule_router import RuleRouter
+from repro.core.table import BenchmarkTable
+
+
+def _toy_table():
+    t = BenchmarkTable.new()
+    # method A: fast but capped recall; method B: slower, high recall
+    t.add("ds", 1, "A", "p1", recall=0.80, qps=1000)
+    t.add("ds", 1, "A", "p2", recall=0.92, qps=400)
+    t.add("ds", 1, "B", "p1", recall=0.95, qps=300)
+    t.add("ds", 1, "B", "p2", recall=0.99, qps=100)
+    return t
+
+
+def test_table_best_qps_setting():
+    t = _toy_table()
+    assert t.best_qps_setting("ds", 1, "A", 0.9)[0] == "p2"
+    assert t.best_qps_setting("ds", 1, "A", 0.5)[0] == "p1"
+    assert t.best_qps_setting("ds", 1, "A", 0.95) is None
+    assert t.max_recall_setting("ds", 1, "B")[0] == "p2"
+
+
+def test_table_roundtrip(tmp_path):
+    t = _toy_table()
+    p = str(tmp_path / "b.json")
+    t.save(p)
+    t2 = BenchmarkTable.load(p)
+    assert t2.entries == t.entries
+
+
+def _router_with(models=None):
+    return MLRouter(feature_names=["selectivity", "lid_mean", "pred"],
+                    methods=["A", "B"], models=models or {},
+                    scaler=Scaler(np.zeros(5), np.ones(5)),
+                    table=_toy_table())
+
+
+def test_algorithm2_picks_max_qps_passing():
+    r = _router_with()
+    r_hat = np.array([[0.95, 0.99], [0.5, 0.96], [0.3, 0.2]])
+    dec = r.route_from_predictions(r_hat, "ds", Predicate.AND, t=0.9)
+    # q0: both pass -> A (higher qps at its T-setting p2: 400 vs B 300)
+    assert dec[0] == ("A", "p2")
+    # q1: only B passes
+    assert dec[1] == ("B", "p1")
+    # q2: none pass -> fallback argmax r_hat = A, best setting meeting T
+    assert dec[2][0] == "A"
+
+
+def test_algorithm2_fallback_max_recall():
+    r = _router_with()
+    r_hat = np.array([[0.1, 0.05]])
+    dec = r.route_from_predictions(r_hat, "ds", Predicate.AND, t=0.999)
+    # no setting of A meets T=0.999 -> max-recall setting p2
+    assert dec[0] == ("A", "p2")
+
+
+def test_rule_router_tree():
+    rr = RuleRouter(lid_hi=40, card_lo=100)
+    assert rr.route(Predicate.EQUALITY, 10, 1000) == "labelnav"
+    assert rr.route(Predicate.AND, 50, 1000) == "labelnav"
+    assert rr.route(Predicate.AND, 10, 50) == "labelnav"
+    assert rr.route(Predicate.AND, 10, 1000) == "sieve"
+    assert rr.route(Predicate.OR, 50, 50) == "labelnav"
+    assert rr.route(Predicate.OR, 10, 50) == "postfilter"
+
+
+def test_mlp_reg_convergence():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(512, 5)).astype(np.float32)
+    y = (0.5 * x[:, 0] - 0.2 * x[:, 1] ** 2).astype(np.float32)
+    params = train_mlp(x, y, hidden=(64, 32), epochs=150, seed=0)
+    pred = np.asarray(predict(params, x))[:, 0]
+    mse = float(((pred - y) ** 2).mean())
+    assert mse < 0.05, mse
+
+
+def test_mlp_classifier():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(512, 4)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.int32)
+    params = train_mlp(x, y, hidden=(32, 16), n_out=2, classification=True,
+                       epochs=250, seed=0)
+    acc = (np.asarray(predict(params, x)).argmax(1) == y).mean()
+    assert acc > 0.9
+
+
+def test_router_save_load(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 5)).astype(np.float32)
+    models = {m: params_to_numpy(train_mlp(x, x[:, 0], epochs=5))
+              for m in ("A", "B")}
+    r = _router_with(models)
+    p = str(tmp_path / "router.pkl")
+    r.save(p)
+    r2 = MLRouter.load(p)
+    got = r2.predict_recalls_from_features(x)
+    want = r.predict_recalls_from_features(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_router_end_to_end_tiny(tiny_ds, tiny_queries):
+    """Router trained on the tiny dataset routes at least as well as the
+    mean single method on it."""
+    from repro.ann.methods import CANDIDATE_METHODS
+    from repro.core import training as T
+    from repro.ann.dataset import recall_at_k
+
+    coll = T.collect({"tiny": tiny_ds}, CANDIDATE_METHODS, n_queries=25,
+                     seed=3, verbose=False)
+    router = T.train_router(coll, coll.table, epochs=60)
+    qs = tiny_queries[Predicate.AND]
+    ids, dec = router.route_and_search(
+        tiny_ds, qs.vectors, qs.bitmaps, Predicate.AND, 10, 0.9,
+        CANDIDATE_METHODS)
+    rec = recall_at_k(ids, qs.ground_truth).mean()
+    per_method = [coll.cells[("tiny", 1)].recall[m].mean()
+                  for m in T.METHOD_ORDER]
+    assert rec >= np.mean(per_method) - 0.05
