@@ -33,10 +33,10 @@ def _fused(qv, qb, base, norms, bm):
     return ids
 
 
-def run(verbose=True):
+def run(verbose=True, sizes=(4096, 16384, 65536)):
     rng = np.random.default_rng(0)
     rows = []
-    for n in (4096, 16384, 65536):
+    for n in sizes:
         q, d, w = 64, 64, 4
         qv = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
         base = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))

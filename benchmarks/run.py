@@ -3,13 +3,42 @@ roofline report. Prints ``name,us_per_call,derived`` CSV summary lines and
 writes per-harness CSVs under artifacts/bench/.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,pareto,...]
+  PYTHONPATH=src python -m benchmarks.run --smoke
+
+``--smoke`` runs the kernel and routing-latency harnesses at tiny sizes
+(synthetic router, no artifact build) and writes a ``BENCH_kernels.json``
+summary at the repo root so successive PRs have a perf trajectory to
+compare against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import traceback
+
+
+def run_smoke() -> None:
+    from benchmarks import bench_kernels, bench_routing_latency
+
+    print("# == smoke: kernels (tiny sizes) ==", flush=True)
+    rows_k, _ = bench_kernels.run(verbose=True, sizes=(1024, 4096))
+    print("# == smoke: routing latency (synthetic router) ==", flush=True)
+    rows_l, _ = bench_routing_latency.run(verbose=True, q_batch=256,
+                                          smoke=True)
+    summary = {
+        "kernels": rows_k,
+        "routing_latency": rows_l,
+        "routing_speedup_median": float(
+            sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"smoke summary -> {path}", flush=True)
 
 
 def main() -> None:
@@ -17,7 +46,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,pareto,fig4,table5,table6,"
                          "table7,latency,kernels,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size kernels+latency run, writes "
+                         "BENCH_kernels.json at the repo root")
     args = ap.parse_args()
+
+    if args.smoke:
+        run_smoke()
+        return
 
     from benchmarks import (bench_table1, bench_pareto,
                             bench_feature_ablation, bench_featureset_latency,

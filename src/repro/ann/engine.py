@@ -12,7 +12,6 @@
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -36,22 +35,34 @@ class DeviceData:
     group_cnorms: jax.Array     # [G] f32
 
 
-_DEVICE_CACHE: dict[int, DeviceData] = {}
-_ARRAY_CACHE: dict[int, object] = {}
+# Device-data cache keyed by stable content identity (ANNDataset.cache_key)
+# — id() keys can be recycled after garbage collection and would silently
+# serve another dataset's tensors. The array cache pins the host array
+# alongside the device copy for the same reason (a live reference makes
+# the id stable).
+_DEVICE_CACHE: dict[tuple, DeviceData] = {}
+_ARRAY_CACHE: dict[int, tuple] = {}
+
+
+def clear_caches() -> None:
+    """Evict cached device tensors, host-array uploads, and built indexes."""
+    _DEVICE_CACHE.clear()
+    _ARRAY_CACHE.clear()
+    _INDEX_CACHE.clear()
 
 
 def as_device(x):
-    """id-cached np→device conversion (keeps QPS timing free of re-uploads)."""
-    import jax.numpy as _jnp
-
+    """Cached np→device conversion (keeps QPS timing free of re-uploads)."""
     key = id(x)
-    if key not in _ARRAY_CACHE:
-        _ARRAY_CACHE[key] = _jnp.asarray(x)
-    return _ARRAY_CACHE[key]
+    hit = _ARRAY_CACHE.get(key)
+    if hit is None or hit[0] is not x:
+        hit = (x, jnp.asarray(x))
+        _ARRAY_CACHE[key] = hit
+    return hit[1]
 
 
 def device_data(ds: ANNDataset) -> DeviceData:
-    key = id(ds)
+    key = ds.cache_key()
     if key not in _DEVICE_CACHE:
         g = ds.n_groups
         cent = np.zeros((g, ds.dim), dtype=np.float32)

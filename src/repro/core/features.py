@@ -13,12 +13,19 @@ Groups:
                           as a single feature as in the paper).
 
 The final minimal set (paper §6.2): ``selectivity, lid_mean, pred``.
+
+Query-aware features are computed **batched**: `feature_matrix` runs one
+vectorised pass per feature over the whole query batch (selectivity /
+co-occurrence via a single group-table reduction — or the Pallas
+`selectivity` kernel over the device-resident bitmap tensor on TPU — and
+label-frequency stats via masked reductions over `DatasetFeatures.
+label_freq`). `query_features` survives as the scalar per-query reference
+implementation used by the parity tests and latency benchmark.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
 
 import numpy as np
 
@@ -90,13 +97,28 @@ class DatasetFeatures:
     label_freq: np.ndarray      # [U] fraction of vectors carrying each label
 
 
-_DS_FEATURE_CACHE: dict[int, DatasetFeatures] = {}
+# Keyed by stable content identity (ANNDataset.cache_key), not id(): a
+# recycled id() after GC would silently serve a different dataset's features.
+_DS_FEATURE_CACHE: dict[tuple, DatasetFeatures] = {}
+
+
+def clear_feature_cache() -> None:
+    """Evict all cached per-dataset features."""
+    _DS_FEATURE_CACHE.clear()
+
+
+def _unpack_bits(qbms: np.ndarray, universe: int) -> np.ndarray:
+    """[Q, W] uint32 packed bitmaps -> [Q, universe] bool membership."""
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (qbms[:, :, None] >> shifts) & np.uint32(1)   # [Q, W, 32]
+    return bits.astype(bool).reshape(qbms.shape[0], -1)[:, :universe]
 
 
 def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
                      seed: int = 0) -> DatasetFeatures:
-    if id(ds) in _DS_FEATURE_CACHE:
-        return _DS_FEATURE_CACHE[id(ds)]
+    key = ds.cache_key()
+    if key in _DS_FEATURE_CACHE:
+        return _DS_FEATURE_CACHE[key]
     rng = np.random.default_rng(seed)
     n = ds.n
     idx = rng.choice(n, size=min(sample, n), replace=False)
@@ -104,13 +126,10 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
     lid = lid_mle(r)
     rc = r[:, -1] / np.maximum(r[:, 0], 1e-12)
 
-    # label structure
-    label_freq = np.zeros(ds.universe, dtype=np.float64)
+    # label structure: per-label carrier fraction via one group-table pass
     sizes = ds.group_size.astype(np.float64)
-    for g in range(ds.n_groups):
-        for l in lb.unpack_one(ds.group_bitmaps[g]):
-            label_freq[l] += sizes[g]
-    label_freq /= n
+    gbits = _unpack_bits(ds.group_bitmaps, ds.universe)  # [G, U]
+    label_freq = (sizes[:, None] * gbits).sum(0) / n
     p = label_freq[label_freq > 0]
     entropy = float(-(p * np.log(p)).sum())
     avg_labels = float(label_freq.sum())
@@ -137,7 +156,6 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
         cr_num += w * lid_sub
         cr_norm_num += w * (lid_sub / max(lid_rnd, 1e-9))
         cr_den += w
-
     tm_lo, tm_hi = np.quantile(rc, [0.05, 0.95])
     trimmed = rc[(rc >= tm_lo) & (rc <= tm_hi)]
     values = {
@@ -158,16 +176,114 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
         "normalized_correlation_ratio": float(cr_norm_num / cr_den) if cr_den else 1.0,
     }
     feats = DatasetFeatures(values=values, label_freq=label_freq)
-    _DS_FEATURE_CACHE[id(ds)] = feats
+    _DS_FEATURE_CACHE[key] = feats
     return feats
 
 
 # ---------------------------------------------------------------------------
-# per-query features
+# per-query features — batched fast path + scalar reference
 # ---------------------------------------------------------------------------
+
+def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
+                      pred: Predicate) -> np.ndarray:
+    """[Q] predicate selectivity fractions for a whole query batch.
+
+    On TPU this is one Pallas `selectivity` kernel call over the
+    device-resident [N, W] bitmap tensor; on other backends one word-looped
+    group-table reduction (G ≪ N rows, weighted by group size) — both are
+    exact, and both replace the Q independent host scans of the old
+    per-query path.
+    """
+    import jax
+
+    pred = Predicate(pred)
+    if jax.default_backend() == "tpu":
+        import jax.numpy as jnp
+
+        from repro.ann import engine
+        from repro.kernels import ops
+
+        # qbms is per-request: upload directly (engine.as_device would pin
+        # every batch in its cache forever)
+        counts = ops.selectivity(jnp.asarray(qbms),
+                                 engine.device_data(ds).bitmaps,
+                                 pred=int(pred))
+        return np.asarray(counts).astype(np.float64) / ds.n
+
+    # queries repeat label sets heavily (they are drawn from base vectors):
+    # evaluate unique bitmaps once and scatter the results back
+    uq, inv = np.unique(qbms, axis=0, return_inverse=True)
+    if uq.shape[0] < qbms.shape[0]:
+        return batch_selectivity(ds, uq, pred)[inv]
+
+    gb = ds.group_bitmaps                       # [G, W]
+    q, w = qbms.shape
+    g = gb.shape[0]
+    if pred == Predicate.EQUALITY:
+        if g == 0:
+            return np.zeros(q, dtype=np.float64)
+        # exact-match selectivity: each query matches at most one (unique)
+        # group bitmap — a hashed searchsorted probe beats the [Q, G]
+        # compare by a factor of W
+        mults = np.random.default_rng(0x9E3779B9).integers(
+            1, 2 ** 63, size=w, dtype=np.uint64) * 2 + 1
+        gh = (gb.astype(np.uint64) * mults[None, :]).sum(1, dtype=np.uint64)
+        order = np.argsort(gh, kind="stable")
+        ghs = gh[order]
+        if not (ghs[1:] == ghs[:-1]).any():
+            qh = (qbms.astype(np.uint64) * mults[None, :]).sum(
+                1, dtype=np.uint64)
+            cand = order[np.clip(np.searchsorted(ghs, qh), 0, g - 1)]
+            hit = (gh[cand] == qh) & (gb[cand] == qbms).all(1)
+            counts = np.where(hit, ds.group_size[cand], 0)
+            return counts.astype(np.float64) / ds.n
+        # hash collision between two distinct groups (vanishingly rare):
+        # fall back to the word-looped full compare
+        ok = np.ones((q, g), dtype=bool)
+        for i in range(w):
+            ok &= gb[None, :, i] == qbms[:, i, None]
+    elif pred == Predicate.OR:
+        ok = np.zeros((q, g), dtype=bool)
+        for i in range(w):
+            ok |= (gb[None, :, i] & qbms[:, i, None]) != 0
+    else:                                       # AND
+        ok = np.ones((q, g), dtype=bool)
+        for i in range(w):
+            qw = qbms[:, i, None]
+            ok &= (gb[None, :, i] & qw) == qw
+    return (ok @ ds.group_size.astype(np.float64)) / ds.n
+
+
+def query_feature_arrays(ds: ANNDataset, dsf: DatasetFeatures,
+                         qbms: np.ndarray, pred: Predicate) -> dict:
+    """All 6 query-aware features for a whole batch: name -> [Q] float64.
+
+    Numerically identical to Q calls of `query_features` (asserted by
+    tests/test_features.py) but fully vectorised.
+    """
+    bits = _unpack_bits(qbms, ds.universe)                 # [Q, U] bool
+    nl = bits.sum(1)
+    lf = dsf.label_freq[None, :]
+    has = nl > 0
+    minf = np.where(has, np.min(np.where(bits, lf, np.inf), axis=1), 0.0)
+    maxf = np.where(has, np.max(np.where(bits, lf, -np.inf), axis=1), 0.0)
+    meanf = np.where(has, (bits * lf).sum(1) / np.maximum(nl, 1), 0.0)
+    sel = batch_selectivity(ds, qbms, pred)
+    cooc = sel if Predicate(pred) == Predicate.AND \
+        else batch_selectivity(ds, qbms, Predicate.AND)
+    return {
+        "n_labels": nl.astype(np.float64),
+        "selectivity": sel,
+        "min_label_freq": minf,
+        "max_label_freq": maxf,
+        "mean_label_freq": meanf,
+        "label_cooccurrence": cooc,
+    }
+
 
 def query_features(ds: ANNDataset, dsf: DatasetFeatures, qbm: np.ndarray,
                    pred: Predicate) -> dict[str, float]:
+    """Scalar per-query reference (one host scan per feature)."""
     labs = sorted(lb.unpack_one(qbm))
     freqs = np.array([dsf.label_freq[l] for l in labs]) if labs else np.zeros(1)
     sel = ds.selectivity(qbm, pred)
@@ -185,18 +301,20 @@ def query_features(ds: ANNDataset, dsf: DatasetFeatures, qbm: np.ndarray,
 def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
                    feature_names: list[str]) -> np.ndarray:
     """[Q, F(+2 for one-hot pred)] raw feature matrix in `feature_names`
-    order; 'pred' expands to a 3-way one-hot."""
+    order; 'pred' expands to a 3-way one-hot. Query-aware columns come from
+    the batched `query_feature_arrays` pass — no per-query Python loop."""
     dsf = dataset_features(ds)
     nq = qbms.shape[0]
+    qf = query_feature_arrays(ds, dsf, qbms, pred) \
+        if any(n in QUERY_FEATURES for n in feature_names) else {}
     cols = []
-    qf = [query_features(ds, dsf, qbms[i], pred) for i in range(nq)]
     for name in feature_names:
         if name == "pred":
             oh = np.zeros((nq, 3))
             oh[:, int(Predicate(pred))] = 1.0
             cols.append(oh)
         elif name in QUERY_FEATURES:
-            cols.append(np.array([q[name] for q in qf])[:, None])
+            cols.append(np.asarray(qf[name], dtype=np.float64)[:, None])
         else:
             cols.append(np.full((nq, 1), dsf.values[name]))
     return np.concatenate(cols, axis=1).astype(np.float32)

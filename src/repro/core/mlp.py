@@ -100,6 +100,19 @@ def predict(params: list, x: jax.Array) -> jax.Array:
     return forward(params, x)
 
 
+def stack_params(models: list) -> list:
+    """Stack M structurally identical parameter pytrees into one pytree
+    whose leaves carry a leading [M] axis (router batching: one vmapped
+    forward serves all per-method models)."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *models)
+
+
+@jax.jit
+def forward_stacked(stacked: list, x: jax.Array) -> jax.Array:
+    """One fused forward for all M stacked models: [M, Q, n_out]."""
+    return jax.vmap(forward, in_axes=(0, None))(stacked, x)
+
+
 def forward_np(params: list, x: np.ndarray) -> np.ndarray:
     """Pure-numpy inference twin of `forward` — per-query routing runs in
     single-digit µs (no device dispatch), which is what makes the router's

@@ -1,12 +1,18 @@
-"""ML Router — paper §4 / Algorithm 2.
+"""ML Router — paper §4 / Algorithm 2, batched end to end.
 
-Per-query pipeline: extract features → five MLP-Reg forwards (one per
-candidate method) → threshold filter `r̂_m ≥ T` → pick the (method,
-parameter-setting) with max QPS from the offline benchmark table B →
-fallback to argmax-r̂ when no method passes.
+Batch pipeline (no per-query Python loop anywhere on the hot path):
+features for the whole query batch come from one vectorised
+`features.feature_matrix` pass (selectivity/co-occurrence via a single
+group-table reduction, or the Pallas selectivity kernel on TPU); the M
+per-method MLP-Reg models are stacked into a single [M, ...] parameter
+pytree and evaluated with one jitted vmapped forward; Algorithm 2
+(threshold filter `r̂_m ≥ T` → max-QPS passing method from the offline
+benchmark table B → argmax-r̂ fallback) runs as numpy array ops over
+precomputed per-method `(ps_id, qps)` tables from
+`BenchmarkTable.routing_arrays`.
 
 TPU-idiomatic addition (DESIGN.md §3): `route_and_search` routes a *batch*
-of queries with one fused forward per model, then groups queries by chosen
+of queries with one fused forward, then groups queries by chosen
 (method, ps) and executes each group as a single batched search.
 """
 
@@ -31,28 +37,59 @@ class MLRouter:
     models: dict                   # method -> MLP params (numpy)
     scaler: mlp.Scaler
     table: BenchmarkTable
+    _stacked: object = dataclasses.field(default=None, init=False,
+                                         repr=False, compare=False)
 
     # ---- prediction -----------------------------------------------------
     def predict_recalls(self, ds: ANNDataset, qbms: np.ndarray,
                         pred: Predicate) -> np.ndarray:
-        """[Q, M] predicted recall@10 per candidate method (numpy fast
-        path: 5 shallow forwards cost single-digit µs per query)."""
+        """[Q, M] predicted recall@10 per candidate method (one vectorised
+        feature pass + one stacked-MLP forward for the whole batch)."""
         x = F.feature_matrix(ds, qbms, pred, self.feature_names)
         return self.predict_recalls_from_features(x)
 
+    def stacked_params(self):
+        """All M per-method models as one [M, ...]-leaved pytree (cached)."""
+        if self._stacked is None:
+            self._stacked = mlp.stack_params(
+                [mlp.params_from_numpy(self.models[m]) for m in self.methods])
+        return self._stacked
+
     def predict_recalls_from_features(self, x_raw: np.ndarray) -> np.ndarray:
         xs = self.scaler.transform(x_raw)
-        out = np.zeros((x_raw.shape[0], len(self.methods)), dtype=np.float32)
-        for j, m in enumerate(self.methods):
-            out[:, j] = mlp.forward_np(self.models[m], xs)[:, 0]
-        return out
+        out = mlp.forward_stacked(self.stacked_params(), xs)   # [M, Q, 1]
+        return np.asarray(out[:, :, 0]).T.astype(np.float32)   # [Q, M]
 
     # ---- Algorithm 2 ------------------------------------------------------
     def route_from_predictions(self, r_hat: np.ndarray, ds_name: str,
                                pred: Predicate, t: float):
-        """Vectorised Algorithm 2. Returns list of (method, ps_id) per query."""
+        """Vectorised Algorithm 2. Returns list of (method, ps_id) per query.
+
+        Selection is pure array ops over the per-method routing tables:
+        argmax of QPS masked to passing methods, argmax-r̂ fallback rows
+        where nothing passes.
+        """
         pt = int(Predicate(pred))
-        # per-(ds,pt,m) best-QPS setting meeting T — query independent
+        has_pass, qps, ps_pass, ps_fallback = self.table.routing_arrays(
+            ds_name, pt, self.methods, t)
+        r = np.asarray(r_hat, dtype=np.float64)
+        passing = (r >= t) & has_pass[None, :]                 # [Q, M]
+        any_pass = passing.any(axis=1)
+        # argmax picks the first maximal index, matching the scalar loop's
+        # max()-in-method-order tie-breaking
+        j_pass = np.argmax(np.where(passing, qps[None, :], -np.inf), axis=1)
+        j_fb = np.argmax(r, axis=1)
+        j_star = np.where(any_pass, j_pass, j_fb)
+        ps_sel = np.where(any_pass, ps_pass[j_star], ps_fallback[j_star])
+        names = np.array(self.methods, dtype=object)[j_star]
+        return list(zip(names.tolist(), ps_sel.tolist()))
+
+    def route_from_predictions_loop(self, r_hat: np.ndarray, ds_name: str,
+                                    pred: Predicate, t: float):
+        """Scalar per-query Algorithm 2 (the seed implementation) — the
+        parity oracle for `route_from_predictions`, shared by the tests
+        and the routing-latency benchmark. Not a hot path."""
+        pt = int(Predicate(pred))
         ps_of, qps_of = {}, {}
         for m in self.methods:
             hit = self.table.best_qps_setting(ds_name, pt, m, t)

@@ -48,6 +48,31 @@ class BenchmarkTable:
             return None
         return max(cands, key=lambda kv: (kv[1]["recall"], kv[1]["qps"]))
 
+    def routing_arrays(self, ds: str, pt: int, methods: list, t: float):
+        """Per-method routing tables for the vectorised Algorithm 2.
+
+        Returns (has_pass [M] bool, qps [M] float, ps_pass [M] ps_id|None,
+        ps_fallback [M] ps_id|None): the best-QPS setting meeting T per
+        method, and the fallback setting (best-QPS-meeting-T, else
+        max-recall) used when no method passes the threshold.
+        """
+        import numpy as np
+
+        m = len(methods)
+        has_pass = np.zeros(m, dtype=bool)
+        qps = np.full(m, -np.inf)
+        ps_pass = np.empty(m, dtype=object)
+        ps_fallback = np.empty(m, dtype=object)
+        for j, name in enumerate(methods):
+            hit = self.best_qps_setting(ds, pt, name, t)
+            if hit is not None:
+                has_pass[j] = True
+                ps_pass[j] = hit[0]
+                qps[j] = hit[1]["qps"]
+            fb = hit or self.max_recall_setting(ds, pt, name)
+            ps_fallback[j] = fb[0] if fb else None
+        return has_pass, qps, ps_pass, ps_fallback
+
     # ---- persistence ----
     def save(self, path: str) -> None:
         rows = [{"ds": k[0], "pt": k[1], "method": k[2], "ps": k[3], **v}

@@ -1,9 +1,12 @@
 """Pallas TPU kernel: predicate selectivity counting over packed bitmaps.
 
 Computes |{i : P(L_i, L_q)}| for a query batch — the router's per-query
-`selectivity` feature (the paper's Roaring-bitmap step). Grid iterates base
-blocks sequentially per query tile and accumulates counts in the revisited
-output block (standard Pallas reduction pattern)."""
+`selectivity` feature (the paper's Roaring-bitmap step). Grid is
+(query tiles, base blocks) with ``dimension_semantics=("parallel",
+"arbitrary")``: base blocks are a sequential reduction axis whose partial
+counts accumulate in VMEM scratch; the [BQ] output block is written once,
+on the last base block (same block-accumulation pattern as the running
+top-k in `masked_topk`)."""
 
 from __future__ import annotations
 
@@ -12,17 +15,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.masked_topk import _predicate_mask_block
 
 
-def _kernel(qbm_ref, bm_ref, out_ref, *, pred: int):
+def _kernel(qbm_ref, bm_ref, out_ref, acc_ref, *, pred: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     mask = _predicate_mask_block(bm_ref[...], qbm_ref[...], pred)
-    out_ref[...] += jnp.sum(mask.astype(jnp.int32), axis=1)
+    acc_ref[...] += jnp.sum(mask.astype(jnp.int32), axis=1)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _write():
+        out_ref[...] = acc_ref[...]
 
 
 def selectivity_count(qbms, bitmaps, *, pred: int, bq: int = 128,
@@ -41,5 +49,8 @@ def selectivity_count(qbms, bitmaps, *, pred: int, bq: int = 128,
         ],
         out_specs=pl.BlockSpec((bq,), lambda qt, nb: (qt,)),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.int32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qbms, bitmaps)

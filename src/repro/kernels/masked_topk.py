@@ -1,21 +1,25 @@
-"""Pallas TPU kernel: fused predicate-mask + distance + per-block top-k.
+"""Pallas TPU kernel: fused predicate-mask + distance + running top-k.
 
 This is the hot loop of filtered brute-force scan (Pre-filter and the
 per-shard step of the distributed search). The TPU-native design:
 
-  * grid = (query tiles, base blocks);
+  * grid = (query tiles, base blocks) with
+    ``dimension_semantics=("parallel", "arbitrary")`` — query tiles are
+    independent, base blocks are a sequential reduction axis;
   * each step loads a [BQ, D] query tile and a [BN, D] base block into
     VMEM, computes the score block ||v||² − 2·v·q on the MXU
     (`jnp.dot` with f32 accumulation),
   * evaluates the label predicate word-parallel on the VPU directly on the
     packed uint32 bitmap block (no [Q, N, W] temporary),
-  * and extracts the block-local top-k by k-step min-extraction in VMEM
-    (k is small; this avoids any cross-block sort).
+  * and folds the block into a **running top-k carried in VMEM scratch**:
+    the carry [BQ, k] from previous base blocks is concatenated with the
+    masked score block and re-extracted by k-step min-extraction, so the
+    kernel emits final [Q, k] dists/ids directly — no [n_blocks, Q, k]
+    HBM intermediate and no host/XLA cross-block merge.
 
-Per-block [BQ, k] results land in HBM; the tiny cross-block merge happens
-in the jitted wrapper (`ops.masked_topk`). VMEM budget at the default
-BQ=128, BN=1024, D≤128, W≤64: ~1.6 MB — comfortably inside 16 MB v5e VMEM
-with double-buffering.
+The legacy per-block variant (`masked_topk_blocks`) is kept as a parity
+reference for tests. VMEM budget at the default BQ=128, BN=1024, D≤128,
+W≤64: ~1.6 MB — comfortably inside 16 MB v5e VMEM with double-buffering.
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BQ = 128
 DEFAULT_BN = 1024
@@ -54,15 +59,100 @@ def _predicate_mask_block(bm_blk, qbm_blk, pred: int):
     raise ValueError(pred)
 
 
-def _kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
-            outd_ref, outi_ref, *, pred: int, k: int, bn: int):
-    pid_n = pl.program_id(1)
-    q = q_ref[...]
-    base = base_ref[...]
+def _masked_scores(q_ref, qbm_ref, base_ref, norms_ref, bm_ref, pred: int):
+    """Score block [BQ, BN] with masked-out candidates at PAD_SCORE."""
     scores = norms_ref[...][None, :].astype(jnp.float32) - 2.0 * jnp.dot(
-        q, base.T, preferred_element_type=jnp.float32)    # [BQ, BN] on MXU
+        q_ref[...], base_ref[...].T,
+        preferred_element_type=jnp.float32)    # [BQ, BN] on MXU
     mask = _predicate_mask_block(bm_ref[...], qbm_ref[...], pred)
-    s = jnp.where(mask, scores, PAD_SCORE)
+    return jnp.where(mask, scores, PAD_SCORE)
+
+
+def _accum_kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
+                  outd_ref, outi_ref, accd_ref, acci_ref, *,
+                  pred: int, k: int, bn: int):
+    """Running-top-k kernel body: carry [BQ, k] across the nb grid axis in
+    VMEM scratch, write [BQ, k] outputs once on the last base block."""
+    pid_n = pl.program_id(1)
+
+    @pl.when(pid_n == 0)
+    def _init():
+        accd_ref[...] = jnp.full_like(accd_ref, PAD_SCORE)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+
+    s = _masked_scores(q_ref, qbm_ref, base_ref, norms_ref, bm_ref, pred)
+    bq = s.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
+    ids_blk = jnp.where(s >= PAD_SCORE, -1, col + pid_n * bn)
+    cand_d = jnp.concatenate([accd_ref[...], s], axis=1)        # [BQ, k+BN]
+    cand_i = jnp.concatenate([acci_ref[...], ids_blk], axis=1)
+    col2 = jax.lax.broadcasted_iota(jnp.int32, (bq, k + bn), 1)
+    for i in range(k):                      # k-step min extraction in VMEM
+        m = jnp.min(cand_d, axis=1)
+        am = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
+        sel = col2 == am[:, None]
+        picked = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
+        accd_ref[:, i] = m
+        acci_ref[:, i] = jnp.where(m >= PAD_SCORE, -1, picked)
+        cand_d = jnp.where(sel, PAD_SCORE, cand_d)
+
+    @pl.when(pid_n == pl.num_programs(1) - 1)
+    def _write():
+        outd_ref[...] = accd_ref[...]
+        outi_ref[...] = acci_ref[...]
+
+
+def masked_topk_accum(qvecs, qbms, base, norms, bitmaps, *, pred: int,
+                      k: int, bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
+                      interpret: bool = False):
+    """Raw pallas_call: VMEM-accumulated running top-k over base blocks.
+
+    qvecs [Q, D] (Q % bq == 0), base [N, D] (N % bn == 0), qbms [Q, W],
+    bitmaps [N, W]. Output: dists [Q, k] f32, ids [Q, k] i32 — final,
+    no per-block intermediate.
+    """
+    q, d = qvecs.shape
+    n, w = bitmaps.shape
+    assert q % bq == 0 and n % bn == 0, (q, bq, n, bn)
+    grid = (q // bq, n // bn)
+    kernel = functools.partial(_accum_kernel, pred=pred, k=k, bn=bn)
+    outd, outi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, w), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bn, d), lambda qt, nb: (nb, 0)),
+            pl.BlockSpec((bn,), lambda qt, nb: (nb,)),
+            pl.BlockSpec((bn, w), lambda qt, nb: (nb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, k), lambda qt, nb: (qt, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qvecs, qbms, base, norms, bitmaps)
+    return outd, outi
+
+
+# ---------------------------------------------------------------------------
+# legacy per-block variant — kept as the parity reference for tests
+# ---------------------------------------------------------------------------
+
+def _block_kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
+                  outd_ref, outi_ref, *, pred: int, k: int, bn: int):
+    pid_n = pl.program_id(1)
+    s = _masked_scores(q_ref, qbm_ref, base_ref, norms_ref, bm_ref, pred)
     bq = s.shape[0]
     col = jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
     base_id = pid_n * bn
@@ -77,7 +167,7 @@ def _kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
 def masked_topk_blocks(qvecs, qbms, base, norms, bitmaps, *, pred: int,
                        k: int, bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
                        interpret: bool = False):
-    """Raw pallas_call: returns per-(base-block) top-k.
+    """Raw pallas_call: returns per-(base-block) top-k (legacy path).
 
     qvecs [Q, D] (Q % bq == 0), base [N, D] (N % bn == 0), qbms [Q, W],
     bitmaps [N, W]. Output: dists [NB, Q, k] f32, ids [NB, Q, k] i32.
@@ -87,7 +177,7 @@ def masked_topk_blocks(qvecs, qbms, base, norms, bitmaps, *, pred: int,
     assert q % bq == 0 and n % bn == 0, (q, bq, n, bn)
     n_blocks = n // bn
     grid = (q // bq, n_blocks)
-    kernel = functools.partial(_kernel, pred=pred, k=k, bn=bn)
+    kernel = functools.partial(_block_kernel, pred=pred, k=k, bn=bn)
     outd, outi = pl.pallas_call(
         kernel,
         grid=grid,

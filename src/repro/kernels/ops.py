@@ -1,5 +1,10 @@
 """Jitted wrappers around the Pallas kernels: padding to block multiples,
-cross-block merge, CPU interpret-mode fallback."""
+sentinel cleanup, CPU interpret-mode fallback.
+
+`masked_topk` calls the VMEM-accumulating kernel, which emits final [Q, k]
+dists/ids directly — there is no [n_blocks, Q, k] HBM intermediate and no
+cross-block merge here. The legacy per-block kernel + merge survives as
+`masked_topk_multiblock` purely as a parity reference for tests."""
 
 from __future__ import annotations
 
@@ -7,7 +12,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import masked_topk as mk
 from repro.kernels import bitmap_filter as bf
@@ -26,25 +30,53 @@ def _pad_rows(x, mult, fill=0):
         [x, jnp.full((pad,) + x.shape[1:], fill, dtype=x.dtype)], axis=0)
 
 
+def _pad_case(qvecs, qbms, base, norms, bitmaps, bq, bn):
+    """Pad all operands to block multiples; padded base rows get sentinel
+    norms (never selected: zero vectors + PAD norm give exactly PAD score)."""
+    q = qvecs.shape[0]
+    bq_eff = min(bq, max(8, q))
+    return (_pad_rows(qvecs, bq_eff), _pad_rows(qbms, bq_eff),
+            _pad_rows(base, bn), _pad_rows(norms, bn, fill=mk.PAD_SCORE),
+            _pad_rows(bitmaps, bn), bq_eff)
+
+
 @partial(jax.jit, static_argnames=("pred", "k", "bq", "bn", "interpret"))
 def masked_topk(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int,
                 bq: int = mk.DEFAULT_BQ, bn: int = mk.DEFAULT_BN,
                 interpret: bool | None = None):
     """Fused filtered brute-force top-k. Returns (ids [Q,k] i32, dists [Q,k]).
 
-    Handles arbitrary Q/N by padding to block multiples; padded base rows
-    get +sentinel norms (never selected) and padded ids map back to −1.
+    Handles arbitrary Q/N by padding to block multiples; the kernel carries
+    the running top-k across base blocks in VMEM and returns [Q, k] directly.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    q, _ = qvecs.shape
+    q = qvecs.shape[0]
     n = base.shape[0]
-    bq_eff = min(bq, max(8, q))
-    qv = _pad_rows(qvecs, bq_eff)
-    qb = _pad_rows(qbms, bq_eff)
-    bs = _pad_rows(base, bn)
-    nm = _pad_rows(norms, bn, fill=mk.PAD_SCORE)
-    bm = _pad_rows(bitmaps, bn)
+    qv, qb, bs, nm, bm, bq_eff = _pad_case(qvecs, qbms, base, norms, bitmaps,
+                                           bq, bn)
+    outd, outi = mk.masked_topk_accum(
+        qv, qb, bs, nm, bm, pred=pred, k=k, bq=bq_eff, bn=bn,
+        interpret=interpret)
+    ids, dists = outi[:q], outd[:q]
+    # drop padded-row hits and sentinel scores
+    bad = (ids < 0) | (ids >= n) | (dists >= mk.PAD_SCORE)
+    return jnp.where(bad, -1, ids), jnp.where(bad, jnp.inf, dists)
+
+
+@partial(jax.jit, static_argnames=("pred", "k", "bq", "bn", "interpret"))
+def masked_topk_multiblock(qvecs, qbms, base, norms, bitmaps, *, pred: int,
+                           k: int, bq: int = mk.DEFAULT_BQ,
+                           bn: int = mk.DEFAULT_BN,
+                           interpret: bool | None = None):
+    """Legacy path: per-block [NB, Q, k] kernel output merged by
+    moveaxis/reshape/top_k. Parity reference only — see `masked_topk`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    q = qvecs.shape[0]
+    n = base.shape[0]
+    qv, qb, bs, nm, bm, bq_eff = _pad_case(qvecs, qbms, base, norms, bitmaps,
+                                           bq, bn)
     outd, outi = mk.masked_topk_blocks(
         qv, qb, bs, nm, bm, pred=pred, k=k, bq=bq_eff, bn=bn,
         interpret=interpret)
@@ -52,7 +84,6 @@ def masked_topk(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int,
     qp = qv.shape[0]
     d_all = jnp.moveaxis(outd, 0, 1).reshape(qp, nb * k)
     i_all = jnp.moveaxis(outi, 0, 1).reshape(qp, nb * k)
-    # drop padded-row hits and sentinel scores
     bad = (i_all >= n) | (i_all < 0) | (d_all >= mk.PAD_SCORE)
     d_all = jnp.where(bad, jnp.inf, d_all)
     neg, sel = jax.lax.top_k(-d_all, k)

@@ -52,6 +52,66 @@ def test_query_features_selectivity(tiny_ds, tiny_queries):
         assert qf["label_cooccurrence"] == pytest.approx(qf["selectivity"])
 
 
+@pytest.mark.parametrize("pred", list(Predicate))
+def test_feature_matrix_matches_per_query_reference(tiny_ds, tiny_queries,
+                                                    pred):
+    """The batched query_feature_arrays pass must be numerically identical
+    to Q independent query_features calls, for every predicate type."""
+    dsf = F.dataset_features(tiny_ds)
+    qs = tiny_queries[pred]
+    got = F.query_feature_arrays(tiny_ds, dsf, qs.bitmaps, pred)
+    for i in range(qs.q):
+        want = F.query_features(tiny_ds, dsf, qs.bitmaps[i], pred)
+        for name in F.QUERY_FEATURES:
+            assert got[name][i] == pytest.approx(want[name], rel=1e-12), \
+                (name, i)
+
+
+def test_feature_matrix_empty_label_query(tiny_ds):
+    """All-zero query bitmap: freq stats are 0, selectivity matches the
+    scalar path's empty-set semantics."""
+    dsf = F.dataset_features(tiny_ds)
+    qbms = np.zeros((2, tiny_ds.bitmaps.shape[1]), dtype=np.uint32)
+    for pred in Predicate:
+        got = F.query_feature_arrays(tiny_ds, dsf, qbms, pred)
+        want = F.query_features(tiny_ds, dsf, qbms[0], pred)
+        for name in F.QUERY_FEATURES:
+            assert got[name][0] == pytest.approx(want[name]), name
+
+
+def test_batch_selectivity_matches_dataset_scan(tiny_ds, tiny_queries):
+    for pred, qs in tiny_queries.items():
+        got = F.batch_selectivity(tiny_ds, qs.bitmaps, pred)
+        for i in range(qs.q):
+            assert got[i] == pytest.approx(
+                tiny_ds.selectivity(qs.bitmaps[i], pred))
+
+
+def test_feature_cache_keyed_by_identity(tiny_ds):
+    F.clear_feature_cache()
+    a = F.dataset_features(tiny_ds)
+    assert F.dataset_features(tiny_ds) is a          # cache hit
+    F.clear_feature_cache()
+    assert F.dataset_features(tiny_ds) is not a      # evicted
+
+
+def test_feature_cache_no_content_aliasing():
+    """Same name/shape/universe but different content must not share a
+    cache entry (metadata-only keys silently alias distinct datasets)."""
+    from repro.ann.dataset import ANNDataset
+
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(50, 8)).astype(np.float32)
+    d1 = ANNDataset.build("t", v, [[0], [1]] * 25, universe=10)
+    d2 = ANNDataset.build("t", v + 1.0, [[2, 3], [4]] * 25, universe=10)
+    assert d1.cache_key() != d2.cache_key()
+    F.clear_feature_cache()
+    f1 = F.dataset_features(d1)
+    f2 = F.dataset_features(d2)
+    assert f1 is not f2
+    assert not np.array_equal(f1.label_freq, f2.label_freq)
+
+
 def test_feature_matrix_shapes(tiny_ds, tiny_queries):
     qs = tiny_queries[Predicate.OR]
     x = F.feature_matrix(tiny_ds, qs.bitmaps, Predicate.OR,

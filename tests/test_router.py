@@ -64,6 +64,56 @@ def test_algorithm2_fallback_max_recall():
     assert dec[0] == ("A", "p2")
 
 
+@pytest.mark.parametrize("seed", range(8))
+def test_vectorised_route_matches_loop(seed):
+    """Randomized tables + r_hat: array-op Algorithm 2 must reproduce the
+    per-query loop exactly, including fallback and tie-break order."""
+    rng = np.random.default_rng(seed)
+    methods = [f"m{j}" for j in range(int(rng.integers(2, 6)))]
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for m in methods:
+            for ps_id in ("a", "b", "c"):
+                if rng.random() < 0.8:          # leave some methods sparse
+                    table.add("ds", pt, m, ps_id,
+                              recall=float(rng.uniform(0.5, 1.0)),
+                              qps=float(rng.uniform(10, 5000)))
+    r = MLRouter(feature_names=["selectivity", "lid_mean", "pred"],
+                 methods=methods, models={},
+                 scaler=Scaler(np.zeros(5), np.ones(5)), table=table)
+    r_hat = rng.uniform(0.3, 1.05, size=(64, len(methods)))
+    for pred in Predicate:
+        for t in (0.7, 0.9, 0.999):
+            got = r.route_from_predictions(r_hat, "ds", pred, t)
+            want = r.route_from_predictions_loop(r_hat, "ds", pred, t)
+            assert got == want, (pred, t)
+
+
+def test_vectorised_route_unknown_dataset():
+    """No table entries at all: every query falls back to argmax-r̂ with a
+    None setting (deployment dataset not yet benchmarked)."""
+    r = _router_with()
+    r_hat = np.array([[0.95, 0.2], [0.1, 0.8]])
+    dec = r.route_from_predictions(r_hat, "unknown_ds", Predicate.AND, t=0.9)
+    assert dec == [("A", None), ("B", None)]
+
+
+def test_predict_recalls_stacked_matches_numpy():
+    """The stacked vmapped forward must agree with per-method forward_np."""
+    from repro.core import mlp as mlp_mod
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(33, 5)).astype(np.float32)
+    models = {m: params_to_numpy(train_mlp(x, x[:, 0], epochs=3, seed=j))
+              for j, m in enumerate(("A", "B"))}
+    r = _router_with(models)
+    got = r.predict_recalls_from_features(x)
+    xs = r.scaler.transform(x)
+    want = np.stack([mlp_mod.forward_np(models[m], xs)[:, 0]
+                     for m in ("A", "B")], axis=1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
 def test_rule_router_tree():
     rr = RuleRouter(lid_hi=40, card_lo=100)
     assert rr.route(Predicate.EQUALITY, 10, 1000) == "labelnav"
