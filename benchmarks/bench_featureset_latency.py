@@ -9,8 +9,9 @@ import time
 
 import numpy as np
 
-from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.index import QueryBatch, default_index
 from repro.ann.predicates import Predicate
+from repro.ann.service import RouterService
 from repro.core import features as F
 from repro.core import training as T
 from repro.core.router import MLRouter
@@ -35,18 +36,20 @@ def run(verbose=True, n_queries: int = 150):
                               table=coll_train.table)
     for ds_name in ("dbpedia560k", "yahoo800k"):
         ds = get_dataset(ds_name)
+        fx = default_index(ds)
         lat = {}
         for n, router in routers.items():
+            svc = RouterService(fx, router, t=0.9)
             total = 0.0
             for pred in (Predicate.AND, Predicate.OR):
                 qs = make_queries(ds, pred, n_queries, seed=11,
                                   with_ground_truth=False)
                 # warm the jits for whatever this router dispatches to
-                router.route_and_search(ds, qs.vectors[:8], qs.bitmaps[:8],
-                                        pred, 10, 0.9, CANDIDATE_METHODS)
+                svc.search(QueryBatch(qs.vectors[:8], qs.bitmaps[:8],
+                                      pred, k=10))
+                batch = QueryBatch(qs.vectors, qs.bitmaps, pred, k=10)
                 t0 = time.perf_counter()
-                router.route_and_search(ds, qs.vectors, qs.bitmaps, pred,
-                                        10, 0.9, CANDIDATE_METHODS)
+                svc.search(batch)
                 total += time.perf_counter() - t0
             lat[n] = total / (2 * n_queries) * 1e6
         rows.append({"dataset": ds_name,

@@ -10,8 +10,9 @@ import time
 import numpy as np
 
 from repro.ann.dataset import recall_at_k
-from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.index import QueryBatch, default_index
 from repro.ann.predicates import Predicate
+from repro.ann.service import RouterService
 from repro.core import features as F
 from repro.core.oracle import oracle_recall, oracle_choice
 from repro.core.rule_router import RuleRouter
@@ -59,14 +60,14 @@ def run(verbose=True, n_queries: int = 200):
                      "recall": round(float(orc.mean()), 4),
                      "qps": round(len(choice) / o_time, 1)})
         # --- ML Router: REAL execution across the T sweep ---
+        svc = RouterService(default_index(ds), router)
         qs = make_queries(ds, pred, n_queries, seed=1)   # same seed family
+        batch = QueryBatch(qs.vectors, qs.bitmaps, pred, k=10)
         for t_thresh in T_SWEEP:
             t0 = time.perf_counter()
-            ids, dec = router.route_and_search(
-                ds, qs.vectors, qs.bitmaps, pred, 10, t_thresh,
-                CANDIDATE_METHODS)
+            res = svc.search(batch, t=t_thresh)
             dt = time.perf_counter() - t0
-            rec = recall_at_k(ids, qs.ground_truth).mean()
+            rec = recall_at_k(res.ids, qs.ground_truth).mean()
             rows.append({"dataset": ds_name, "pred": pred.name,
                          "series": "MLRouter", "point": f"T={t_thresh}",
                          "recall": round(float(rec), 4),

@@ -18,7 +18,9 @@ import time
 
 import numpy as np
 
+from repro.ann.index import QueryBatch, default_index
 from repro.ann.predicates import PREDICATES, Predicate
+from repro.ann.service import RouterService
 from repro.core import features as F
 from repro.core import mlp as mlp_mod
 from repro.core.router import MLRouter
@@ -87,12 +89,14 @@ def run(verbose=True, q_batch: int = 1024, t: float = 0.9, smoke: bool = False):
     rows = []
     for ds_name in ds_names:
         ds = get_ds(ds_name)
+        svc = RouterService(default_index(ds), router, t=t)
         dsf = F.dataset_features(ds)
         for pred in PREDICATES:
             qs = make_queries(ds, pred, q_batch, seed=23,
                               with_ground_truth=False)
+            batch = QueryBatch(qs.vectors, qs.bitmaps, pred, k=10)
             # warm both paths at full batch shape (jit compile, feature cache)
-            router.route(ds, qs.bitmaps, pred, t)
+            svc.route(batch)
             _legacy_route(router, ds, dsf, qs.bitmaps[:8], pred, t)
 
             t0 = time.perf_counter()

@@ -4,11 +4,13 @@ writes per-harness CSVs under artifacts/bench/.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,pareto,...]
   PYTHONPATH=src python -m benchmarks.run --smoke
+  PYTHONPATH=src python -m benchmarks.run --check
 
 ``--smoke`` runs the kernel and routing-latency harnesses at tiny sizes
-(synthetic router, no artifact build) and writes a ``BENCH_kernels.json``
-summary at the repo root so successive PRs have a perf trajectory to
-compare against.
+(synthetic router, no artifact build) and **appends** a per-PR record
+(keyed by git SHA) to the ``BENCH_kernels.json`` trajectory at the repo
+root. ``--check`` compares the latest recorded run against the previous
+one and exits 1 if any smoke kernel number regressed by more than 25 %.
 """
 
 from __future__ import annotations
@@ -16,8 +18,43 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import time
 import traceback
+
+# allowed slowdown of latest vs previous recorded run before --check fails
+CHECK_TOLERANCE = 1.25
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bench_path() -> str:
+    return os.path.join(_repo_root(), "BENCH_kernels.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"], cwd=_repo_root(),
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _load_runs(path: str) -> list[dict]:
+    """Trajectory records, oldest first. Converts the pre-trajectory
+    single-record format (top-level "kernels" dict) in place."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "runs" in data:
+        return list(data["runs"])
+    if isinstance(data, dict) and "kernels" in data:   # legacy single record
+        return [{"sha": "pre-trajectory", **data}]
+    return []
 
 
 def run_smoke() -> None:
@@ -28,17 +65,62 @@ def run_smoke() -> None:
     print("# == smoke: routing latency (synthetic router) ==", flush=True)
     rows_l, _ = bench_routing_latency.run(verbose=True, q_batch=256,
                                           smoke=True)
-    summary = {
+    record = {
+        "sha": _git_sha(),
+        "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "kernels": rows_k,
         "routing_latency": rows_l,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
     }
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    path = os.path.join(root, "BENCH_kernels.json")
+    path = _bench_path()
+    runs = [r for r in _load_runs(path) if r.get("sha") != record["sha"]]
+    runs.append(record)          # re-running a SHA replaces its record
     with open(path, "w") as f:
-        json.dump(summary, f, indent=1)
-    print(f"smoke summary -> {path}", flush=True)
+        json.dump({"runs": runs}, f, indent=1)
+    print(f"smoke summary -> {path} ({len(runs)} recorded runs)", flush=True)
+
+
+def run_check() -> None:
+    """Fail (exit 1) if the latest recorded smoke run regressed >25% vs
+    the previous one on any kernel / routing-latency number."""
+    runs = _load_runs(_bench_path())
+    if len(runs) < 2:
+        print(f"check: only {len(runs)} recorded run(s) — nothing to "
+              f"compare, passing", flush=True)
+        return
+    prev, last = runs[-2], runs[-1]
+    print(f"check: {last.get('sha')} vs previous {prev.get('sha')} "
+          f"(tolerance {CHECK_TOLERANCE}x)")
+    comparisons = [
+        ("kernels", ("n", "q"), ("fused_us", "two_pass_us")),
+        ("routing_latency", ("dataset", "pred", "q"),
+         ("batched_us", "per_query_us")),
+    ]
+    failures = 0
+    for section, key_cols, metrics in comparisons:
+        prev_rows = {tuple(r[c] for c in key_cols): r
+                     for r in prev.get(section, [])}
+        for row in last.get(section, []):
+            key = tuple(row[c] for c in key_cols)
+            base = prev_rows.get(key)
+            if base is None:
+                continue
+            for metric in metrics:
+                if metric not in row or metric not in base:
+                    continue
+                ratio = row[metric] / max(base[metric], 1e-9)
+                flag = "REGRESSION" if ratio > CHECK_TOLERANCE else "ok"
+                if ratio > CHECK_TOLERANCE:
+                    failures += 1
+                print(f"  {section}{list(key)} {metric}: "
+                      f"{base[metric]} -> {row[metric]} "
+                      f"({ratio:.2f}x) {flag}", flush=True)
+    if failures:
+        print(f"check: {failures} regression(s) beyond "
+              f"{CHECK_TOLERANCE}x", flush=True)
+        raise SystemExit(1)
+    print("check: no regressions beyond tolerance", flush=True)
 
 
 def main() -> None:
@@ -47,12 +129,20 @@ def main() -> None:
                     help="comma list: table1,pareto,fig4,table5,table6,"
                          "table7,latency,kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-size kernels+latency run, writes "
-                         "BENCH_kernels.json at the repo root")
+                    help="tiny-size kernels+latency run, appends a per-PR "
+                         "record to BENCH_kernels.json at the repo root")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the latest recorded smoke run regressed "
+                         ">25%% vs the previous one")
     args = ap.parse_args()
 
+    # --smoke --check composes: record this SHA, then gate against the
+    # previous record
     if args.smoke:
         run_smoke()
+    if args.check:
+        run_check()
+    if args.smoke or args.check:
         return
 
     from benchmarks import (bench_table1, bench_pareto,

@@ -13,12 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.index import FilteredIndex, QueryBatch
 from repro.ann.predicates import Predicate
+from repro.ann.service import RouterService
 from repro.ann import labels as lb
 from repro.configs.base import get_smoke_config
 from repro.core import training as T
 from repro.data.ann_synth import DatasetSpec, synthesize
+from repro.launch.mesh import make_mesh_compat
 from repro.launch.serve import generate
 from repro.models import common, lm
 
@@ -33,19 +35,18 @@ def main():
     # --- corpus + router (offline stage) ---
     spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5, 0.3, 7)
     ds = synthesize(spec)
-    coll = T.collect({"corpus": ds}, CANDIDATE_METHODS, n_queries=60,
-                     seed=0, verbose=False)
+    fx = FilteredIndex(ds)
+    coll = T.collect({"corpus": fx}, n_queries=60, seed=0, verbose=False)
     router = T.train_router(coll, coll.table, epochs=80)
+    svc = RouterService(fx, router, t=0.9)
     print(f"corpus: {ds.n} vectors; router trained "
           f"({len(router.table.entries)} table entries)")
 
     # --- served LM (reduced config; embeddings from its hidden states) ---
     cfg = get_smoke_config(args.arch)
     params = common.init_params(lm.model_desc(cfg), jax.random.PRNGKey(0))
-    ctx = lm.ModelCtx(mesh=jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2),
-        qc_prefill=32, gla_chunk=32)
+    ctx = lm.ModelCtx(mesh=make_mesh_compat((1, 1), ("data", "model")),
+                      qc_prefill=32, gla_chunk=32)
     embed_fn = jax.jit(lambda p, b: lm.forward_prefill(p, b, cfg, ctx))
 
     # --- batched requests: prompt tokens + label predicate ---
@@ -64,17 +65,15 @@ def main():
     emb = np.asarray(logits[:, 0, : ds.dim], np.float32)   # query embeddings
     t_embed = time.perf_counter() - t0
 
-    # --- route + retrieve per predicate group ---
+    # --- route + retrieve per predicate group (micro-batched serving) ---
     t0 = time.perf_counter()
     retrieved = np.full((b, 5), -1, np.int32)
     for pred in (Predicate.EQUALITY, Predicate.AND, Predicate.OR):
         sel = [i for i in range(b) if preds[i] == pred]
         if not sel:
             continue
-        ids, dec = router.route_and_search(
-            ds, emb[sel], qbms[sel], pred, 5, t=0.9,
-            methods_impl=CANDIDATE_METHODS)
-        retrieved[sel] = ids
+        res = svc.search_chunked(QueryBatch(emb[sel], qbms[sel], pred, k=5))
+        retrieved[sel] = res.ids
     t_retrieve = time.perf_counter() - t0
 
     # --- generate conditioned on retrieval (ids appended as tokens) ---

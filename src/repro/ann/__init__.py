@@ -1,7 +1,11 @@
-"""Filtered-ANN engine: label bitmaps, predicates, datasets, and the six
-TPU-native filtered-ANN methods the router selects among."""
+"""Filtered-ANN engine: label bitmaps, predicates, datasets, the six
+TPU-native filtered-ANN methods, and the owned serving surface
+(`FilteredIndex` + `QueryBatch`/`SearchResult` + `RouterService`)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
+from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
+                             SearchResult)
 
-__all__ = ["Predicate", "ANNDataset"]
+__all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
+           "RoutingDecision", "SearchResult"]

@@ -1,6 +1,10 @@
 """Measurement harness: run (dataset × predicate × method × param-setting),
 recording per-query recall@k and wall-clock QPS — the raw material for the
-offline benchmark table B and the router training set."""
+offline benchmark table B and the router training set.
+
+Runs against a `FilteredIndex` handle (owned device tensors + built
+indexes); passing a bare `ANNDataset` still works via the shared default
+pool."""
 
 from __future__ import annotations
 
@@ -10,8 +14,8 @@ import time
 import numpy as np
 
 from repro.ann import engine
-from repro.ann.dataset import ANNDataset, QuerySet, recall_at_k
-from repro.ann.predicates import Predicate
+from repro.ann.dataset import QuerySet, recall_at_k
+from repro.ann.index import QueryBatch, as_index
 
 
 @dataclasses.dataclass
@@ -25,29 +29,30 @@ class RunResult:
     qps: float
     latency_s: float
     ids: np.ndarray                # [Q, k]
+    dists: np.ndarray              # [Q, k] ranking scores (+inf at −1 pad)
 
 
-def run_method(ds: ANNDataset, method: engine.Method, setting,
+def run_method(fx, method: engine.Method, setting,
                qs: QuerySet, *, warmup: bool = True) -> RunResult:
-    index = engine.get_index(method, ds, setting.build)
-    sp = setting.search_dict
-    if warmup:  # exclude jit compile from the QPS measurement
-        method.search(ds, index, qs.vectors[:8], qs.bitmaps[:8], qs.pred,
-                      qs.k, sp)
+    fx = as_index(fx)
+    batch = QueryBatch.from_queryset(qs)
+    if warmup:  # exclude jit compile (and index build) from the QPS timing
+        fx.run_method(method, setting, batch.take(np.arange(min(8, qs.q))))
     t0 = time.perf_counter()
-    ids = method.search(ds, index, qs.vectors, qs.bitmaps, qs.pred, qs.k, sp)
+    ids, dists = fx.run_method(method, setting, batch)
     dt = time.perf_counter() - t0
     rec = recall_at_k(ids, qs.ground_truth)
     return RunResult(
-        dataset=ds.name, pred=int(qs.pred), method=method.name,
+        dataset=fx.ds.name, pred=int(qs.pred), method=method.name,
         ps_id=setting.ps_id, recall_per_query=rec,
         mean_recall=float(rec.mean()), qps=qs.q / max(dt, 1e-9),
-        latency_s=dt, ids=ids)
+        latency_s=dt, ids=ids, dists=dists)
 
 
-def sweep(ds: ANNDataset, methods: dict, qs: QuerySet) -> list[RunResult]:
+def sweep(fx, methods: dict, qs: QuerySet) -> list[RunResult]:
+    fx = as_index(fx)
     out = []
     for m in methods.values():
         for setting in m.param_settings():
-            out.append(run_method(ds, m, setting, qs))
+            out.append(run_method(fx, m, setting, qs))
     return out

@@ -1,7 +1,10 @@
 """Shared execution machinery for filtered-ANN methods.
 
 * `DeviceData` — per-dataset device-resident tensors (vectors, norms,
-  bitmaps, group tables), cached per dataset.
+  bitmaps, group tables). Ownership lives in `repro.ann.index.
+  FilteredIndex`; the module-global caches that used to live here are
+  gone (the `device_data`/`as_device`/`get_index` shims below delegate
+  to the default handle pool for one PR cycle).
 * word-looped predicate masks that avoid materialising `[Q, N, W]`
   temporaries (predicate type is a *traced* scalar so one compiled
   executable serves all three predicates).
@@ -12,6 +15,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -35,51 +39,43 @@ class DeviceData:
     group_cnorms: jax.Array     # [G] f32
 
 
-# Device-data cache keyed by stable content identity (ANNDataset.cache_key)
-# — id() keys can be recycled after garbage collection and would silently
-# serve another dataset's tensors. The array cache pins the host array
-# alongside the device copy for the same reason (a live reference makes
-# the id stable).
-_DEVICE_CACHE: dict[tuple, DeviceData] = {}
-_ARRAY_CACHE: dict[int, tuple] = {}
+# ---------------------------------------------------------------------------
+# deprecation shims (one PR cycle) — state now lives on FilteredIndex
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.ann.engine.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 def clear_caches() -> None:
-    """Evict cached device tensors, host-array uploads, and built indexes."""
-    _DEVICE_CACHE.clear()
-    _ARRAY_CACHE.clear()
-    _INDEX_CACHE.clear()
+    """Evict the default handle pool (owned caches live on FilteredIndex)."""
+    from repro.ann.index import clear_pool
+
+    clear_pool()
 
 
 def as_device(x):
-    """Cached np→device conversion (keeps QPS timing free of re-uploads)."""
-    key = id(x)
-    hit = _ARRAY_CACHE.get(key)
-    if hit is None or hit[0] is not x:
-        hit = (x, jnp.asarray(x))
-        _ARRAY_CACHE[key] = hit
-    return hit[1]
+    """Deprecated: use `FilteredIndex.as_device` (owned upload cache).
+    This shim uploads without caching."""
+    _deprecated("as_device", "FilteredIndex.as_device")
+    return jnp.asarray(x)
 
 
 def device_data(ds: ANNDataset) -> DeviceData:
-    key = ds.cache_key()
-    if key not in _DEVICE_CACHE:
-        g = ds.n_groups
-        cent = np.zeros((g, ds.dim), dtype=np.float32)
-        for j in range(g):
-            s, l = int(ds.group_start[j]), int(ds.group_size[j])
-            cent[j] = ds.vectors[s:s + l].mean(0)
-        _DEVICE_CACHE[key] = DeviceData(
-            vectors=jnp.asarray(ds.vectors),
-            norms=jnp.asarray(ds.norms_sq),
-            bitmaps=jnp.asarray(ds.bitmaps),
-            group_bitmaps=jnp.asarray(ds.group_bitmaps),
-            group_start=jnp.asarray(ds.group_start),
-            group_size=jnp.asarray(ds.group_size),
-            group_centroids=jnp.asarray(cent),
-            group_cnorms=jnp.asarray((cent ** 2).sum(1).astype(np.float32)),
-        )
-    return _DEVICE_CACHE[key]
+    """Deprecated: use `FilteredIndex.device`."""
+    _deprecated("device_data", "FilteredIndex.device")
+    from repro.ann.index import default_index
+
+    return default_index(ds).device
+
+
+def get_index(method: "Method", ds: ANNDataset, build_params: tuple):
+    """Deprecated: use `FilteredIndex.get_index`."""
+    _deprecated("get_index", "FilteredIndex.get_index")
+    from repro.ann.index import default_index
+
+    return default_index(ds).get_index(method, build_params)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +146,8 @@ def run_chunked(fn, n_queries: int, *arrays, chunk: int = DEFAULT_QCHUNK,
 
     arrays: per-query arrays, leading axis Q. extra_host: same, but kept as
     numpy (for host-side lookups already resolved to per-query values).
+    `fn` may return a single array or a tuple of per-query arrays — tuple
+    outputs are concatenated position-wise (e.g. (ids, dists)).
     """
     outs = []
     for s in range(0, n_queries, chunk):
@@ -169,13 +167,18 @@ def run_chunked(fn, n_queries: int, *arrays, chunk: int = DEFAULT_QCHUNK,
                     part = np.concatenate([part, np.repeat(part[-1:], pad, axis=0)], axis=0)
                 hparts.append(part)
         res = fn(*parts, *hparts)
-        res = np.asarray(res)
-        outs.append(res[: e - s])
+        if isinstance(res, tuple):
+            outs.append(tuple(np.asarray(r)[: e - s] for r in res))
+        else:
+            outs.append(np.asarray(res)[: e - s])
+    if isinstance(outs[0], tuple):
+        return tuple(np.concatenate([o[i] for o in outs], axis=0)
+                     for i in range(len(outs[0])))
     return np.concatenate(outs, axis=0)
 
 
 # ---------------------------------------------------------------------------
-# method registry base
+# method interface
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -199,8 +202,23 @@ def ps(ps_id: str, build: dict | None = None, search: dict | None = None) -> Par
                         tuple(sorted((search or {}).items())))
 
 
+def resolve_setting(method: "Method", ps_id: str | None) -> ParamSetting:
+    """The method's setting for `ps_id`, else its max-budget setting (the
+    fallback for deployment datasets the offline table hasn't covered)."""
+    settings = method.param_settings()
+    for s in settings:
+        if s.ps_id == ps_id:
+            return s
+    return settings[-1]
+
+
 class Method:
-    """Interface all filtered-ANN methods implement."""
+    """Interface all filtered-ANN methods implement.
+
+    Methods are stateless: all per-dataset state (device tensors, upload
+    cache, built indexes) is owned by the `FilteredIndex` handle passed
+    to `search`.
+    """
 
     name: str = "?"
 
@@ -211,18 +229,10 @@ class Method:
         """Offline index build; returns opaque index object."""
         return None
 
-    def search(self, ds: ANNDataset, index, qvecs: np.ndarray,
-               qbms: np.ndarray, pred: Predicate, k: int,
-               search_params: dict) -> np.ndarray:
-        """Batched filtered search; returns [Q, k] int32 ids (−1 pad)."""
+    def search(self, fx, index, qvecs: np.ndarray, qbms: np.ndarray,
+               pred: Predicate, k: int, search_params: dict):
+        """Batched filtered search against the owned handle `fx`
+        (`repro.ann.index.FilteredIndex`). Returns
+        ([Q, k] int32 ids with −1 pad, [Q, k] float32 ranking scores
+        ‖v‖² − 2·q·v, +inf where the id is −1)."""
         raise NotImplementedError
-
-
-_INDEX_CACHE: dict = {}
-
-
-def get_index(method: Method, ds: ANNDataset, build_params: tuple):
-    key = (method.name, ds.name, ds.n, build_params)
-    if key not in _INDEX_CACHE:
-        _INDEX_CACHE[key] = method.build(ds, dict(build_params))
-    return _INDEX_CACHE[key]

@@ -1,5 +1,12 @@
-"""The six filtered-ANN methods (TPU-native adaptations — DESIGN.md §2)."""
+"""The six filtered-ANN methods (TPU-native adaptations — DESIGN.md §2).
 
+Importing this package registers the built-ins in the default
+`repro.ann.registry`; `CANDIDATE_METHODS` / `ALL_METHODS` are live
+registry views, so `register_method()` extends the pool without any
+edit here.
+"""
+
+from repro.ann import registry as _registry
 from repro.ann.methods.prefilter import PreFilter
 from repro.ann.methods.postfilter import PostFilter
 from repro.ann.methods.labelnav import LabelNav
@@ -8,16 +15,22 @@ from repro.ann.methods.ivf_gamma import IVFGamma
 from repro.ann.methods.fvamana import FVamana
 
 # Candidate pool the router selects among — mirrors the paper's five
-# (UNG, Post-filter, SIEVE, ACORN-γ, FilteredVamana).
-CANDIDATE_METHODS = {
-    "labelnav": LabelNav(),       # UNG analogue
-    "postfilter": PostFilter(),   # Post-filter analogue
-    "sieve": Sieve(),             # SIEVE analogue
-    "ivf_gamma": IVFGamma(),      # ACORN-γ analogue
-    "fvamana": FVamana(),         # FilteredVamana analogue
-}
+# (UNG, Post-filter, SIEVE, ACORN-γ, FilteredVamana). Pre-filter is the
+# exact non-candidate baseline.
+_BUILTINS = (
+    (PreFilter(), False),
+    (LabelNav(), True),       # UNG analogue
+    (PostFilter(), True),     # Post-filter analogue
+    (Sieve(), True),          # SIEVE analogue
+    (IVFGamma(), True),       # ACORN-γ analogue
+    (FVamana(), True),        # FilteredVamana analogue
+)
+for _m, _cand in _BUILTINS:
+    if _m.name not in _registry._DEFAULT:
+        _registry._DEFAULT.register(_m, candidate=_cand)
 
-ALL_METHODS = {"prefilter": PreFilter(), **CANDIDATE_METHODS}
+CANDIDATE_METHODS = _registry._DEFAULT.view(candidates_only=True)
+ALL_METHODS = _registry._DEFAULT.view()
 
 # paper-name aliases for reporting
 PAPER_NAMES = {

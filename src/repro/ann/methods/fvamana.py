@@ -38,9 +38,9 @@ class FVamana(engine.Method):
         return graph.build_graph(ds.vectors, ds.bitmaps, ds.universe,
                                  r=int(build_params.get("r", 32)), seed=17)
 
-    def search(self, ds, index: graph.VamanaGraph, qvecs, qbms,
-               pred: Predicate, k: int, search_params: dict) -> np.ndarray:
-        dev = engine.device_data(ds)
+    def search(self, fx, index: graph.VamanaGraph, qvecs, qbms,
+               pred: Predicate, k: int, search_params: dict):
+        dev = fx.device
         pred_idx = jnp.int32(int(Predicate(pred)))
         l_search = int(search_params["l_search"])
         nq = qvecs.shape[0]
@@ -53,7 +53,7 @@ class FVamana(engine.Method):
             for j, l in enumerate(labs):
                 seeds[qi, 1 + j] = index.label_entry[l]
 
-        nbrs = engine.as_device(index.neighbors)
+        nbrs = fx.as_device(index.neighbors)
 
         def fn(qv, qb, sd):
             pool_ids, pool_d = graph.beam_search(
@@ -61,7 +61,6 @@ class FVamana(engine.Method):
                 l_search=l_search, iters=l_search)
             cbm = dev.bitmaps[jnp.maximum(pool_ids, 0)]
             ok = engine.mask_cand(cbm, qb, pred_idx) & (pool_ids >= 0)
-            ids, _ = topk.topk_ids(pool_d, pool_ids, k, valid=ok)
-            return ids
+            return topk.topk_ids(pool_d, pool_ids, k, valid=ok)
 
         return engine.run_chunked(fn, nq, qvecs, qbms, seeds)

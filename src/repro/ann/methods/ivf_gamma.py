@@ -34,8 +34,7 @@ def _search(qvecs, qbms, pred_idx, centroids, cnorms, lists,
     d = topk.score_candidates(qvecs, cvec, cn)
     cbm = bitmaps[jnp.maximum(cand, 0)]                        # [Q, C, W]
     ok = engine.mask_cand(cbm, qbms, pred_idx) & (cand >= 0)
-    ids, _ = topk.topk_ids(d, cand, k, valid=ok)
-    return ids
+    return topk.topk_ids(d, cand, k, valid=ok)
 
 
 class IVFGamma(engine.Method):
@@ -53,14 +52,14 @@ class IVFGamma(engine.Method):
         return build_ivf(ds.vectors, int(build_params.get("nlist", 128)),
                          seed=13)
 
-    def search(self, ds, index: IVFIndex, qvecs, qbms, pred: Predicate,
-               k: int, search_params: dict) -> np.ndarray:
-        dev = engine.device_data(ds)
+    def search(self, fx, index: IVFIndex, qvecs, qbms, pred: Predicate,
+               k: int, search_params: dict):
+        dev = fx.device
         pred_idx = jnp.int32(int(Predicate(pred)))
         nprobe = min(4 * int(search_params["gamma"]), index.centroids.shape[0])
-        cent = engine.as_device(index.centroids)
-        cn = engine.as_device(index.centroid_norms)
-        lists = engine.as_device(index.lists)
+        cent = fx.as_device(index.centroids)
+        cn = fx.as_device(index.centroid_norms)
+        lists = fx.as_device(index.lists)
         fn = lambda qv, qb: _search(
             qv, qb, pred_idx, cent, cn, lists, dev.vectors, dev.norms,
             dev.bitmaps, nprobe=nprobe, k=k)

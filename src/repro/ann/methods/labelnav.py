@@ -39,8 +39,7 @@ def _search_eq(qvecs, qgroup, group_start, group_size, vectors, norms,
     cvec = vectors[jnp.maximum(cand, 0)]
     cn = norms[jnp.maximum(cand, 0)]
     d = topk.score_candidates(qvecs, cvec, cn)
-    ids, _ = topk.topk_ids(d, cand, k)
-    return ids
+    return topk.topk_ids(d, cand, k)
 
 
 @partial(jax.jit, static_argnames=("group_cap", "per_group_cap", "k"))
@@ -63,8 +62,7 @@ def _search_sub(qvecs, qbms, pred_idx, group_bitmaps, group_start, group_size,
     cvec = vectors[jnp.maximum(cand, 0)]
     cn = norms[jnp.maximum(cand, 0)]
     d = topk.score_candidates(qvecs, cvec, cn)
-    ids, _ = topk.topk_ids(d, cand, k)
-    return ids
+    return topk.topk_ids(d, cand, k)
 
 
 class LabelNav(engine.Method):
@@ -81,9 +79,10 @@ class LabelNav(engine.Method):
     def build(self, ds: ANNDataset, build_params: dict):
         return {"maxg": int(ds.group_size.max())}
 
-    def search(self, ds, index, qvecs, qbms, pred: Predicate, k: int,
-               search_params: dict) -> np.ndarray:
-        dev = engine.device_data(ds)
+    def search(self, fx, index, qvecs, qbms, pred: Predicate, k: int,
+               search_params: dict):
+        ds = fx.ds
+        dev = fx.device
         pred = Predicate(pred)
         nq = qvecs.shape[0]
         if pred == Predicate.EQUALITY:

@@ -40,8 +40,7 @@ def _search(qvecs, qbms, pred_idx, centroids, cnorms, lists,
     # stage 2: verify predicate on the k' survivors only
     cbm = bitmaps[jnp.maximum(cid, 0)]                         # [Q, k', W]
     ok = engine.mask_cand(cbm, qbms, pred_idx) & (cid >= 0)
-    ids, _ = topk.topk_ids(-negd, cid, k, valid=ok)
-    return ids
+    return topk.topk_ids(-negd, cid, k, valid=ok)
 
 
 class PostFilter(engine.Method):
@@ -60,15 +59,15 @@ class PostFilter(engine.Method):
         return build_ivf(ds.vectors, int(build_params.get("nlist", 128)),
                          seed=13)
 
-    def search(self, ds, index: IVFIndex, qvecs, qbms, pred: Predicate,
-               k: int, search_params: dict) -> np.ndarray:
-        dev = engine.device_data(ds)
+    def search(self, fx, index: IVFIndex, qvecs, qbms, pred: Predicate,
+               k: int, search_params: dict):
+        dev = fx.device
         pred_idx = jnp.int32(int(Predicate(pred)))
         nprobe = int(search_params["nprobe"])
         kprime = int(search_params["kprime"])
-        cent = engine.as_device(index.centroids)
-        cn = engine.as_device(index.centroid_norms)
-        lists = engine.as_device(index.lists)
+        cent = fx.as_device(index.centroids)
+        cn = fx.as_device(index.centroid_norms)
+        lists = fx.as_device(index.lists)
         nprobe = min(nprobe, index.centroids.shape[0])
         fn = lambda qv, qb: _search(
             qv, qb, pred_idx, cent, cn, lists, dev.vectors, dev.norms,

@@ -42,8 +42,7 @@ def _scan_rows(qvecs, qbms, pred_idx, rows, vectors, norms, bitmaps,
     if verify:
         cbm = bitmaps[jnp.maximum(rows, 0)]
         valid &= engine.mask_cand(cbm, qbms, pred_idx)
-    ids, _ = topk.topk_ids(d, rows, k, valid=valid, dedup=True)
-    return ids
+    return topk.topk_ids(d, rows, k, valid=valid, dedup=True)
 
 
 class Sieve(engine.Method):
@@ -89,11 +88,11 @@ class Sieve(engine.Method):
                 np.array([len(members[l]) for l in mat_labels] or [0]),
                 "ivf": ivf, "cap": cap}
 
-    def search(self, ds, index, qvecs, qbms, pred: Predicate, k: int,
-               search_params: dict) -> np.ndarray:
+    def search(self, fx, index, qvecs, qbms, pred: Predicate, k: int,
+               search_params: dict):
         from repro.ann.labels import unpack_one
 
-        dev = engine.device_data(ds)
+        dev = fx.device
         pred = Predicate(pred)
         pred_idx = jnp.int32(int(pred))
         nq = qvecs.shape[0]
@@ -119,6 +118,7 @@ class Sieve(engine.Method):
                     sel_rows[qi, 0] = mat[int(np.argmin(lens))]
 
         out = np.full((nq, k), -1, dtype=np.int32)
+        out_d = np.full((nq, k), np.inf, dtype=np.float32)
         hit_idx = np.nonzero(hit)[0]
         miss_idx = np.nonzero(~hit)[0]
 
@@ -136,7 +136,7 @@ class Sieve(engine.Method):
                 k=k, verify=verify)
             chunk = max(8, min(engine.DEFAULT_QCHUNK,
                                (1 << 24) // max(1, cand.shape[1])))
-            out[hit_idx] = engine.run_chunked(
+            out[hit_idx], out_d[hit_idx] = engine.run_chunked(
                 fn, hit_idx.size, qvecs[hit_idx], qbms[hit_idx], cand,
                 chunk=chunk)
 
@@ -144,10 +144,10 @@ class Sieve(engine.Method):
             ivf = index["ivf"]
             kprime = int(search_params.get("ef_search", 200))
             fn = lambda qv, qb: _post_search(
-                qv, qb, pred_idx, engine.as_device(ivf.centroids),
-                engine.as_device(ivf.centroid_norms), engine.as_device(ivf.lists),
+                qv, qb, pred_idx, fx.as_device(ivf.centroids),
+                fx.as_device(ivf.centroid_norms), fx.as_device(ivf.lists),
                 dev.vectors, dev.norms, dev.bitmaps,
                 nprobe=min(8, ivf.centroids.shape[0]), kprime=kprime, k=k)
-            out[miss_idx] = engine.run_chunked(
+            out[miss_idx], out_d[miss_idx] = engine.run_chunked(
                 fn, miss_idx.size, qvecs[miss_idx], qbms[miss_idx])
-        return out
+        return out, out_d

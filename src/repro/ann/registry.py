@@ -1,0 +1,141 @@
+"""Pluggable filtered-ANN method registry.
+
+Methods register once (the six built-ins auto-register on first use; new
+methods call `register_method` from anywhere — no core edits needed) and
+every consumer resolves them through live *views*:
+`candidate_methods()` is what the router selects among, `all_methods()`
+additionally includes non-candidates such as the exact Pre-filter
+baseline. `repro.ann.methods.CANDIDATE_METHODS` / `ALL_METHODS` are these
+views, so existing `dict`-style call sites keep working unchanged.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Mapping
+
+
+class MethodRegistry:
+    """Name -> Method instance, insertion-ordered, with a candidate flag.
+
+    `candidate=True` methods are the router's selection pool; candidates
+    are what `RouterService` dispatches among, non-candidates (e.g. the
+    exact Pre-filter reference) are still searchable directly.
+    """
+
+    def __init__(self):
+        self._methods: dict[str, object] = {}
+        self._candidate: dict[str, bool] = {}
+
+    # ---- registration ---------------------------------------------------
+    def register(self, method, *, candidate: bool = True,
+                 overwrite: bool = False, name: str | None = None):
+        name = name or getattr(method, "name", None)
+        if not name or name == "?":
+            raise ValueError("method must carry a non-empty .name "
+                             "(or pass name= explicitly)")
+        if name in self._methods and not overwrite:
+            raise ValueError(
+                f"method {name!r} is already registered; pass "
+                f"overwrite=True to replace it")
+        self._methods[name] = method
+        self._candidate[name] = bool(candidate)
+        return method
+
+    def unregister(self, name: str) -> None:
+        self._methods.pop(name, None)
+        self._candidate.pop(name, None)
+
+    # ---- resolution -----------------------------------------------------
+    def get(self, name: str):
+        try:
+            return self._methods[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown method {name!r}; registered: "
+                f"{sorted(self._methods)}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._methods
+
+    def names(self, *, candidates_only: bool = False) -> list[str]:
+        return [n for n in self._methods
+                if not candidates_only or self._candidate[n]]
+
+    def is_candidate(self, name: str) -> bool:
+        return self._candidate.get(name, False)
+
+    def view(self, *, candidates_only: bool = False) -> "RegistryView":
+        return RegistryView(self, candidates_only=candidates_only)
+
+
+class RegistryView(Mapping):
+    """Live, read-only Mapping over a registry subset — reflects later
+    registrations immediately (this is what makes `CANDIDATE_METHODS`
+    extensible without core edits)."""
+
+    def __init__(self, registry: MethodRegistry, *, candidates_only: bool):
+        self._registry = registry
+        self._candidates_only = candidates_only
+
+    def __getitem__(self, name: str):
+        if self._candidates_only and not self._registry.is_candidate(name):
+            raise KeyError(name)
+        return self._registry.get(name)
+
+    def __iter__(self):
+        return iter(self._registry.names(
+            candidates_only=self._candidates_only))
+
+    def __len__(self) -> int:
+        return len(self._registry.names(
+            candidates_only=self._candidates_only))
+
+    def __repr__(self) -> str:
+        kind = "candidates" if self._candidates_only else "all"
+        return f"RegistryView({kind}: {list(self)})"
+
+
+_DEFAULT = MethodRegistry()
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Import repro.ann.methods once so the six built-ins register."""
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True   # set first: guards re-entrant import
+        try:
+            import repro.ann.methods  # noqa: F401  (registers on import)
+        except BaseException:
+            _BUILTINS_LOADED = False   # don't poison the flag on failure
+            raise
+
+
+def default_registry() -> MethodRegistry:
+    _ensure_builtins()
+    return _DEFAULT
+
+
+def register_method(method, *, candidate: bool = True,
+                    overwrite: bool = False, name: str | None = None):
+    """Register a Method instance in the default registry."""
+    return _DEFAULT.register(method, candidate=candidate,
+                             overwrite=overwrite, name=name)
+
+
+def unregister_method(name: str) -> None:
+    _DEFAULT.unregister(name)
+
+
+def get_method(name: str):
+    return default_registry().get(name)
+
+
+def candidate_methods() -> RegistryView:
+    """Live view of the router's candidate pool."""
+    return default_registry().view(candidates_only=True)
+
+
+def all_methods() -> RegistryView:
+    """Live view of every registered method (candidates + baselines)."""
+    return default_registry().view()

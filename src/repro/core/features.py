@@ -185,7 +185,7 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
 # ---------------------------------------------------------------------------
 
 def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
-                      pred: Predicate) -> np.ndarray:
+                      pred: Predicate, *, fx=None) -> np.ndarray:
     """[Q] predicate selectivity fractions for a whole query batch.
 
     On TPU this is one Pallas `selectivity` kernel call over the
@@ -193,6 +193,11 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
     group-table reduction (G ≪ N rows, weighted by group size) — both are
     exact, and both replace the Q independent host scans of the old
     per-query path.
+
+    `fx`: the caller's owned `FilteredIndex` for `ds`, when it has one —
+    otherwise the TPU path falls back to the shared default pool (which
+    would pin a *second* copy of the device tensors if an owned handle
+    already exists).
     """
     import jax
 
@@ -200,13 +205,13 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
     if jax.default_backend() == "tpu":
         import jax.numpy as jnp
 
-        from repro.ann import engine
+        from repro.ann.index import default_index
         from repro.kernels import ops
 
-        # qbms is per-request: upload directly (engine.as_device would pin
-        # every batch in its cache forever)
+        # qbms is per-request: upload directly (the handle's as_device
+        # cache would pin every batch forever)
         counts = ops.selectivity(jnp.asarray(qbms),
-                                 engine.device_data(ds).bitmaps,
+                                 (fx or default_index(ds)).device.bitmaps,
                                  pred=int(pred))
         return np.asarray(counts).astype(np.float64) / ds.n
 
@@ -214,7 +219,7 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
     # evaluate unique bitmaps once and scatter the results back
     uq, inv = np.unique(qbms, axis=0, return_inverse=True)
     if uq.shape[0] < qbms.shape[0]:
-        return batch_selectivity(ds, uq, pred)[inv]
+        return batch_selectivity(ds, uq, pred, fx=fx)[inv]
 
     gb = ds.group_bitmaps                       # [G, W]
     q, w = qbms.shape
@@ -255,7 +260,8 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
 
 
 def query_feature_arrays(ds: ANNDataset, dsf: DatasetFeatures,
-                         qbms: np.ndarray, pred: Predicate) -> dict:
+                         qbms: np.ndarray, pred: Predicate, *,
+                         fx=None) -> dict:
     """All 6 query-aware features for a whole batch: name -> [Q] float64.
 
     Numerically identical to Q calls of `query_features` (asserted by
@@ -268,9 +274,9 @@ def query_feature_arrays(ds: ANNDataset, dsf: DatasetFeatures,
     minf = np.where(has, np.min(np.where(bits, lf, np.inf), axis=1), 0.0)
     maxf = np.where(has, np.max(np.where(bits, lf, -np.inf), axis=1), 0.0)
     meanf = np.where(has, (bits * lf).sum(1) / np.maximum(nl, 1), 0.0)
-    sel = batch_selectivity(ds, qbms, pred)
+    sel = batch_selectivity(ds, qbms, pred, fx=fx)
     cooc = sel if Predicate(pred) == Predicate.AND \
-        else batch_selectivity(ds, qbms, Predicate.AND)
+        else batch_selectivity(ds, qbms, Predicate.AND, fx=fx)
     return {
         "n_labels": nl.astype(np.float64),
         "selectivity": sel,
@@ -299,13 +305,14 @@ def query_features(ds: ANNDataset, dsf: DatasetFeatures, qbm: np.ndarray,
 
 
 def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
-                   feature_names: list[str]) -> np.ndarray:
+                   feature_names: list[str], *, fx=None) -> np.ndarray:
     """[Q, F(+2 for one-hot pred)] raw feature matrix in `feature_names`
     order; 'pred' expands to a 3-way one-hot. Query-aware columns come from
-    the batched `query_feature_arrays` pass — no per-query Python loop."""
+    the batched `query_feature_arrays` pass — no per-query Python loop.
+    `fx`: optional owned `FilteredIndex` (see `batch_selectivity`)."""
     dsf = dataset_features(ds)
     nq = qbms.shape[0]
-    qf = query_feature_arrays(ds, dsf, qbms, pred) \
+    qf = query_feature_arrays(ds, dsf, qbms, pred, fx=fx) \
         if any(n in QUERY_FEATURES for n in feature_names) else {}
     cols = []
     for name in feature_names:

@@ -11,15 +11,22 @@ benchmark table B → argmax-r̂ fallback) runs as numpy array ops over
 precomputed per-method `(ps_id, qps)` tables from
 `BenchmarkTable.routing_arrays`.
 
-TPU-idiomatic addition (DESIGN.md §3): `route_and_search` routes a *batch*
-of queries with one fused forward, then groups queries by chosen
-(method, ps) and executes each group as a single batched search.
+TPU-idiomatic addition (DESIGN.md §3): batched group dispatch — route a
+*batch* of queries with one fused forward, then execute each chosen
+(method, ps) group as a single batched search. That dispatch now lives in
+`repro.ann.service.RouterService`; `route_and_search` here is a
+deprecation shim over it. Persistence is a versioned artifact directory
+(`router.json` manifest + `weights.npz` + `table.json`) with a
+back-compat loader for the legacy pickle.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import pickle
+import warnings
 
 import numpy as np
 
@@ -28,6 +35,14 @@ from repro.ann.predicates import Predicate
 from repro.core import features as F
 from repro.core import mlp
 from repro.core.table import BenchmarkTable
+
+# versioned router artifact directory (router.json manifest + npz weights
+# + benchmark table); MLRouter.load also reads the legacy pickle format.
+ARTIFACT_FORMAT = "repro.router"
+ARTIFACT_VERSION = 1
+_MANIFEST = "router.json"
+_WEIGHTS = "weights.npz"
+_TABLE = "table.json"
 
 
 @dataclasses.dataclass
@@ -42,10 +57,12 @@ class MLRouter:
 
     # ---- prediction -----------------------------------------------------
     def predict_recalls(self, ds: ANNDataset, qbms: np.ndarray,
-                        pred: Predicate) -> np.ndarray:
+                        pred: Predicate, *, fx=None) -> np.ndarray:
         """[Q, M] predicted recall@10 per candidate method (one vectorised
-        feature pass + one stacked-MLP forward for the whole batch)."""
-        x = F.feature_matrix(ds, qbms, pred, self.feature_names)
+        feature pass + one stacked-MLP forward for the whole batch).
+        `fx`: the caller's owned `FilteredIndex`, so the TPU feature
+        kernel reuses its device tensors instead of the default pool."""
+        x = F.feature_matrix(ds, qbms, pred, self.feature_names, fx=fx)
         return self.predict_recalls_from_features(x)
 
     def stacked_params(self):
@@ -117,41 +134,98 @@ class MLRouter:
     # ---- batched dispatch --------------------------------------------------
     def route_and_search(self, ds: ANNDataset, qvecs: np.ndarray,
                          qbms: np.ndarray, pred: Predicate, k: int,
-                         t: float, methods_impl: dict):
-        """Route, then execute each (method, ps) group as one batched search.
-        Returns (ids [Q, k], decisions)."""
-        from repro.ann import engine
+                         t: float, methods_impl: dict | None = None):
+        """Deprecated shim (one PR cycle): use
+        `repro.ann.service.RouterService.search` with a `QueryBatch`.
 
-        decisions = self.route(ds, qbms, pred, t)
-        out = np.full((qvecs.shape[0], k), -1, dtype=np.int32)
-        groups: dict = {}
-        for qi, d in enumerate(decisions):
-            groups.setdefault(d, []).append(qi)
-        for (m_name, ps_id), idxs in groups.items():
-            method = methods_impl[m_name]
-            by_id = {s.ps_id: s for s in method.param_settings()}
-            # B may not cover a brand-new deployment dataset yet: fall back
-            # to the method's max-budget setting until it is benchmarked.
-            setting = by_id.get(ps_id, method.param_settings()[-1])
-            index = engine.get_index(method, ds, setting.build)
-            idxs = np.asarray(idxs)
-            out[idxs] = method.search(ds, index, qvecs[idxs], qbms[idxs],
-                                      pred, k, setting.search_dict)
-        return out, decisions
+        Routes, then executes each (method, ps) group as one batched
+        search via a pooled `FilteredIndex`. Returns (ids [Q, k],
+        decisions)."""
+        warnings.warn(
+            "MLRouter.route_and_search is deprecated; use "
+            "repro.ann.service.RouterService.search(QueryBatch(...))",
+            DeprecationWarning, stacklevel=2)
+        from repro.ann.index import QueryBatch, default_index
+        from repro.ann.service import RouterService
+
+        svc = RouterService(default_index(ds), self, methods=methods_impl)
+        res = svc.search(QueryBatch(qvecs, qbms, pred, k), t=t)
+        return res.ids, res.decisions
 
     # ---- persistence ----
     def save(self, path: str) -> None:
-        with open(path, "wb") as f:
-            pickle.dump({
-                "feature_names": self.feature_names,
-                "methods": self.methods,
-                "models": self.models,
-                "scaler": (self.scaler.mean, self.scaler.std),
-                "table": self.table.entries,
-            }, f)
+        """Write the versioned artifact directory at `path`:
+
+            path/router.json   — manifest (format, version, features,
+                                 method order, layer counts)
+            path/weights.npz   — per-method MLP layers + scaler
+            path/table.json    — offline benchmark table B
+        """
+        if os.path.isfile(path):
+            raise ValueError(
+                f"router artifact path {path!r} is an existing file; the "
+                f"versioned artifact is a directory (the legacy pickle "
+                f"format is load-only)")
+        os.makedirs(path, exist_ok=True)
+        arrays = {"scaler/mean": np.asarray(self.scaler.mean),
+                  "scaler/std": np.asarray(self.scaler.std)}
+        n_layers = {}
+        for m in self.methods:
+            layers = self.models[m]
+            n_layers[m] = len(layers)
+            for i, layer in enumerate(layers):
+                arrays[f"model/{m}/{i}/w"] = np.asarray(layer["w"])
+                arrays[f"model/{m}/{i}/b"] = np.asarray(layer["b"])
+        np.savez(os.path.join(path, _WEIGHTS), **arrays)
+        self.table.save(os.path.join(path, _TABLE))
+        manifest = {
+            "format": ARTIFACT_FORMAT,
+            "version": ARTIFACT_VERSION,
+            "feature_names": list(self.feature_names),
+            "methods": list(self.methods),
+            "n_layers": n_layers,
+            "weights": _WEIGHTS,
+            "table": _TABLE,
+        }
+        with open(os.path.join(path, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
 
     @staticmethod
     def load(path: str) -> "MLRouter":
+        """Load a router artifact — versioned directory, or the legacy
+        pickle file (back-compat, one PR cycle)."""
+        if os.path.isdir(path):
+            return MLRouter._load_artifact(path)
+        return MLRouter._load_legacy_pickle(path)
+
+    @staticmethod
+    def _load_artifact(path: str) -> "MLRouter":
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(
+                f"{path!r} is not a {ARTIFACT_FORMAT} artifact "
+                f"(format={manifest.get('format')!r})")
+        if int(manifest.get("version", -1)) > ARTIFACT_VERSION:
+            raise ValueError(
+                f"router artifact version {manifest['version']} is newer "
+                f"than supported version {ARTIFACT_VERSION}")
+        with np.load(os.path.join(path, manifest["weights"])) as z:
+            scaler = mlp.Scaler(z["scaler/mean"].copy(),
+                                z["scaler/std"].copy())
+            models = {}
+            for m in manifest["methods"]:
+                models[m] = [
+                    {"w": z[f"model/{m}/{i}/w"].copy(),
+                     "b": z[f"model/{m}/{i}/b"].copy()}
+                    for i in range(int(manifest["n_layers"][m]))]
+        table = BenchmarkTable.load(os.path.join(path, manifest["table"]))
+        return MLRouter(feature_names=list(manifest["feature_names"]),
+                        methods=list(manifest["methods"]),
+                        models=models, scaler=scaler, table=table)
+
+    @staticmethod
+    def _load_legacy_pickle(path: str) -> "MLRouter":
         with open(path, "rb") as f:
             d = pickle.load(f)
         return MLRouter(

@@ -57,22 +57,32 @@ class Collection:
             return pickle.load(f)
 
 
-def collect(datasets: dict, methods: dict, *, n_queries: int = 200,
-            seed: int = 0, k: int = 10, verbose: bool = True) -> Collection:
+def collect(datasets: dict, methods: dict | None = None, *,
+            n_queries: int = 200, seed: int = 0, k: int = 10,
+            verbose: bool = True) -> Collection:
+    """`methods` defaults to the live candidate-registry view; datasets
+    may map to `ANNDataset` or `FilteredIndex` values (bare datasets use
+    the shared default pool so repeat collections reuse device tensors)."""
+    from repro.ann.index import as_index
+    from repro.ann.registry import candidate_methods
     from repro.data.ann_synth import make_queries
 
+    if methods is None:
+        methods = candidate_methods()
     cells = {}
     table = BenchmarkTable.new()
     for ds_name, ds in datasets.items():
+        fx = as_index(ds)
+        ds = fx.ds
         for pred in PREDICATES:
             qs = make_queries(ds, pred, n_queries, k=k, seed=seed)
             numeric = F.feature_matrix(ds, qs.bitmaps, pred,
-                                       F.NUMERIC_FEATURES)
+                                       F.NUMERIC_FEATURES, fx=fx)
             recall, best_ps, sweep = {}, {}, []
             for m_name, m in methods.items():
                 best = None
                 for setting in m.param_settings():
-                    r = bench.run_method(ds, m, setting, qs)
+                    r = bench.run_method(fx, m, setting, qs)
                     table.add(ds_name, int(pred), m_name, setting.ps_id,
                               r.mean_recall, r.qps)
                     sweep.append((m_name, setting.ps_id, r.mean_recall, r.qps))
@@ -151,29 +161,40 @@ def default_paths():
     d = artifacts_dir("router")
     return (os.path.join(d, "collect_train.pkl"),
             os.path.join(d, "collect_val.pkl"),
-            os.path.join(d, "router.pkl"))
+            os.path.join(d, "router"))       # versioned artifact directory
+
+
+def _router_artifact_path(p: str) -> str | None:
+    """Loadable router artifact at `p`: the versioned directory (manifest
+    present), else a legacy pickle left by older runs, else None."""
+    if os.path.isdir(p) and os.path.exists(os.path.join(p, "router.json")):
+        return p
+    if os.path.isfile(p + ".pkl"):
+        return p + ".pkl"
+    return None
 
 
 def build_all(*, n_queries: int = 200, seed: int = 0, force: bool = False,
               verbose: bool = True):
     """Collect train+val data, build B, train the router. Artifact-cached."""
-    from repro.ann.methods import CANDIDATE_METHODS
     from repro.data.ann_synth import TRAIN_SPECS, VALIDATION_SPECS, get_dataset
 
     p_train, p_val, p_router = default_paths()
-    if not force and all(os.path.exists(p) for p in (p_train, p_val, p_router)):
+    router_path = _router_artifact_path(p_router)
+    if not force and os.path.exists(p_train) and os.path.exists(p_val) \
+            and router_path is not None:
         return (Collection.load(p_train), Collection.load(p_val),
-                MLRouter.load(p_router))
+                MLRouter.load(router_path))
 
     train_ds = {n: get_dataset(n) for n in TRAIN_SPECS}
     val_ds = {n: get_dataset(n) for n in VALIDATION_SPECS}
     if verbose:
         print("== collecting training datasets ==", flush=True)
-    coll_train = collect(train_ds, CANDIDATE_METHODS, n_queries=n_queries,
+    coll_train = collect(train_ds, n_queries=n_queries,
                          seed=seed, verbose=verbose)
     if verbose:
         print("== collecting validation datasets ==", flush=True)
-    coll_val = collect(val_ds, CANDIDATE_METHODS, n_queries=n_queries,
+    coll_val = collect(val_ds, n_queries=n_queries,
                        seed=seed + 1, verbose=verbose)
     # B spans both pools (offline benchmarking; §4.1 builds it on the
     # deployment/validation datasets — train entries are free to keep)

@@ -15,6 +15,15 @@ def tiny_ds() -> ANNDataset:
 
 
 @pytest.fixture(scope="session")
+def tiny_index(tiny_ds):
+    from repro.ann.index import FilteredIndex
+
+    fx = FilteredIndex(tiny_ds)
+    yield fx
+    fx.close()
+
+
+@pytest.fixture(scope="session")
 def tiny_queries(tiny_ds):
     return {pred: make_queries(tiny_ds, pred, 25, seed=3)
             for pred in (Predicate.EQUALITY, Predicate.AND, Predicate.OR)}

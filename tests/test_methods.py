@@ -1,4 +1,5 @@
-"""Filtered-ANN method invariants on the tiny dataset."""
+"""Filtered-ANN method invariants on the tiny dataset, run through the
+owned `FilteredIndex` handle."""
 
 import numpy as np
 import pytest
@@ -10,19 +11,20 @@ from repro.ann.predicates import Predicate, PREDICATES
 
 
 @pytest.mark.parametrize("pred", PREDICATES)
-def test_prefilter_recall_is_one(tiny_ds, tiny_queries, pred):
+def test_prefilter_recall_is_one(tiny_index, tiny_queries, pred):
     m = ALL_METHODS["prefilter"]
-    r = bench.run_method(tiny_ds, m, m.param_settings()[0], tiny_queries[pred])
+    r = bench.run_method(tiny_index, m, m.param_settings()[0],
+                         tiny_queries[pred])
     assert r.mean_recall == pytest.approx(1.0)
 
 
 @pytest.mark.parametrize("name", list(CANDIDATE_METHODS))
 @pytest.mark.parametrize("pred", PREDICATES)
-def test_results_satisfy_predicate(tiny_ds, tiny_queries, name, pred):
+def test_results_satisfy_predicate(tiny_ds, tiny_index, tiny_queries, name, pred):
     """Every returned id must satisfy the query predicate (no false hits)."""
     m = CANDIDATE_METHODS[name]
     qs = tiny_queries[pred]
-    r = bench.run_method(tiny_ds, m, m.param_settings()[-1], qs)
+    r = bench.run_method(tiny_index, m, m.param_settings()[-1], qs)
     for qi in range(qs.q):
         mask = tiny_ds.matching_mask(qs.bitmaps[qi], pred)
         for vid in r.ids[qi]:
@@ -31,31 +33,31 @@ def test_results_satisfy_predicate(tiny_ds, tiny_queries, name, pred):
 
 
 @pytest.mark.parametrize("name", list(CANDIDATE_METHODS))
-def test_no_duplicate_results(tiny_ds, tiny_queries, name):
+def test_no_duplicate_results(tiny_index, tiny_queries, name):
     m = CANDIDATE_METHODS[name]
     qs = tiny_queries[Predicate.OR]
-    r = bench.run_method(tiny_ds, m, m.param_settings()[-1], qs)
+    r = bench.run_method(tiny_index, m, m.param_settings()[-1], qs)
     for qi in range(qs.q):
         ids = r.ids[qi][r.ids[qi] >= 0]
         assert len(ids) == len(set(ids.tolist())), (name, qi)
 
 
-def test_labelnav_equality_exact(tiny_ds, tiny_queries):
+def test_labelnav_equality_exact(tiny_index, tiny_queries):
     """The UNG analogue is exact on Equality (its structural sweet spot)."""
     m = CANDIDATE_METHODS["labelnav"]
-    r = bench.run_method(tiny_ds, m, m.param_settings()[0],
+    r = bench.run_method(tiny_index, m, m.param_settings()[0],
                          tiny_queries[Predicate.EQUALITY])
     assert r.mean_recall == pytest.approx(1.0)
 
 
-def test_param_settings_monotone_recall(tiny_ds, tiny_queries):
+def test_param_settings_monotone_recall(tiny_index, tiny_queries):
     """Bigger search budgets should not reduce recall materially."""
     qs = tiny_queries[Predicate.AND]
     for name in ("postfilter", "ivf_gamma", "fvamana"):
         m = CANDIDATE_METHODS[name]
         settings = m.param_settings()
-        lo = bench.run_method(tiny_ds, m, settings[0], qs).mean_recall
-        hi = bench.run_method(tiny_ds, m, settings[-1], qs).mean_recall
+        lo = bench.run_method(tiny_index, m, settings[0], qs).mean_recall
+        hi = bench.run_method(tiny_index, m, settings[-1], qs).mean_recall
         assert hi >= lo - 0.05, (name, lo, hi)
 
 
@@ -67,7 +69,7 @@ def test_recall_at_k_contract():
     assert rec[1] == pytest.approx(1.0)
 
 
-def test_empty_result_query(tiny_ds):
+def test_empty_result_query(tiny_ds, tiny_index):
     """A label set absent from the dataset gives zero Equality matches."""
     from repro.ann import labels as lb
     from repro.ann.dataset import QuerySet
@@ -79,6 +81,26 @@ def test_empty_result_query(tiny_ds):
                   vectors=tiny_ds.vectors[:1].copy(), bitmaps=qbm,
                   ground_truth=np.full((1, 10), -1, np.int32), k=10)
     m = CANDIDATE_METHODS["labelnav"]
-    r = bench.run_method(tiny_ds, m, m.param_settings()[0], qs)
+    r = bench.run_method(tiny_index, m, m.param_settings()[0], qs)
     assert (r.ids == -1).all()
+    assert np.isinf(r.dists).all()        # score contract: +inf at −1 pad
     assert r.mean_recall == pytest.approx(1.0)   # vacuous query
+
+
+def test_prefilter_kernel_path_parity(tiny_index, tiny_queries):
+    """`PreFilter(use_kernel=True)` (the TPU `ops.masked_topk` route, in
+    interpret mode here) matches the jnp reference path exactly."""
+    from repro.ann.methods.prefilter import PreFilter
+
+    ref, kern = PreFilter(use_kernel=False), PreFilter(use_kernel=True)
+    st = ref.param_settings()[0]
+    for pred in PREDICATES:
+        qs = tiny_queries[pred]
+        # keep the interpret-mode kernel cheap: 8 queries
+        sub_v, sub_b = qs.vectors[:8], qs.bitmaps[:8]
+        ids_ref, d_ref = ref.search(tiny_index, None, sub_v, sub_b,
+                                    pred, qs.k, {})
+        ids_k, d_k = kern.search(tiny_index, None, sub_v, sub_b,
+                                 pred, qs.k, {})
+        np.testing.assert_array_equal(ids_ref, ids_k)
+        np.testing.assert_allclose(d_ref, d_k, rtol=1e-5, atol=1e-4)

@@ -145,34 +145,38 @@ def test_mlp_classifier():
 
 
 def test_router_save_load(tmp_path):
+    """Versioned artifact directory round-trips weights + table."""
     rng = np.random.default_rng(0)
     x = rng.normal(size=(64, 5)).astype(np.float32)
     models = {m: params_to_numpy(train_mlp(x, x[:, 0], epochs=5))
               for m in ("A", "B")}
     r = _router_with(models)
-    p = str(tmp_path / "router.pkl")
+    p = str(tmp_path / "router")
     r.save(p)
     r2 = MLRouter.load(p)
+    assert r2.table.entries == r.table.entries
     got = r2.predict_recalls_from_features(x)
     want = r.predict_recalls_from_features(x)
     np.testing.assert_allclose(got, want, rtol=1e-6)
 
 
-def test_router_end_to_end_tiny(tiny_ds, tiny_queries):
+def test_router_end_to_end_tiny(tiny_ds, tiny_index, tiny_queries):
     """Router trained on the tiny dataset routes at least as well as the
-    mean single method on it."""
-    from repro.ann.methods import CANDIDATE_METHODS
+    mean single method on it (served via RouterService)."""
+    from repro.ann.index import QueryBatch
+    from repro.ann.service import RouterService
     from repro.core import training as T
     from repro.ann.dataset import recall_at_k
 
-    coll = T.collect({"tiny": tiny_ds}, CANDIDATE_METHODS, n_queries=25,
+    coll = T.collect({"tiny": tiny_index}, n_queries=25,
                      seed=3, verbose=False)
     router = T.train_router(coll, coll.table, epochs=60)
+    svc = RouterService(tiny_index, router, t=0.9)
     qs = tiny_queries[Predicate.AND]
-    ids, dec = router.route_and_search(
-        tiny_ds, qs.vectors, qs.bitmaps, Predicate.AND, 10, 0.9,
-        CANDIDATE_METHODS)
-    rec = recall_at_k(ids, qs.ground_truth).mean()
+    res = svc.search(QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10))
+    rec = recall_at_k(res.ids, qs.ground_truth).mean()
     per_method = [coll.cells[("tiny", 1)].recall[m].mean()
                   for m in T.METHOD_ORDER]
     assert rec >= np.mean(per_method) - 0.05
+    assert len(res.decisions) == qs.q
+    assert set(res.timings) >= {"route_s", "search_s", "total_s"}

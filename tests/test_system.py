@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.ann.dataset import recall_at_k
-from repro.ann.methods import CANDIDATE_METHODS
+from repro.ann.index import QueryBatch
 from repro.ann.predicates import Predicate
+from repro.ann.service import RouterService
 from repro.core import training as T
 from repro.core.oracle import oracle_recall
 
@@ -75,19 +76,18 @@ def test_router_pareto_dominates_single_methods():
             assert d["time"] > routed_time, (m, m_rec, d["time"], routed_time)
 
 
-def test_route_and_search_executes(tiny_ds, tiny_queries):
+def test_service_search_executes(tiny_index, tiny_queries):
     """Full dispatch path on fresh data with the shipped router."""
     _, _, router = _artifacts()
     qs = tiny_queries[Predicate.AND]
-    ids, decisions = router.route_and_search(
-        tiny_ds, qs.vectors, qs.bitmaps, Predicate.AND, 10, 0.9,
-        CANDIDATE_METHODS)
-    rec = recall_at_k(ids, qs.ground_truth).mean()
+    svc = RouterService(tiny_index, router, t=0.9)
+    res = svc.search(QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10))
+    rec = recall_at_k(res.ids, qs.ground_truth).mean()
     assert rec > 0.6
-    assert len(decisions) == qs.q
+    assert len(res.decisions) == qs.q
 
 
-def test_rag_serve_path(tiny_ds):
+def test_rag_serve_path(tiny_ds, tiny_index):
     """LM produces the query embedding; the router picks the method; the
     engine searches — the end-to-end serving story."""
     import jax
@@ -97,21 +97,22 @@ def test_rag_serve_path(tiny_ds):
     from repro.models import common, lm
     from repro.ann import labels as lb
 
+    from repro.launch.mesh import make_mesh_compat
+
     _, _, router = _artifacts()
     cfg = get_smoke_config("qwen2-0.5b")
     params = common.init_params(lm.model_desc(cfg), jax.random.PRNGKey(0))
-    ctx = lm.ModelCtx(mesh=jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2),
-        qc_prefill=16, gla_chunk=16)
+    ctx = lm.ModelCtx(mesh=make_mesh_compat((1, 1), ("data", "model")),
+                      qc_prefill=16, gla_chunk=16)
     toks = jnp.ones((2, 16), jnp.int32)
     with ctx.mesh:
         logits, cache = lm.forward_prefill(params, {"tokens": toks}, cfg, ctx)
     # embedding = final hidden state proxy: use logits slice projected down
     emb = np.asarray(logits[:, 0, :tiny_ds.dim], np.float32)
     qbms = np.stack([lb.pack_one([0], tiny_ds.universe)] * 2)
-    ids, dec = router.route_and_search(
-        tiny_ds, emb, qbms, Predicate.OR, 5, 0.5, CANDIDATE_METHODS)
-    assert ids.shape == (2, 5)
+    svc = RouterService(tiny_index, router)
+    res = svc.search_chunked(QueryBatch(emb, qbms, Predicate.OR, 5), t=0.5)
+    assert res.ids.shape == (2, 5)
+    assert len(res.decisions) == 2
     mask = tiny_ds.matching_mask(qbms[0], Predicate.OR)
-    assert all(mask[i] for i in ids.ravel() if i >= 0)
+    assert all(mask[i] for i in res.ids.ravel() if i >= 0)
