@@ -47,11 +47,13 @@ def run(verbose=True, sizes=(4096, 16384, 65536)):
         for name, fn in (("two_pass", _two_pass), ("fused", _fused)):
             fn(qv, qb, base, norms, bm).block_until_ready()
             times = []
-            for _ in range(5):
+            for _ in range(7):
                 t0 = time.perf_counter()
                 fn(qv, qb, base, norms, bm).block_until_ready()
                 times.append(time.perf_counter() - t0)
-            out[name] = float(np.median(times) * 1e6)
+            # min, not median: the --check gate compares these across
+            # runs, and best-of-N is robust to shared-host interference
+            out[name] = float(np.min(times) * 1e6)
         rows.append({"n": n, "q": q,
                      "two_pass_us": round(out["two_pass"], 1),
                      "fused_us": round(out["fused"], 1),

@@ -1,0 +1,57 @@
+"""Sharded-service timing: one batched exact search through
+`ShardedFilteredIndex` at increasing shard counts, against the
+single-index baseline (shards=1).
+
+On a multi-device host each shard owns its device and executes in
+parallel; on this CPU container every shard lands on the one device, so
+the harness measures the partition + per-shard dispatch + `merge_topk`
+overhead — the quantity the smoke trajectory gates (a regression here
+means the sharding layer itself got more expensive, independent of
+device parallelism).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ann.index import QueryBatch
+from repro.ann.predicates import Predicate
+from repro.ann.sharded import ShardedFilteredIndex
+from repro.data.ann_synth import DatasetSpec, make_queries, synthesize
+
+from benchmarks.common import emit, timeit_best_us
+
+_SPEC = DatasetSpec("bench_shard", 8192, 32, 60, 8, 16, 1.3, 2.0, 0.5, 0.3, 13)
+_SMOKE_SPEC = DatasetSpec("bench_shard_smoke", 2048, 32, 60, 8, 16,
+                          1.3, 2.0, 0.5, 0.3, 13)
+
+
+def run(verbose=True, smoke: bool = False, q: int | None = None,
+        shard_counts=None):
+    if smoke:
+        spec, q, shard_counts = _SMOKE_SPEC, q or 64, shard_counts or (1, 2)
+    else:
+        spec, q, shard_counts = _SPEC, q or 128, shard_counts or (1, 2, 4)
+    ds = synthesize(spec)
+    qs = make_queries(ds, Predicate.AND, q, seed=3)
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    rows = []
+    base_ids = None
+    for s in shard_counts:
+        with ShardedFilteredIndex(ds, s) as sfx:
+            res = sfx.search(batch, "prefilter")        # warm-up + build
+            if base_ids is None:
+                base_ids = res.ids
+            else:                                        # partition sanity
+                assert np.array_equal(res.ids, base_ids)
+            batch_us = timeit_best_us(
+                lambda: sfx.search(batch, "prefilter"), repeat=5)
+        rows.append({"shards": s, "n": ds.n, "q": q,
+                     "batch_us": round(batch_us, 1),
+                     "per_query_us": round(batch_us / q, 2)})
+        if verbose:
+            print(f"  shards={s} n={ds.n} q={q}: "
+                  f"{batch_us / 1e3:.1f} ms/batch "
+                  f"({batch_us / q:.0f} us/query)", flush=True)
+    path = emit(rows, "sharded_service")
+    return rows, path

@@ -1,9 +1,15 @@
 """End-to-end serving driver (the paper's deployment scenario): a served LM
-handles batched requests — each request embeds a query, the query-aware
+handles concurrent requests — each request embeds a query, the query-aware
 router picks the filtered-ANN method + parameter setting, the engine
 retrieves, and the LM generates conditioned on the retrieved ids.
 
-    PYTHONPATH=src python examples/rag_serve.py [--requests 32]
+Requests are served through `AsyncBatchQueue`: every request `submit()`s
+its single query independently (as concurrent callers would) and the
+queue coalesces them into routed micro-batches. `--shards N` swaps the
+single `FilteredIndex` for a row-sharded `ShardedFilteredIndex` +
+`ShardedRouterService`.
+
+    PYTHONPATH=src python examples/rag_serve.py [--requests 32] [--shards 2]
 """
 
 import argparse
@@ -13,9 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.index import FilteredIndex
 from repro.ann.predicates import Predicate
-from repro.ann.service import RouterService
+from repro.ann.service import (AsyncBatchQueue, RouterService,
+                               ShardedRouterService)
+from repro.ann.sharded import ShardedFilteredIndex
 from repro.ann import labels as lb
 from repro.configs.base import get_smoke_config
 from repro.core import training as T
@@ -29,6 +37,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row shards for the corpus (1 = single index)")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
 
@@ -38,9 +48,14 @@ def main():
     fx = FilteredIndex(ds)
     coll = T.collect({"corpus": fx}, n_queries=60, seed=0, verbose=False)
     router = T.train_router(coll, coll.table, epochs=80)
-    svc = RouterService(fx, router, t=0.9)
-    print(f"corpus: {ds.n} vectors; router trained "
-          f"({len(router.table.entries)} table entries)")
+    if args.shards > 1:
+        fx.close()               # collect() is done; shards own their tensors
+        sfx = ShardedFilteredIndex(ds, args.shards)
+        svc = ShardedRouterService(sfx, router, t=0.9)
+    else:
+        svc = RouterService(fx, router, t=0.9)
+    print(f"corpus: {ds.n} vectors ({args.shards} shard(s)); router "
+          f"trained ({len(router.table.entries)} table entries)")
 
     # --- served LM (reduced config; embeddings from its hidden states) ---
     cfg = get_smoke_config(args.arch)
@@ -65,16 +80,22 @@ def main():
     emb = np.asarray(logits[:, 0, : ds.dim], np.float32)   # query embeddings
     t_embed = time.perf_counter() - t0
 
-    # --- route + retrieve per predicate group (micro-batched serving) ---
+    # --- route + retrieve through the async micro-batch queue: each
+    # request submits independently (concurrent callers), the queue
+    # coalesces them into routed batches ---
     t0 = time.perf_counter()
     retrieved = np.full((b, 5), -1, np.int32)
-    for pred in (Predicate.EQUALITY, Predicate.AND, Predicate.OR):
-        sel = [i for i in range(b) if preds[i] == pred]
-        if not sel:
-            continue
-        res = svc.search_chunked(QueryBatch(emb[sel], qbms[sel], pred, k=5))
-        retrieved[sel] = res.ids
+    with AsyncBatchQueue(svc, max_batch=16, max_wait_ms=20.0) as queue:
+        futs = [queue.submit(emb[i], qbms[i], preds[i], k=5)
+                for i in range(b)]
+        for i, f in enumerate(futs):
+            retrieved[i] = f.result(timeout=300).ids
+        qstats = queue.stats()
     t_retrieve = time.perf_counter() - t0
+    print(f"queue: {qstats['batches']} micro-batches for "
+          f"{qstats['queries']} requests "
+          f"(largest {qstats['max_batch_seen']}, "
+          f"flushes {qstats['flush_reasons']})")
 
     # --- generate conditioned on retrieval (ids appended as tokens) ---
     t0 = time.perf_counter()
@@ -92,6 +113,7 @@ def main():
     print("sample generations:", out[:2].tolist())
     hit = (retrieved >= 0).any(1).mean()
     print(f"retrieval hit rate: {hit:.2f}")
+    svc.index.close()
 
 
 if __name__ == "__main__":

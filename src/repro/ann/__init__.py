@@ -1,11 +1,14 @@
 """Filtered-ANN engine: label bitmaps, predicates, datasets, the six
 TPU-native filtered-ANN methods, and the owned serving surface
-(`FilteredIndex` + `QueryBatch`/`SearchResult` + `RouterService`)."""
+(`FilteredIndex` + `QueryBatch`/`SearchResult` + `RouterService`, scaled
+out by `ShardedFilteredIndex`/`ShardedRouterService` and the async
+micro-batch queue — see docs/serving.md)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult)
+from repro.ann.sharded import ShardedFilteredIndex
 
 __all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
-           "RoutingDecision", "SearchResult"]
+           "RoutingDecision", "SearchResult", "ShardedFilteredIndex"]

@@ -8,17 +8,48 @@ an `all_gather` of the tiny [k] per-shard results is merged into the
 global top-k. Collective volume per query is `shards × k × 8` bytes —
 independent of corpus size, which is what makes the scheme viable at
 billion-vector scale.
+
+Two layers share this row-partition scheme:
+
+* `make_sharded_search` (here) — a single jitted shard_map over a
+  `launch.mesh` mesh; exact brute force only, minimum dispatch overhead.
+* `repro.ann.sharded.ShardedFilteredIndex` — host-orchestrated: one
+  owned `FilteredIndex` per shard (any registered method, per-shard
+  built indexes) with the cross-shard `ops.merge_topk` reduction. The
+  `shard_bounds`/`shard_devices` helpers below are its partition/
+  placement plumbing.
 """
 
 from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.ann import engine, topk
+
+
+def shard_bounds(n: int, n_shards: int) -> np.ndarray:
+    """Balanced contiguous row partition: [S+1] boundaries with every
+    shard size n//S or n//S + 1 (the first `n % S` shards take the extra
+    row). Raises ValueError unless 1 <= n_shards <= n."""
+    if not 1 <= n_shards <= n:
+        raise ValueError(f"need 1 <= n_shards <= n; got {n_shards}, n={n}")
+    base, extra = divmod(n, n_shards)
+    sizes = np.full(n_shards, base, dtype=np.int64)
+    sizes[:extra] += 1
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+def shard_devices(n_shards: int) -> list:
+    """One jax device per shard, round-robin over the host's devices
+    (every shard shares the single device of a CPU host)."""
+    devs = jax.local_devices()
+    return [devs[i % len(devs)] for i in range(n_shards)]
 
 
 def make_sharded_search(mesh, *, k: int, data_axes=("data",)):

@@ -2,9 +2,8 @@
 
 * `DeviceData` — per-dataset device-resident tensors (vectors, norms,
   bitmaps, group tables). Ownership lives in `repro.ann.index.
-  FilteredIndex`; the module-global caches that used to live here are
-  gone (the `device_data`/`as_device`/`get_index` shims below delegate
-  to the default handle pool for one PR cycle).
+  FilteredIndex` (the PR-2 `device_data`/`as_device`/`get_index`
+  deprecation shims are gone; see docs/serving.md for the migration).
 * word-looped predicate masks that avoid materialising `[Q, N, W]`
   temporaries (predicate type is a *traced* scalar so one compiled
   executable serves all three predicates).
@@ -15,7 +14,6 @@
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,43 +37,11 @@ class DeviceData:
     group_cnorms: jax.Array     # [G] f32
 
 
-# ---------------------------------------------------------------------------
-# deprecation shims (one PR cycle) — state now lives on FilteredIndex
-# ---------------------------------------------------------------------------
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(f"repro.ann.engine.{old} is deprecated; use {new}",
-                  DeprecationWarning, stacklevel=3)
-
-
 def clear_caches() -> None:
     """Evict the default handle pool (owned caches live on FilteredIndex)."""
     from repro.ann.index import clear_pool
 
     clear_pool()
-
-
-def as_device(x):
-    """Deprecated: use `FilteredIndex.as_device` (owned upload cache).
-    This shim uploads without caching."""
-    _deprecated("as_device", "FilteredIndex.as_device")
-    return jnp.asarray(x)
-
-
-def device_data(ds: ANNDataset) -> DeviceData:
-    """Deprecated: use `FilteredIndex.device`."""
-    _deprecated("device_data", "FilteredIndex.device")
-    from repro.ann.index import default_index
-
-    return default_index(ds).device
-
-
-def get_index(method: "Method", ds: ANNDataset, build_params: tuple):
-    """Deprecated: use `FilteredIndex.get_index`."""
-    _deprecated("get_index", "FilteredIndex.get_index")
-    from repro.ann.index import default_index
-
-    return default_index(ds).get_index(method, build_params)
 
 
 # ---------------------------------------------------------------------------

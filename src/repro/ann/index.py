@@ -43,7 +43,17 @@ class RoutingDecision(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class QueryBatch:
-    """A validated batch of filtered queries of one predicate type."""
+    """A validated batch of filtered queries of one predicate type.
+
+    Args:
+        vectors: [Q, d] query embeddings (coerced to float32).
+        bitmaps: [Q, W] packed query label sets (coerced to uint32).
+        pred: the batch's `Predicate` (or its int value).
+        k: result width per query (>= 1).
+    Raises:
+        ValueError: on construction, for non-2-D vectors/bitmaps, a Q
+            mismatch between them, an empty batch, or k < 1.
+    """
     vectors: np.ndarray       # [Q, d] float32
     bitmaps: np.ndarray       # [Q, W] uint32 packed label sets
     pred: Predicate
@@ -131,14 +141,33 @@ def exact_distances(raw_scores: np.ndarray, ids: np.ndarray,
 
 
 class FilteredIndex:
-    """Owned per-dataset serving handle (device tensors + built indexes)."""
+    """Owned per-dataset serving handle.
 
-    def __init__(self, ds: ANNDataset, *, registry=None):
+    Owns every piece of per-dataset serving state and ties it to one
+    lifecycle: device-resident tensors (`device`), the host→device upload
+    cache (`as_device`), per-(method, build-params) offline indexes
+    (`get_index`), and the per-dataset routing features
+    (`repro.core.features.dataset_features` caches onto the handle).
+    `close()` — or exiting the context manager — frees all of it.
+
+    Args:
+        ds: the dataset this handle serves.
+        registry: optional `MethodRegistry` overriding the default when
+            method names are resolved (`search("prefilter")` etc.).
+        device: optional `jax.Device` to pin this handle's tensors to —
+            the placement hook `ShardedFilteredIndex` uses to spread
+            shards across a multi-device host. Default: jax's default
+            device.
+    """
+
+    def __init__(self, ds: ANNDataset, *, registry=None, device=None):
         self.ds = ds
         self._registry = registry
+        self._placement = device
         self._device: DeviceData | None = None
         self._indexes: dict = {}     # (method_name, build_tuple) -> index
         self._arrays: dict = {}      # id(host_array) -> (host, device)
+        self._features = None        # repro.core.features.DatasetFeatures
         self._closed = False
 
     # ---- lifecycle ------------------------------------------------------
@@ -147,10 +176,13 @@ class FilteredIndex:
         return self._closed
 
     def close(self) -> None:
-        """Drop every owned device tensor, upload, and built index."""
+        """Drop every owned device tensor, upload, built index, and cached
+        feature state. Subsequent use raises RuntimeError; closing twice
+        is a no-op."""
         self._device = None
         self._indexes.clear()
         self._arrays.clear()
+        self._features = None
         self._closed = True
 
     def __enter__(self) -> "FilteredIndex":
@@ -167,21 +199,44 @@ class FilteredIndex:
     # ---- owned device state ---------------------------------------------
     @property
     def device(self) -> DeviceData:
-        """Device-resident dataset tensors (built lazily, owned)."""
+        """Device-resident dataset tensors (built lazily, owned; placed on
+        this handle's pinned device when one was given).
+
+        Raises RuntimeError if the handle is closed."""
         self._check_open()
         if self._device is None:
-            self._device = _build_device_data(self.ds)
+            with self._device_scope():
+                self._device = _build_device_data(self.ds)
         return self._device
 
+    def _device_scope(self):
+        """Context placing uploads on the pinned device (no-op if unset)."""
+        import contextlib
+
+        import jax
+
+        if self._placement is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self._placement)
+
     def as_device(self, x):
-        """Cached np→device upload, owned by this handle."""
+        """Cached np→device upload, owned by this handle.
+
+        Args:
+            x: a host array. Keyed by identity — re-uploading the same
+               array object is free; a new object with equal contents
+               uploads again.
+        Returns: the device-resident `jax.Array`.
+        Raises: RuntimeError if the handle is closed.
+        """
         import jax.numpy as jnp
 
         self._check_open()
         key = id(x)
         hit = self._arrays.get(key)
         if hit is None or hit[0] is not x:
-            hit = (x, jnp.asarray(x))
+            with self._device_scope():
+                hit = (x, jnp.asarray(x))
             self._arrays[key] = hit
         return hit[1]
 
@@ -193,7 +248,15 @@ class FilteredIndex:
         return method
 
     def get_index(self, method, build_params: tuple | dict | None = None):
-        """Built (offline) index for (method, build-params), cached."""
+        """Built (offline) index for (method, build-params), cached.
+
+        Args:
+            method: a `Method` instance or registered method name.
+            build_params: the method's build-parameter dict (or its
+                sorted-items tuple); None means no build parameters.
+        Returns: the method's opaque built-index object.
+        Raises: RuntimeError if closed; KeyError for an unknown name.
+        """
         self._check_open()
         method = self._resolve_method(method)
         if build_params is None:
@@ -215,12 +278,14 @@ class FilteredIndex:
         return len(keys)
 
     def stats(self) -> dict:
+        """Snapshot of the handle's owned state (for logging/debugging)."""
         return {
             "dataset": self.ds.name,
             "n": self.ds.n,
             "device_resident": self._device is not None,
             "built_indexes": sorted(k[0] for k in self._indexes),
             "cached_uploads": len(self._arrays),
+            "features_cached": self._features is not None,
             "closed": self._closed,
         }
 
@@ -247,8 +312,15 @@ class FilteredIndex:
                setting: ParamSetting | str | None = None) -> SearchResult:
         """Direct single-method search (no routing).
 
-        `setting` may be a `ParamSetting`, a ps_id string, or None (the
-        method's max-budget setting).
+        Args:
+            batch: the validated query batch.
+            method: a `Method` instance or registered method name.
+            setting: a `ParamSetting`, a ps_id string, or None (the
+                method's max-budget setting).
+        Returns: a `SearchResult` with [Q, k] ids + exact squared-L2
+            distances (`decisions` is None — no routing happened).
+        Raises: RuntimeError if closed; ValueError on dataset/batch
+            shape mismatch; KeyError for an unknown method name.
         """
         method = self._resolve_method(method)
         if not isinstance(setting, ParamSetting):

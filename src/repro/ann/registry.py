@@ -118,7 +118,20 @@ def default_registry() -> MethodRegistry:
 
 def register_method(method, *, candidate: bool = True,
                     overwrite: bool = False, name: str | None = None):
-    """Register a Method instance in the default registry."""
+    """Register a Method instance in the default registry.
+
+    Args:
+        method: an `engine.Method` instance carrying a non-empty `.name`
+            (or pass `name=` explicitly).
+        candidate: True puts the method in the router's selection pool
+            (`CANDIDATE_METHODS`); False keeps it direct-search only.
+        overwrite: allow replacing an already-registered name.
+        name: optional explicit registration name.
+    Returns: the method (so the call can be used as a decorator-ish
+        one-liner at module import).
+    Raises: ValueError for a missing name or a duplicate without
+        `overwrite=True`.
+    """
     return _DEFAULT.register(method, candidate=candidate,
                              overwrite=overwrite, name=name)
 

@@ -11,12 +11,28 @@ serves typed `QueryBatch` → `SearchResult` traffic.
 * `explain()` — per-query routing transparency: predicted recall r̂ per
   candidate, the threshold-passing set, the chosen (method, ps), and the
   offline benchmark-table row that justified it.
+
+Scaling layers on top of the facade:
+
+* `ShardedRouterService` — the same routed pipeline over a
+  `repro.ann.sharded.ShardedFilteredIndex`: the batch is routed once
+  (full-dataset features), each chosen (method, ps) group executes on
+  every shard in parallel, and the per-shard candidates reduce through
+  the `ops.merge_topk` kernel.
+* `AsyncBatchQueue` — serves *concurrent single-query callers*: callers
+  `submit()` one query each and get a `Future`; a background worker
+  coalesces pending requests into micro-batches (flushing on `max_batch`
+  or `max_wait_ms`, whichever trips first) so the device sees batched
+  traffic without callers coordinating.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent.futures import Future
+from typing import NamedTuple
 
 import numpy as np
 
@@ -24,6 +40,7 @@ from repro.ann import engine
 from repro.ann import registry as registry_mod
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult, exact_distances)
+from repro.ann.predicates import Predicate
 
 
 @dataclasses.dataclass
@@ -39,12 +56,21 @@ class QueryExplanation:
 
 
 class RouterService:
-    """Serving facade over (FilteredIndex, MLRouter, method registry)."""
+    """Serving facade over (FilteredIndex, MLRouter, method registry).
+
+    Args:
+        index: the owned serving handle the service executes on — a
+            `FilteredIndex`, or anything exposing its `ds`/`run_method`
+            surface (`ShardedRouterService` passes a sharded handle).
+        router: a trained `repro.core.router.MLRouter`.
+        t: default recall threshold T for Algorithm 2 (per-call
+            overridable via the `t=` kwarg on search/route/explain).
+        methods: optional Mapping name -> Method overriding the default
+            candidate-registry view (e.g. a trimmed pool).
+    """
 
     def __init__(self, index: FilteredIndex, router, *, t: float = 0.9,
                  methods=None):
-        """`methods`: optional Mapping name -> Method overriding the
-        default candidate-registry view (e.g. a trimmed pool)."""
         self.index = index
         self.router = router
         self.t = float(t)
@@ -57,12 +83,15 @@ class RouterService:
 
     # ---- routing ---------------------------------------------------------
     def predict(self, batch: QueryBatch) -> np.ndarray:
-        """[Q, M] predicted recall per candidate method."""
+        """[Q, M] predicted recall per candidate method (one vectorised
+        feature pass + one stacked-MLP forward for the whole batch)."""
         return self.router.predict_recalls(self.ds, batch.bitmaps,
                                            batch.pred, fx=self.index)
 
     def route(self, batch: QueryBatch, *,
               t: float | None = None) -> list[RoutingDecision]:
+        """Per-query `RoutingDecision`s without executing the searches
+        (Algorithm 2 at threshold `t`, default the service's)."""
         r_hat = self.predict(batch)
         return self._decide(r_hat, batch, t)
 
@@ -76,8 +105,17 @@ class RouterService:
     def search(self, batch: QueryBatch, *,
                t: float | None = None) -> SearchResult:
         """Route the batch, then run each (method, ps) group as one
-        batched search. Returns ids + exact distances + decisions +
-        stage timings."""
+        batched search.
+
+        Args:
+            batch: the validated query batch.
+            t: optional per-call recall threshold override.
+        Returns: a `SearchResult` — [Q, k] ids, exact squared-L2
+            distances, per-query `RoutingDecision`s, and stage timings
+            (`route_s`, `search_s`, `total_s`).
+        Raises: ValueError on batch/dataset shape mismatch; RuntimeError
+            if the underlying index is closed.
+        """
         t0 = time.perf_counter()
         r_hat = self.predict(batch)
         decisions = self._decide(r_hat, batch, t)
@@ -158,3 +196,259 @@ class RouterService:
                 table_row=dict(row) if row else None,
                 threshold=t))
         return out
+
+
+class ShardedRouterService(RouterService):
+    """`RouterService` over a `repro.ann.sharded.ShardedFilteredIndex`.
+
+    The routed pipeline is unchanged — and that is the point: the batch
+    is routed **once** (one fused MLP forward over full-dataset features;
+    on TPU the feature kernels read the sharded handle's `feature_index`
+    tensors on shard-0's device), and only the execution of each chosen
+    (method, ps) group fans out: every shard searches its own row
+    partition in parallel and the per-shard candidates reduce through the
+    `ops.merge_topk` kernel inside the handle's `run_method`.
+
+    Args:
+        index: a `ShardedFilteredIndex` (TypeError otherwise — a plain
+            `FilteredIndex` belongs in `RouterService`).
+        router / t / methods: as in `RouterService`.
+    """
+
+    def __init__(self, index, router, *, t: float = 0.9, methods=None):
+        from repro.ann.sharded import ShardedFilteredIndex
+
+        if not isinstance(index, ShardedFilteredIndex):
+            raise TypeError(
+                f"ShardedRouterService needs a ShardedFilteredIndex; got "
+                f"{type(index).__name__} (use RouterService for "
+                f"single-index handles)")
+        super().__init__(index, router, t=t, methods=methods)
+
+
+# ---------------------------------------------------------------------------
+# async micro-batch queue — concurrent single-query callers
+# ---------------------------------------------------------------------------
+
+class QueryResult(NamedTuple):
+    """One caller's slice of a batched `SearchResult`.
+
+    * `ids` — [k] int32 base ids, −1 padded;
+    * `distances` — [k] float32 exact squared-L2 (NaN at −1 pad);
+    * `decision` — the query's `RoutingDecision` (None when the queue
+      serves a fixed method instead of a routed service).
+    """
+    ids: np.ndarray
+    distances: np.ndarray
+    decision: RoutingDecision | None
+
+
+@dataclasses.dataclass
+class _PendingQuery:
+    vector: np.ndarray
+    bitmap: np.ndarray
+    pred: Predicate
+    k: int
+    t_submit: float
+    future: Future
+
+
+class AsyncBatchQueue:
+    """Coalesces concurrent single-query `submit()` calls into
+    micro-batches.
+
+    A background worker drains the queue into one batched
+    `service.search` call per (predicate, k) group whenever either knob
+    trips:
+
+    * `max_batch` — this many requests are pending (flush immediately;
+      latency-optimal under load);
+    * `max_wait_ms` — the oldest pending request has waited this long
+      (bounds tail latency when traffic is sparse).
+
+    Callers get a `concurrent.futures.Future` resolving to a
+    `QueryResult`; a failed batch propagates its exception to exactly
+    the futures in that batch.
+
+    Args:
+        service: the batched backend — a `RouterService` /
+            `ShardedRouterService` (routed), or, with `method=`, any
+            handle exposing `search(batch, method, setting)` such as
+            `FilteredIndex` / `ShardedFilteredIndex` (direct
+            single-method serving, no router needed).
+        max_batch: flush threshold and per-batch size cap (>= 1).
+        max_wait_ms: max age of the oldest pending request before a
+            flush (>= 0; 0 means flush on every submit).
+        method / setting: optional fixed method (+ optional setting)
+            for router-less serving.
+
+    Raises:
+        ValueError: on non-positive `max_batch` or negative
+            `max_wait_ms`.
+    """
+
+    def __init__(self, service, *, max_batch: int = 64,
+                 max_wait_ms: float = 5.0, method=None, setting=None):
+        if int(max_batch) < 1:
+            raise ValueError(f"max_batch must be >= 1; got {max_batch}")
+        if float(max_wait_ms) < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0; got {max_wait_ms}")
+        self.service = service
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        if method is None:
+            self._search = service.search
+        else:
+            self._search = lambda b: service.search(b, method, setting)
+        self._cv = threading.Condition()
+        self._pending: list[_PendingQuery] = []
+        self._inflight: list[Future] = []
+        self._flush_req = False
+        self._closed = False
+        self._stats = {"queries": 0, "batches": 0, "max_batch_seen": 0,
+                       "flush_reasons": {}}
+        self._worker = threading.Thread(
+            target=self._run, name="async-batch-queue", daemon=True)
+        self._worker.start()
+
+    # ---- caller surface --------------------------------------------------
+    def submit(self, vector, bitmap, pred, k: int = 10) -> Future:
+        """Enqueue one query; returns a Future of `QueryResult`.
+
+        Args:
+            vector: [d] float query embedding.
+            bitmap: [W] uint32 packed query label set.
+            pred: the query's `Predicate` (or its int value).
+            k: result width.
+        Raises: RuntimeError if the queue is closed; ValueError on
+            non-1-D vector/bitmap.
+        """
+        vector = np.asarray(vector, dtype=np.float32)
+        bitmap = np.asarray(bitmap, dtype=np.uint32)
+        if vector.ndim != 1 or bitmap.ndim != 1:
+            raise ValueError(
+                f"submit takes one query: vector [d] and bitmap [W]; got "
+                f"shapes {vector.shape} / {bitmap.shape}")
+        # reject dim mismatches here, per caller — inside the worker they
+        # would fail the whole co-batched (pred, k) group's futures
+        ds = getattr(self.service, "ds", None)
+        if ds is not None:
+            if vector.shape[0] != ds.dim:
+                raise ValueError(
+                    f"query vector dim {vector.shape[0]} does not match "
+                    f"dataset dim {ds.dim}")
+            if bitmap.shape[0] != ds.bitmaps.shape[1]:
+                raise ValueError(
+                    f"query bitmap width {bitmap.shape[0]} does not match "
+                    f"dataset width {ds.bitmaps.shape[1]}")
+        req = _PendingQuery(vector, bitmap, Predicate(pred), int(k),
+                            time.monotonic(), Future())
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncBatchQueue is closed")
+            self._pending.append(req)
+            self._cv.notify_all()
+        return req.future
+
+    def flush(self, timeout: float | None = 30.0) -> None:
+        """Force-drain everything currently pending and block until those
+        requests complete (their futures resolve; failures stay on the
+        futures, flush itself doesn't raise them)."""
+        import concurrent.futures as cf
+
+        with self._cv:
+            # pending + whatever the worker already took for execution —
+            # snapshotting _pending alone would miss an in-flight batch
+            futs = [p.future for p in self._pending] + list(self._inflight)
+            self._flush_req = True
+            self._cv.notify_all()
+        cf.wait(futs, timeout=timeout)
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Stop accepting work, drain what's pending, join the worker.
+        Idempotent."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._worker.join(timeout=timeout)
+
+    def __enter__(self) -> "AsyncBatchQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        """Counters: queries/batches served, largest batch, and a
+        flush-reason histogram (max_batch / max_wait / flush / close)."""
+        with self._cv:
+            s = dict(self._stats)
+            s["flush_reasons"] = dict(self._stats["flush_reasons"])
+            s["pending"] = len(self._pending)
+            return s
+
+    # ---- worker ----------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                reason = None
+                while reason is None:
+                    if self._pending:
+                        if len(self._pending) >= self.max_batch:
+                            reason = "max_batch"
+                        elif self._closed:
+                            reason = "close"
+                        elif self._flush_req:
+                            reason = "flush"
+                        else:
+                            left = (self._pending[0].t_submit
+                                    + self.max_wait_s - time.monotonic())
+                            if left <= 0:
+                                reason = "max_wait"
+                            else:
+                                self._cv.wait(timeout=left)
+                    else:
+                        self._flush_req = False
+                        if self._closed:
+                            return
+                        self._cv.wait()
+                take = self._pending[: self.max_batch]
+                del self._pending[: len(take)]
+                self._inflight = [p.future for p in take]
+                if not self._pending:
+                    self._flush_req = False
+            try:
+                self._execute(take, reason)
+            finally:
+                with self._cv:
+                    self._inflight = []
+
+    def _execute(self, take: list[_PendingQuery], reason: str) -> None:
+        with self._cv:
+            self._stats["queries"] += len(take)
+            self._stats["batches"] += 1
+            self._stats["max_batch_seen"] = max(
+                self._stats["max_batch_seen"], len(take))
+            rs = self._stats["flush_reasons"]
+            rs[reason] = rs.get(reason, 0) + 1
+        groups: dict = {}
+        for req in take:
+            groups.setdefault((req.pred, req.k), []).append(req)
+        for (pred, k), reqs in groups.items():
+            try:
+                batch = QueryBatch(np.stack([r.vector for r in reqs]),
+                                   np.stack([r.bitmap for r in reqs]),
+                                   pred, k)
+                res = self._search(batch)
+                for j, req in enumerate(reqs):
+                    dec = (res.decisions[j]
+                           if res.decisions is not None else None)
+                    if not req.future.done():    # caller may have cancelled
+                        req.future.set_result(QueryResult(
+                            ids=res.ids[j], distances=res.distances[j],
+                            decision=dec))
+            except BaseException as e:     # propagate to exactly this group
+                for req in reqs:
+                    if not req.future.done():
+                        req.future.set_exception(e)

@@ -1,0 +1,225 @@
+"""`ShardedFilteredIndex` — one dataset row-partitioned across devices.
+
+This is the execution layer that scales the serving API past one device:
+the dataset is split into contiguous row shards (`ANNDataset.row_slice`),
+each shard is an ordinary owned `FilteredIndex` pinned to its own device
+(round-robin over the host's jax devices — `distributed.shard_devices`),
+and a batched search runs every shard in parallel before a cross-shard
+top-k merge (`ops.merge_topk`, the VMEM-accumulated Pallas reduction).
+
+The handle exposes the same `run_method`/`search`/`close` surface as
+`FilteredIndex`, so `RouterService` (and its `ShardedRouterService`
+subclass) dispatches through it unchanged: a batch is routed **once** —
+one fused MLP forward over full-dataset features — and only the chosen
+(method, ps) execution fans out per shard. Shard-local ids are globalised
+with each shard's row offset (row slices preserve row order), which is
+what lets the merge kernel treat per-shard candidates as disjoint.
+
+Relation to `repro.ann.distributed`: `make_sharded_search` is the
+single-jit shard_map formulation of the same row partition for the exact
+brute-force scan inside one mesh; `ShardedFilteredIndex` is the
+host-orchestrated generalisation that serves *every* registered method
+(each shard runs its own built index) and composes with the async
+micro-batch queue in `repro.ann.service`.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.ann.dataset import ANNDataset
+from repro.ann.distributed import shard_bounds, shard_devices
+from repro.ann.engine import ParamSetting, resolve_setting
+from repro.ann.index import (FilteredIndex, QueryBatch, SearchResult,
+                             exact_distances)
+
+
+class ShardedFilteredIndex:
+    """Row-sharded serving handle: one `FilteredIndex` per shard plus the
+    cross-shard merge. API-compatible with `FilteredIndex` wherever the
+    serving layer touches it (`ds`, `run_method`, `search`, lifecycle).
+
+    Args:
+        ds: the full dataset. Row-partitioned; the parent is kept for
+            routing features and exact distances (host arrays are shared
+            views — no vector copy).
+        n_shards: number of row shards (ignored when `bounds` is given).
+        bounds: optional explicit shard boundaries [S+1] (ragged shards);
+            defaults to `distributed.shard_bounds(ds.n, n_shards)`.
+        devices: optional list of jax devices, one per shard; defaults to
+            round-robin over the host's devices (all shards land on the
+            single device of a CPU host — still correct, just serial).
+        registry: optional `MethodRegistry` forwarded to every shard.
+        parallel: fan shard execution out over a thread pool (jax
+            releases the GIL during device compute, so per-device shards
+            overlap). Serial when False or with a single shard.
+
+    Raises:
+        ValueError: if bounds are not a strictly increasing cover of
+            [0, ds.n], or n_shards is out of range.
+    """
+
+    def __init__(self, ds: ANNDataset, n_shards: int = 1, *,
+                 bounds=None, devices=None, registry=None,
+                 parallel: bool = True):
+        if bounds is None:
+            bounds = shard_bounds(ds.n, n_shards)
+        bounds = np.asarray(bounds, dtype=np.int64)
+        if bounds.ndim != 1 or bounds.size < 2 or bounds[0] != 0 \
+                or bounds[-1] != ds.n or np.any(np.diff(bounds) <= 0):
+            raise ValueError(
+                f"shard bounds must strictly increase from 0 to n={ds.n}; "
+                f"got {bounds.tolist()}")
+        self.ds = ds
+        self.bounds = bounds
+        if devices is None:
+            devices = shard_devices(bounds.size - 1)
+        self.shards = [
+            FilteredIndex(ds.row_slice(int(s), int(e),
+                                       name=f"{ds.name}/shard{i}"),
+                          registry=registry, device=devices[i])
+            for i, (s, e) in enumerate(zip(bounds[:-1], bounds[1:]))]
+        self._registry = registry
+        self._parallel = bool(parallel) and len(self.shards) > 1
+        self._pool = (ThreadPoolExecutor(
+            max_workers=len(self.shards),
+            thread_name_prefix=f"shard-{ds.name}") if self._parallel
+            else None)
+        self._feature_fx: FilteredIndex | None = None
+        self._features = None        # routing-feature cache (full dataset)
+        self._closed = False
+
+    # ---- lifecycle ------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Close every shard handle (and the feature handle, if built) and
+        shut the dispatch pool down. Idempotent."""
+        for fx in self.shards:
+            fx.close()
+        if self._feature_fx is not None:
+            self._feature_fx.close()
+            self._feature_fx = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        self._features = None
+        self._closed = True
+
+    def __enter__(self) -> "ShardedFilteredIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"ShardedFilteredIndex({self.ds.name!r}) is closed")
+
+    # ---- routing-feature surface (parent dataset, shard-0 device) -------
+    @property
+    def feature_index(self) -> FilteredIndex:
+        """Owned `FilteredIndex` over the *full* dataset on shard-0's
+        device — backs the TPU feature kernels (batched selectivity needs
+        the whole bitmap tensor; per-shard bitmaps would under-count).
+        Built lazily: CPU feature paths never touch it."""
+        self._check_open()
+        if self._feature_fx is None:
+            self._feature_fx = FilteredIndex(
+                self.ds, registry=self._registry,
+                device=self.shards[0]._placement)
+        return self._feature_fx
+
+    @property
+    def device(self):
+        """Full-dataset device tensors (routing-feature path only; shard
+        execution uses each shard's own tensors)."""
+        return self.feature_index.device
+
+    # ---- search ----------------------------------------------------------
+    def _map_shards(self, fn):
+        if self._pool is not None:
+            return list(self._pool.map(fn, self.shards))
+        return [fn(fx) for fx in self.shards]
+
+    def run_method(self, method, setting: ParamSetting,
+                   batch: QueryBatch) -> tuple[np.ndarray, np.ndarray]:
+        """Raw sharded execution of one (method, setting) over the batch.
+
+        Every shard runs `FilteredIndex.run_method` on its own tensors
+        (in parallel across devices), shard-local ids are globalised with
+        the shard row offsets, and the [S, Q, k] candidates reduce to the
+        global top-k through `ops.merge_topk`.
+
+        Returns: ([Q, k] int32 global ids with −1 pad, [Q, k] float32
+        ranking scores ‖v‖² − 2·q·v with +inf at −1) — identical contract
+        to `FilteredIndex.run_method`, so the serving layer can't tell
+        the difference.
+        Raises: RuntimeError if closed; ValueError on shape mismatch.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        self._check_open()
+        per = self._map_shards(
+            lambda fx: fx.run_method(method, setting, batch))
+        offs = self.bounds[:-1]
+        ids = np.stack([np.where(np.asarray(i) >= 0,
+                                 np.asarray(i) + np.int32(off), -1)
+                        for (i, _), off in zip(per, offs)]).astype(np.int32)
+        raw = np.stack([np.asarray(r) for (_, r) in per]).astype(np.float32)
+        gids, graw = ops.merge_topk(jnp.asarray(ids), jnp.asarray(raw),
+                                    k=batch.k)
+        return np.asarray(gids), np.asarray(graw)
+
+    def search(self, batch: QueryBatch, method,
+               setting: ParamSetting | str | None = None) -> SearchResult:
+        """Direct single-method sharded search (no routing).
+
+        Args/semantics match `FilteredIndex.search`; `search_s` covers
+        the whole fan-out + cross-shard merge.
+        """
+        self._check_open()
+        if not isinstance(setting, ParamSetting):
+            from repro.ann import registry as registry_mod
+
+            m = (method if not isinstance(method, str)
+                 else (self._registry
+                       or registry_mod.default_registry()).get(method))
+            setting = resolve_setting(m, setting)
+            method = m
+        t0 = time.perf_counter()
+        ids, raw = self.run_method(method, setting, batch)
+        dt = time.perf_counter() - t0
+        return SearchResult(
+            ids=ids, distances=exact_distances(raw, ids, batch.vectors),
+            decisions=None, timings={"search_s": dt, "total_s": dt})
+
+    # ---- maintenance -----------------------------------------------------
+    def evict(self, method_name: str | None = None) -> int:
+        """Drop built indexes on every shard; returns total evictions."""
+        return sum(fx.evict(method_name) for fx in self.shards)
+
+    def stats(self) -> dict:
+        """Aggregate + per-shard state snapshot."""
+        return {
+            "dataset": self.ds.name,
+            "n": self.ds.n,
+            "n_shards": self.n_shards,
+            "shard_rows": np.diff(self.bounds).tolist(),
+            "parallel": self._pool is not None,
+            "features_cached": self._features is not None,
+            "closed": self._closed,
+            "shards": [fx.stats() for fx in self.shards],
+        }

@@ -97,14 +97,40 @@ class DatasetFeatures:
     label_freq: np.ndarray      # [U] fraction of vectors carrying each label
 
 
-# Keyed by stable content identity (ANNDataset.cache_key), not id(): a
-# recycled id() after GC would silently serve a different dataset's features.
-_DS_FEATURE_CACHE: dict[tuple, DatasetFeatures] = {}
+# Per-dataset features are cached ON the FilteredIndex handle (its
+# `_features` slot), not in a module global: feature state shares the
+# handle's lifecycle, so `close()` frees it with everything else the
+# handle owns. Handle-less callers fall back to a weak per-instance map
+# — the features live exactly as long as the dataset object itself, and
+# nothing global pins the dataset's arrays (per-instance keys can't
+# alias the way metadata keys could). Keyed by id() with a weakref
+# cleanup callback (ANNDataset is an eq-dataclass, so not hashable);
+# the identity re-check on lookup guards against id reuse.
+_FALLBACK_FEATURES: dict = {}   # id(ds) -> (weakref.ref(ds), features)
+
+
+def _fallback_get(ds):
+    hit = _FALLBACK_FEATURES.get(id(ds))
+    return hit[1] if hit is not None and hit[0]() is ds else None
+
+
+def _fallback_put(ds, feats) -> None:
+    import weakref
+
+    key = id(ds)
+    _FALLBACK_FEATURES[key] = (
+        weakref.ref(ds, lambda _: _FALLBACK_FEATURES.pop(key, None)), feats)
 
 
 def clear_feature_cache() -> None:
-    """Evict all cached per-dataset features."""
-    _DS_FEATURE_CACHE.clear()
+    """Evict cached per-dataset features: the handle-less fallback map
+    and the pooled default handles. Owned handles drop theirs on
+    `FilteredIndex.close()`."""
+    from repro.ann.index import _POOL
+
+    _FALLBACK_FEATURES.clear()
+    for fx in _POOL.values():
+        fx._features = None
 
 
 def _unpack_bits(qbms: np.ndarray, universe: int) -> np.ndarray:
@@ -115,10 +141,23 @@ def _unpack_bits(qbms: np.ndarray, universe: int) -> np.ndarray:
 
 
 def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
-                     seed: int = 0) -> DatasetFeatures:
-    key = ds.cache_key()
-    if key in _DS_FEATURE_CACHE:
-        return _DS_FEATURE_CACHE[key]
+                     seed: int = 0, fx=None) -> DatasetFeatures:
+    """All 15 dataset-level features (+ the per-label carrier fractions).
+
+    Args:
+        ds: the dataset.
+        sample/k/seed: LID/RC estimation knobs (deterministic in seed).
+        fx: the caller's owned serving handle for `ds` (`FilteredIndex`
+            or `ShardedFilteredIndex`) — the computed features are cached
+            on it and freed by its `close()`. Without one, a weak
+            per-instance cache holds them for the dataset object's own
+            lifetime (nothing pins the dataset's arrays globally).
+    Returns: the (cached) `DatasetFeatures`.
+    """
+    feats = (getattr(fx, "_features", None) if fx is not None
+             else _fallback_get(ds))
+    if feats is not None:
+        return feats
     rng = np.random.default_rng(seed)
     n = ds.n
     idx = rng.choice(n, size=min(sample, n), replace=False)
@@ -176,7 +215,10 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
         "normalized_correlation_ratio": float(cr_norm_num / cr_den) if cr_den else 1.0,
     }
     feats = DatasetFeatures(values=values, label_freq=label_freq)
-    _DS_FEATURE_CACHE[key] = feats
+    if fx is None:
+        _fallback_put(ds, feats)
+    elif not getattr(fx, "closed", False):  # never resurrect closed state
+        fx._features = feats
     return feats
 
 
@@ -309,8 +351,9 @@ def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
     """[Q, F(+2 for one-hot pred)] raw feature matrix in `feature_names`
     order; 'pred' expands to a 3-way one-hot. Query-aware columns come from
     the batched `query_feature_arrays` pass — no per-query Python loop.
-    `fx`: optional owned `FilteredIndex` (see `batch_selectivity`)."""
-    dsf = dataset_features(ds)
+    `fx`: optional owned `FilteredIndex` (see `batch_selectivity`; also
+    holds the dataset-feature cache)."""
+    dsf = dataset_features(ds, fx=fx)
     nq = qbms.shape[0]
     qf = query_feature_arrays(ds, dsf, qbms, pred, fx=fx) \
         if any(n in QUERY_FEATURES for n in feature_names) else {}

@@ -13,11 +13,11 @@ precomputed per-method `(ps_id, qps)` tables from
 
 TPU-idiomatic addition (DESIGN.md §3): batched group dispatch — route a
 *batch* of queries with one fused forward, then execute each chosen
-(method, ps) group as a single batched search. That dispatch now lives in
-`repro.ann.service.RouterService`; `route_and_search` here is a
-deprecation shim over it. Persistence is a versioned artifact directory
-(`router.json` manifest + `weights.npz` + `table.json`) with a
-back-compat loader for the legacy pickle.
+(method, ps) group as a single batched search. That dispatch lives in
+`repro.ann.service.RouterService`. Persistence is a versioned artifact
+directory (`router.json` manifest + `weights.npz` + `table.json`); the
+pre-artifact pickle format is no longer loadable — re-save old routers
+with `MLRouter.save(dir)` from a checkout that still reads them.
 """
 
 from __future__ import annotations
@@ -25,8 +25,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import pickle
-import warnings
 
 import numpy as np
 
@@ -131,27 +129,6 @@ class MLRouter:
         r_hat = self.predict_recalls(ds, qbms, pred)
         return self.route_from_predictions(r_hat, ds.name, pred, t)
 
-    # ---- batched dispatch --------------------------------------------------
-    def route_and_search(self, ds: ANNDataset, qvecs: np.ndarray,
-                         qbms: np.ndarray, pred: Predicate, k: int,
-                         t: float, methods_impl: dict | None = None):
-        """Deprecated shim (one PR cycle): use
-        `repro.ann.service.RouterService.search` with a `QueryBatch`.
-
-        Routes, then executes each (method, ps) group as one batched
-        search via a pooled `FilteredIndex`. Returns (ids [Q, k],
-        decisions)."""
-        warnings.warn(
-            "MLRouter.route_and_search is deprecated; use "
-            "repro.ann.service.RouterService.search(QueryBatch(...))",
-            DeprecationWarning, stacklevel=2)
-        from repro.ann.index import QueryBatch, default_index
-        from repro.ann.service import RouterService
-
-        svc = RouterService(default_index(ds), self, methods=methods_impl)
-        res = svc.search(QueryBatch(qvecs, qbms, pred, k), t=t)
-        return res.ids, res.decisions
-
     # ---- persistence ----
     def save(self, path: str) -> None:
         """Write the versioned artifact directory at `path`:
@@ -164,8 +141,7 @@ class MLRouter:
         if os.path.isfile(path):
             raise ValueError(
                 f"router artifact path {path!r} is an existing file; the "
-                f"versioned artifact is a directory (the legacy pickle "
-                f"format is load-only)")
+                f"versioned artifact is a directory")
         os.makedirs(path, exist_ok=True)
         arrays = {"scaler/mean": np.asarray(self.scaler.mean),
                   "scaler/std": np.asarray(self.scaler.std)}
@@ -192,11 +168,17 @@ class MLRouter:
 
     @staticmethod
     def load(path: str) -> "MLRouter":
-        """Load a router artifact — versioned directory, or the legacy
-        pickle file (back-compat, one PR cycle)."""
-        if os.path.isdir(path):
-            return MLRouter._load_artifact(path)
-        return MLRouter._load_legacy_pickle(path)
+        """Load a versioned router artifact directory.
+
+        Raises ValueError for anything that is not an artifact directory
+        — including the pre-artifact pickle files, whose loader was
+        removed after its one-PR-cycle deprecation window."""
+        if not os.path.isdir(path):
+            raise ValueError(
+                f"{path!r} is not a router artifact directory; the legacy "
+                f"pickle format is no longer supported — re-save it with "
+                f"MLRouter.save(dir)")
+        return MLRouter._load_artifact(path)
 
     @staticmethod
     def _load_artifact(path: str) -> "MLRouter":
@@ -223,12 +205,3 @@ class MLRouter:
         return MLRouter(feature_names=list(manifest["feature_names"]),
                         methods=list(manifest["methods"]),
                         models=models, scaler=scaler, table=table)
-
-    @staticmethod
-    def _load_legacy_pickle(path: str) -> "MLRouter":
-        with open(path, "rb") as f:
-            d = pickle.load(f)
-        return MLRouter(
-            feature_names=d["feature_names"], methods=d["methods"],
-            models=d["models"], scaler=mlp.Scaler(*d["scaler"]),
-            table=BenchmarkTable(entries=d["table"]))

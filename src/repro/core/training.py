@@ -166,11 +166,10 @@ def default_paths():
 
 def _router_artifact_path(p: str) -> str | None:
     """Loadable router artifact at `p`: the versioned directory (manifest
-    present), else a legacy pickle left by older runs, else None."""
+    present), else None. Legacy `.pkl` artifacts from pre-PR-2 runs are
+    ignored — rebuild (or re-save from an old checkout) to migrate."""
     if os.path.isdir(p) and os.path.exists(os.path.join(p, "router.json")):
         return p
-    if os.path.isfile(p + ".pkl"):
-        return p + ".pkl"
     return None
 
 

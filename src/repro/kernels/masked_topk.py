@@ -17,6 +17,11 @@ per-shard step of the distributed search). The TPU-native design:
     kernel emits final [Q, k] dists/ids directly — no [n_blocks, Q, k]
     HBM intermediate and no host/XLA cross-block merge.
 
+The same VMEM-carried accumulation (factored as `_fold_topk`) also powers
+`merge_topk_accum`, the cross-shard reduction of `ShardedFilteredIndex`:
+per-shard [S, Q, K] top-k candidates are folded shard by shard into one
+global [Q, k] result, with shards as the sequential grid axis.
+
 The legacy per-block variant (`masked_topk_blocks`) is kept as a parity
 reference for tests. VMEM budget at the default BQ=128, BN=1024, D≤128,
 W≤64: ~1.6 MB — comfortably inside 16 MB v5e VMEM with double-buffering.
@@ -68,6 +73,30 @@ def _masked_scores(q_ref, qbm_ref, base_ref, norms_ref, bm_ref, pred: int):
     return jnp.where(mask, scores, PAD_SCORE)
 
 
+def _fold_topk(accd_ref, acci_ref, blk_d, blk_i, k: int) -> None:
+    """Fold a candidate block into the running top-k carried in VMEM.
+
+    `accd_ref`/`acci_ref` are [BQ, k] VMEM scratch holding the carry from
+    previous blocks; `blk_d`/`blk_i` are the new [BQ, C] masked score/id
+    block (PAD_SCORE / −1 at invalid slots). The carry and the block are
+    concatenated and re-extracted by k-step min-extraction, leaving the
+    scratch holding the merged top-k. Shared by the base-block reduction
+    (`_accum_kernel`) and the cross-shard merge (`_merge_kernel`).
+    """
+    cand_d = jnp.concatenate([accd_ref[...], blk_d], axis=1)   # [BQ, k+C]
+    cand_i = jnp.concatenate([acci_ref[...], blk_i], axis=1)
+    bq, c = cand_d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
+    for i in range(k):                      # k-step min extraction in VMEM
+        m = jnp.min(cand_d, axis=1)
+        am = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
+        sel = col == am[:, None]
+        picked = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
+        accd_ref[:, i] = m
+        acci_ref[:, i] = jnp.where(m >= PAD_SCORE, -1, picked)
+        cand_d = jnp.where(sel, PAD_SCORE, cand_d)
+
+
 def _accum_kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
                   outd_ref, outi_ref, accd_ref, acci_ref, *,
                   pred: int, k: int, bn: int):
@@ -84,17 +113,7 @@ def _accum_kernel(q_ref, qbm_ref, base_ref, norms_ref, bm_ref,
     bq = s.shape[0]
     col = jax.lax.broadcasted_iota(jnp.int32, (bq, bn), 1)
     ids_blk = jnp.where(s >= PAD_SCORE, -1, col + pid_n * bn)
-    cand_d = jnp.concatenate([accd_ref[...], s], axis=1)        # [BQ, k+BN]
-    cand_i = jnp.concatenate([acci_ref[...], ids_blk], axis=1)
-    col2 = jax.lax.broadcasted_iota(jnp.int32, (bq, k + bn), 1)
-    for i in range(k):                      # k-step min extraction in VMEM
-        m = jnp.min(cand_d, axis=1)
-        am = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
-        sel = col2 == am[:, None]
-        picked = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
-        accd_ref[:, i] = m
-        acci_ref[:, i] = jnp.where(m >= PAD_SCORE, -1, picked)
-        cand_d = jnp.where(sel, PAD_SCORE, cand_d)
+    _fold_topk(accd_ref, acci_ref, s, ids_blk, k)
 
     @pl.when(pid_n == pl.num_programs(1) - 1)
     def _write():
@@ -142,6 +161,71 @@ def masked_topk_accum(qvecs, qbms, base, norms, bitmaps, *, pred: int,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qvecs, qbms, base, norms, bitmaps)
+    return outd, outi
+
+
+# ---------------------------------------------------------------------------
+# cross-shard top-k merge — the reduction step of ShardedFilteredIndex
+# ---------------------------------------------------------------------------
+
+def _merge_kernel(d_ref, i_ref, outd_ref, outi_ref, accd_ref, acci_ref, *,
+                  k: int):
+    """Fold one shard's [BQ, K] candidate block into the VMEM carry; write
+    the merged [BQ, k] once on the last shard. Same accumulation pattern
+    as `_accum_kernel`, with shards as the sequential reduction axis."""
+    pid_s = pl.program_id(1)
+
+    @pl.when(pid_s == 0)
+    def _init():
+        accd_ref[...] = jnp.full_like(accd_ref, PAD_SCORE)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+
+    _fold_topk(accd_ref, acci_ref, d_ref[0], i_ref[0], k)
+
+    @pl.when(pid_s == pl.num_programs(1) - 1)
+    def _write():
+        outd_ref[...] = accd_ref[...]
+        outi_ref[...] = acci_ref[...]
+
+
+def merge_topk_accum(dists, ids, *, k: int, bq: int = DEFAULT_BQ,
+                     interpret: bool = False):
+    """Raw pallas_call: merge per-shard top-k candidates into a global
+    top-k, carrying the running result in VMEM scratch across the shard
+    grid axis.
+
+    dists [S, Q, K] f32 (PAD_SCORE at invalid slots), ids [S, Q, K] i32
+    (−1 at invalid slots; already globalised — ids must be disjoint across
+    shards), Q % bq == 0, k <= K. Output: dists [Q, k] f32, ids [Q, k]
+    i32 — the k smallest candidates per query over all S·K slots.
+    """
+    s, q, kk = dists.shape
+    assert q % bq == 0 and k <= kk, (q, bq, k, kk)
+    grid = (q // bq, s)
+    kernel = functools.partial(_merge_kernel, k=k)
+    outd, outi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, kk), lambda qt, sh: (sh, qt, 0)),
+            pl.BlockSpec((1, bq, kk), lambda qt, sh: (sh, qt, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qt, sh: (qt, 0)),
+            pl.BlockSpec((bq, k), lambda qt, sh: (qt, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(dists, ids)
     return outd, outi
 
 

@@ -92,6 +92,47 @@ def masked_topk_multiblock(qvecs, qbms, base, norms, bitmaps, *, pred: int,
     return ids[:q], -neg[:q]
 
 
+@partial(jax.jit, static_argnames=("k", "bq", "interpret"))
+def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
+               interpret: bool | None = None):
+    """Cross-shard top-k merge. Returns (ids [Q, k] i32, dists [Q, k] f32).
+
+    Args:
+        ids: [S, Q, K] int32 per-shard candidate ids, −1 at invalid slots.
+            Ids must already be globalised (disjoint across shards).
+        dists: [S, Q, K] float32 per-shard scores; +inf (or any value ≥
+            `masked_topk.PAD_SCORE`) marks invalid slots alongside id −1.
+        k: output width; defaults to K (merge per-shard top-K into a
+            global top-K). Must satisfy k <= K.
+        bq: query tile size; interpret: force/suppress interpret mode
+            (default: interpret off-TPU).
+
+    The kernel carries the running [Q, k] result across the shard axis in
+    VMEM scratch (same accumulation as `masked_topk`), so the merge makes
+    one pass over the [S, Q, K] candidates with no [Q, S*K] reshuffle.
+    Invalid outputs come back as id −1 with dist +inf.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    s, q, kk = ids.shape
+    if k is None:
+        k = kk
+    d = jnp.where((ids < 0) | (dists >= mk.PAD_SCORE) | jnp.isnan(dists),
+                  mk.PAD_SCORE, dists.astype(jnp.float32))
+    bq_eff = min(bq, max(8, q))
+    pad = (-q) % bq_eff
+    if pad:
+        d = jnp.concatenate(
+            [d, jnp.full((s, pad, kk), mk.PAD_SCORE, d.dtype)], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((s, pad, kk), -1, ids.dtype)], axis=1)
+    outd, outi = mk.merge_topk_accum(d, ids, k=k, bq=bq_eff,
+                                     interpret=interpret)
+    outd, outi = outd[:q], outi[:q]
+    bad = (outi < 0) | (outd >= mk.PAD_SCORE)
+    return jnp.where(bad, -1, outi), jnp.where(bad, jnp.inf, outd)
+
+
 @partial(jax.jit, static_argnames=("pred", "bq", "bn", "interpret"))
 def selectivity(qbms, bitmaps, *, pred: int, bq: int = 128, bn: int = 2048,
                 interpret: bool | None = None):

@@ -33,3 +33,19 @@ def masked_topk_ref(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int):
 def selectivity_ref(qbms, bitmaps, *, pred: int):
     return jnp.sum(predicate_mask_ref(bitmaps, qbms, pred),
                    axis=1).astype(jnp.int32)
+
+
+def merge_topk_ref(ids, dists, *, k: int | None = None):
+    """Cross-shard merge oracle: flatten [S, Q, K] candidates to
+    [Q, S*K] and re-extract the k smallest. Invalid slots (id −1 or
+    non-finite dist) come back as id −1 / dist +inf, trailing."""
+    s, q, kk = ids.shape
+    if k is None:
+        k = kk
+    i_all = jnp.moveaxis(ids, 0, 1).reshape(q, s * kk)
+    d_all = jnp.moveaxis(dists, 0, 1).reshape(q, s * kk)
+    d_all = jnp.where((i_all < 0) | ~jnp.isfinite(d_all), jnp.inf, d_all)
+    neg, sel = jax.lax.top_k(-d_all, k)
+    out_ids = jnp.take_along_axis(i_all, sel, axis=1)
+    out_ids = jnp.where(jnp.isinf(neg), -1, out_ids).astype(jnp.int32)
+    return out_ids, -neg

@@ -32,3 +32,34 @@ def tiny_queries(tiny_ds):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def toy_router(tiny_ds):
+    """Randomly initialised MLRouter with a dense synthetic benchmark
+    table over tiny_ds — routing exercises Algorithm 2 end to end without
+    the offline collection sweep."""
+    import jax
+
+    from repro.ann import registry as registry_mod
+    from repro.core import features as F
+    from repro.core import mlp as mlp_mod
+    from repro.core.router import MLRouter
+    from repro.core.table import BenchmarkTable
+
+    methods = list(registry_mod.candidate_methods())
+    rand = np.random.default_rng(5)
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for name, m in registry_mod.candidate_methods().items():
+            for s in m.param_settings():
+                table.add(tiny_ds.name, pt, name, s.ps_id,
+                          recall=float(rand.uniform(0.7, 1.0)),
+                          qps=float(rand.uniform(100, 2000)))
+    models = {m: mlp_mod.params_to_numpy(
+        mlp_mod.init_mlp((5, 16, 8, 1), jax.random.PRNGKey(j)))
+        for j, m in enumerate(methods)}
+    return MLRouter(feature_names=F.MINIMAL_FEATURES, methods=methods,
+                    models=models,
+                    scaler=mlp_mod.Scaler(np.zeros(5), np.ones(5)),
+                    table=table)

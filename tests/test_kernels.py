@@ -162,3 +162,64 @@ def test_accum_single_block(pred, rng):
     """N below one block: the nb axis degenerates to a single step."""
     case = _rand_case(rng, 4, 200, 16, 1)
     _assert_topk_parity(case, pred, k=5, bq=8, bn=256)
+
+
+# ---------------------------------------------------------------------------
+# cross-shard merge kernel
+# ---------------------------------------------------------------------------
+
+def _merge_case(rng, s, q, k, frac_valid=0.7):
+    """Per-shard sorted top-k candidates with disjoint global ids and a
+    random invalid suffix per (shard, query) row."""
+    d = np.sort(np.abs(rng.normal(size=(s, q, k))).astype(np.float32), -1)
+    ids = np.arange(s * q * k, dtype=np.int32).reshape(s, q, k)
+    nval = rng.binomial(k, frac_valid, size=(s, q))
+    for si in range(s):
+        for qi in range(q):
+            d[si, qi, nval[si, qi]:] = np.inf
+            ids[si, qi, nval[si, qi]:] = -1
+    return jnp.asarray(ids), jnp.asarray(d)
+
+
+@pytest.mark.parametrize("s,q,k", [(1, 8, 10), (2, 17, 10), (4, 33, 5),
+                                   (8, 8, 16)])
+def test_merge_topk_matches_ref(s, q, k):
+    rng = np.random.default_rng(s * 100 + q)
+    ids, d = _merge_case(rng, s, q, k)
+    gi, gd = ops.merge_topk(ids, d)
+    ri, rd = ref.merge_topk_ref(ids, d)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd))
+
+
+def test_merge_topk_narrower_k(rng):
+    ids, d = _merge_case(rng, 4, 12, 10)
+    gi, gd = ops.merge_topk(ids, d, k=3)
+    ri, rd = ref.merge_topk_ref(ids, d, k=3)
+    assert gi.shape == (12, 3)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd))
+
+
+def test_merge_topk_all_invalid_rows(rng):
+    ids, d = _merge_case(rng, 3, 9, 8)
+    ids = np.asarray(ids).copy()
+    d = np.asarray(d).copy()
+    ids[:, 4, :] = -1
+    d[:, 4, :] = np.inf
+    gi, gd = ops.merge_topk(jnp.asarray(ids), jnp.asarray(d))
+    assert (np.asarray(gi)[4] == -1).all()
+    assert np.isinf(np.asarray(gd)[4]).all()
+    ri, _ = ref.merge_topk_ref(jnp.asarray(ids), jnp.asarray(d))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_merge_topk_fewer_than_k_global(rng):
+    """Fewer valid candidates than k across *all* shards: trailing −1s."""
+    ids, d = _merge_case(rng, 2, 6, 10, frac_valid=0.15)
+    gi, gd = ops.merge_topk(ids, d)
+    ri, rd = ref.merge_topk_ref(ids, d)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    nval = (np.asarray(ids) >= 0).sum(axis=(0, 2))
+    got = (np.asarray(gi) >= 0).sum(1)
+    np.testing.assert_array_equal(got, np.minimum(nval, 10))

@@ -15,10 +15,7 @@ from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult, default_index)
 from repro.ann.predicates import Predicate
 from repro.ann.service import RouterService
-from repro.core import features as F
-from repro.core import mlp as mlp_mod
 from repro.core.router import MLRouter
-from repro.core.table import BenchmarkTable
 from repro.data.ann_synth import DatasetSpec, make_queries, synthesize
 
 
@@ -197,30 +194,10 @@ def test_registry_rejects_unnamed():
 # versioned router artifact + service round-trip
 # ---------------------------------------------------------------------------
 
-def _toy_router(tiny_ds):
-    import jax
-
-    methods = list(registry_mod.candidate_methods())
-    rng = np.random.default_rng(5)
-    table = BenchmarkTable.new()
-    for pt in range(3):
-        for name, m in registry_mod.candidate_methods().items():
-            for s in m.param_settings():
-                table.add(tiny_ds.name, pt, name, s.ps_id,
-                          recall=float(rng.uniform(0.7, 1.0)),
-                          qps=float(rng.uniform(100, 2000)))
-    models = {m: mlp_mod.params_to_numpy(
-        mlp_mod.init_mlp((5, 16, 8, 1), jax.random.PRNGKey(j)))
-        for j, m in enumerate(methods)}
-    return MLRouter(feature_names=F.MINIMAL_FEATURES, methods=methods,
-                    models=models,
-                    scaler=mlp_mod.Scaler(np.zeros(5), np.ones(5)),
-                    table=table)
-
-
 def test_artifact_roundtrip_identical_decisions(tmp_path, tiny_ds,
-                                                tiny_index, tiny_queries):
-    router = _toy_router(tiny_ds)
+                                                tiny_index, tiny_queries,
+                                                toy_router):
+    router = toy_router
     qs = tiny_queries[Predicate.AND]
     batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
     svc = RouterService(tiny_index, router, t=0.9)
@@ -249,10 +226,10 @@ def test_artifact_roundtrip_identical_decisions(tmp_path, tiny_ds,
     assert all(set(e.r_hat) == set(router.methods) for e in exp)
 
 
-def test_artifact_rejects_foreign_and_future(tmp_path, tiny_ds):
+def test_artifact_rejects_foreign_and_future(tmp_path, toy_router):
     import json
 
-    router = _toy_router(tiny_ds)
+    router = toy_router
     art = str(tmp_path / "router")
     router.save(art)
     manifest = json.load(open(os.path.join(art, "router.json")))
@@ -269,41 +246,41 @@ def test_artifact_rejects_foreign_and_future(tmp_path, tiny_ds):
         router.save(os.path.join(art, "router.json"))
 
 
-def test_legacy_pickle_loads(tmp_path, tiny_ds):
-    """Back-compat: the pre-artifact pickle format still loads."""
-    router = _toy_router(tiny_ds)
+def test_legacy_pickle_no_longer_loads(tmp_path, toy_router):
+    """The one-PR-cycle pickle loader is gone: loading a pickle file (or
+    any non-directory path) fails with a migration hint."""
+    router = toy_router
     p = str(tmp_path / "router.pkl")
     with open(p, "wb") as f:
-        pickle.dump({
-            "feature_names": router.feature_names,
-            "methods": router.methods,
-            "models": router.models,
-            "scaler": (router.scaler.mean, router.scaler.std),
-            "table": router.table.entries,
-        }, f)
-    r2 = MLRouter.load(p)
-    assert r2.methods == router.methods
-    x = np.random.default_rng(0).normal(size=(9, 5)).astype(np.float32)
-    np.testing.assert_allclose(r2.predict_recalls_from_features(x),
-                               router.predict_recalls_from_features(x),
-                               rtol=1e-6)
+        pickle.dump({"methods": router.methods}, f)
+    with pytest.raises(ValueError, match="no longer supported"):
+        MLRouter.load(p)
+    with pytest.raises(ValueError, match="no longer supported"):
+        MLRouter.load(str(tmp_path / "never_written"))
 
 
-def test_route_and_search_shim_warns(tiny_ds, tiny_index, tiny_queries):
-    router = _toy_router(tiny_ds)
-    qs = tiny_queries[Predicate.OR]
-    with pytest.warns(DeprecationWarning):
-        ids, dec = router.route_and_search(
-            tiny_ds, qs.vectors, qs.bitmaps, Predicate.OR, 10, 0.9)
-    res = RouterService(tiny_index, router, t=0.9).search(
-        QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10))
-    np.testing.assert_array_equal(ids, res.ids)
-    assert dec == res.decisions
+def test_deprecation_shims_removed():
+    """PR-2's one-PR-cycle shims are gone from the public surface."""
+    assert not hasattr(engine, "device_data")
+    assert not hasattr(engine, "as_device")
+    assert not hasattr(engine, "get_index")
+    assert not hasattr(MLRouter, "route_and_search")
+    assert not hasattr(MLRouter, "_load_legacy_pickle")
+    engine.clear_caches()          # the pool-evict helper stays
 
 
-def test_engine_shims_warn(tiny_ds):
-    with pytest.warns(DeprecationWarning):
-        engine.device_data(tiny_ds)
-    with pytest.warns(DeprecationWarning):
-        engine.as_device(tiny_ds.norms_sq)
-    engine.clear_caches()
+def test_feature_cache_owned_by_handle(tiny_ds):
+    """Dataset-feature state lives on the handle and dies with close()."""
+    from repro.core import features as F
+
+    with FilteredIndex(tiny_ds) as fx:
+        a = F.dataset_features(tiny_ds, fx=fx)
+        assert F.dataset_features(tiny_ds, fx=fx) is a   # handle cache hit
+        assert fx.stats()["features_cached"]
+    assert fx._features is None                          # freed by close()
+    # handle-less calls cache in the weak per-instance fallback map
+    # (features._FALLBACK_FEATURES), living only as long as the dataset
+    F.clear_feature_cache()
+    b = F.dataset_features(tiny_ds)
+    assert F.dataset_features(tiny_ds) is b
+    assert b is not a

@@ -1,0 +1,288 @@
+"""The sharded/async serving layer: `ShardedFilteredIndex` equivalence
+with the single-index path, the `merge_topk` kernel, `ShardedRouterService`
+routing, and `AsyncBatchQueue` flush behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.ann import registry as registry_mod
+from repro.ann.distributed import shard_bounds
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.predicates import Predicate
+from repro.ann.service import (AsyncBatchQueue, RouterService,
+                               ShardedRouterService)
+from repro.ann.sharded import ShardedFilteredIndex
+
+ALL_PREDS = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+
+
+def _assert_same_result(res, want):
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_allclose(res.distances, want.distances,
+                               rtol=1e-5, atol=1e-5, equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded == single-index equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_sharded_matches_single_index(tiny_ds, tiny_index, tiny_queries,
+                                      n_shards, pred):
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    want = tiny_index.search(batch, "prefilter")
+    with ShardedFilteredIndex(tiny_ds, n_shards) as sfx:
+        _assert_same_result(sfx.search(batch, "prefilter"), want)
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_sharded_ragged_bounds(tiny_ds, tiny_index, tiny_queries, pred):
+    """Deliberately unbalanced shards (97/203/150/150) stay exact."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    want = tiny_index.search(batch, "prefilter")
+    with ShardedFilteredIndex(tiny_ds, bounds=[0, 97, 300, 450, 600]) as sfx:
+        assert sfx.stats()["shard_rows"] == [97, 203, 150, 150]
+        _assert_same_result(sfx.search(batch, "prefilter"), want)
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_sharded_k_exceeds_per_shard_matches(tiny_ds, tiny_index,
+                                             tiny_queries, pred):
+    """k larger than any single shard's match count: the merge must pull
+    from several shards and pad with −1 only when the *global* match
+    count runs out."""
+    qs = tiny_queries[pred]
+    k = 40
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, k)
+    want = tiny_index.search(batch, "prefilter")
+    with ShardedFilteredIndex(tiny_ds, 4) as sfx:
+        res = sfx.search(batch, "prefilter")
+    _assert_same_result(res, want)
+    # sanity: EQUALITY queries really do have < k matches per shard
+    if pred == Predicate.EQUALITY:
+        assert (np.asarray(want.ids) < 0).any()
+
+
+def test_sharded_serial_matches_parallel(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with ShardedFilteredIndex(tiny_ds, 3, parallel=False) as ser, \
+            ShardedFilteredIndex(tiny_ds, 3, parallel=True) as par:
+        _assert_same_result(par.search(batch, "prefilter"),
+                            ser.search(batch, "prefilter"))
+
+
+def test_sharded_lifecycle_and_validation(tiny_ds):
+    sfx = ShardedFilteredIndex(tiny_ds, 2)
+    assert sfx.n_shards == 2
+    assert [s["dataset"] for s in sfx.stats()["shards"]] == \
+        ["tiny/shard0", "tiny/shard1"]
+    sfx.close()
+    assert sfx.closed and all(fx.closed for fx in sfx.shards)
+    sfx.close()                                       # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        sfx.search(QueryBatch(tiny_ds.vectors[:2], tiny_ds.bitmaps[:2],
+                              Predicate.AND, 5), "prefilter")
+    with pytest.raises(ValueError, match="strictly increase"):
+        ShardedFilteredIndex(tiny_ds, bounds=[0, 300, 200, 600])
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedFilteredIndex(tiny_ds, 0)
+
+
+def test_row_slice_preserves_row_order(tiny_ds):
+    sub = tiny_ds.row_slice(100, 350)
+    np.testing.assert_array_equal(sub.vectors, tiny_ds.vectors[100:350])
+    np.testing.assert_array_equal(sub.bitmaps, tiny_ds.bitmaps[100:350])
+    # group tables describe exactly the slice
+    assert sub.group_size.sum() == 250
+    for j in range(sub.n_groups):
+        s, l = int(sub.group_start[j]), int(sub.group_size[j])
+        assert (sub.group_of[s:s + l] == j).all()
+        np.testing.assert_array_equal(
+            sub.bitmaps[s], sub.group_bitmaps[j])
+    with pytest.raises(ValueError, match="out of range"):
+        tiny_ds.row_slice(0, tiny_ds.n + 1)
+
+
+def test_shard_bounds_balanced_and_ragged():
+    np.testing.assert_array_equal(shard_bounds(10, 3), [0, 4, 7, 10])
+    np.testing.assert_array_equal(shard_bounds(8, 4), [0, 2, 4, 6, 8])
+    with pytest.raises(ValueError):
+        shard_bounds(3, 5)
+
+
+# ---------------------------------------------------------------------------
+# ShardedRouterService
+# ---------------------------------------------------------------------------
+
+def test_sharded_router_service_matches_decisions(tiny_ds, tiny_index,
+                                                  tiny_queries, toy_router):
+    router = toy_router
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    want = RouterService(tiny_index, router, t=0.9).search(batch)
+    with ShardedFilteredIndex(tiny_ds, 3) as sfx:
+        svc = ShardedRouterService(sfx, router, t=0.9)
+        res = svc.search(batch)
+    # routing is computed once on full-dataset features: identical
+    assert res.decisions == want.decisions
+    # result well-formedness (approximate methods may legitimately
+    # return different candidates than the single-index execution)
+    assert res.ids.shape == (qs.q, 10)
+    for qi in range(qs.q):
+        valid = res.distances[qi][res.ids[qi] >= 0]
+        assert (np.diff(valid) >= -1e-4).all()
+        assert np.isnan(res.distances[qi][res.ids[qi] < 0]).all()
+        assert (res.ids[qi] < tiny_ds.n).all()
+
+
+def test_sharded_router_service_exact_for_prefilter(tiny_ds, tiny_index,
+                                                    tiny_queries,
+                                                    toy_router):
+    """Routed through an exact-only pool, sharded == single end to end."""
+    router = toy_router
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    pool = {m: registry_mod.get_method("prefilter") for m in router.methods}
+    want = RouterService(tiny_index, router, t=0.9, methods=pool).search(batch)
+    with ShardedFilteredIndex(tiny_ds, 2) as sfx:
+        res = ShardedRouterService(sfx, router, t=0.9,
+                                   methods=pool).search(batch)
+    assert res.decisions == want.decisions
+    _assert_same_result(res, want)
+
+
+def test_sharded_router_service_rejects_plain_index(tiny_index, toy_router):
+    with pytest.raises(TypeError, match="ShardedFilteredIndex"):
+        ShardedRouterService(tiny_index, toy_router)
+
+
+# ---------------------------------------------------------------------------
+# AsyncBatchQueue
+# ---------------------------------------------------------------------------
+
+def test_queue_flush_on_max_batch(tiny_ds, tiny_index, tiny_queries):
+    """With an effectively infinite wait, only the max_batch knob can
+    trigger the flush."""
+    qs = tiny_queries[Predicate.AND]
+    want = tiny_index.search(
+        QueryBatch(qs.vectors[:8], qs.bitmaps[:8], Predicate.AND, 10),
+        "prefilter")
+    with AsyncBatchQueue(tiny_index, max_batch=8, max_wait_ms=60_000,
+                         method="prefilter") as q:
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.AND)
+                for i in range(8)]
+        results = [f.result(timeout=60) for f in futs]
+        stats = q.stats()
+    assert stats["flush_reasons"] == {"max_batch": 1}
+    assert stats["queries"] == 8 and stats["max_batch_seen"] == 8
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.ids, want.ids[i])
+        np.testing.assert_allclose(r.distances, want.distances[i],
+                                   equal_nan=True)
+        assert r.decision is None                  # direct method, no router
+
+
+def test_queue_flush_on_max_wait(tiny_ds, tiny_index, tiny_queries):
+    """Fewer requests than max_batch: the age knob must flush them."""
+    qs = tiny_queries[Predicate.OR]
+    with AsyncBatchQueue(tiny_index, max_batch=64, max_wait_ms=40,
+                         method="prefilter") as q:
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.OR)
+                for i in range(3)]
+        results = [f.result(timeout=60) for f in futs]
+        stats = q.stats()
+    assert all(r.ids.shape == (10,) for r in results)
+    assert stats["flush_reasons"].get("max_wait", 0) >= 1
+    assert "max_batch" not in stats["flush_reasons"]
+    assert stats["queries"] == 3
+
+
+def test_queue_groups_mixed_predicates(tiny_ds, tiny_index, tiny_queries):
+    """One flush serves mixed-predicate traffic correctly (grouped into
+    per-(pred, k) sub-batches)."""
+    subs = []
+    for pred in ALL_PREDS:
+        qs = tiny_queries[pred]
+        subs += [(pred, qs.vectors[i], qs.bitmaps[i]) for i in range(4)]
+    with AsyncBatchQueue(tiny_index, max_batch=len(subs),
+                         max_wait_ms=60_000, method="prefilter") as q:
+        futs = [q.submit(v, b, pred, k=7) for pred, v, b in subs]
+        results = [f.result(timeout=60) for f in futs]
+    for (pred, v, b), r in zip(subs, results):
+        want = tiny_index.search(
+            QueryBatch(v[None], b[None], pred, 7), "prefilter")
+        np.testing.assert_array_equal(r.ids, want.ids[0])
+
+
+def test_queue_routed_service_carries_decisions(tiny_ds, tiny_index,
+                                                tiny_queries, toy_router):
+    svc = RouterService(tiny_index, toy_router, t=0.9)
+    qs = tiny_queries[Predicate.AND]
+    want = svc.search(QueryBatch(qs.vectors[:4], qs.bitmaps[:4],
+                                 Predicate.AND, 10))
+    with AsyncBatchQueue(svc, max_batch=4, max_wait_ms=60_000) as q:
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.AND)
+                for i in range(4)]
+        results = [f.result(timeout=60) for f in futs]
+    assert [r.decision for r in results] == want.decisions
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.ids, want.ids[i])
+
+
+def test_queue_flush_waits_for_inflight(tiny_ds, tiny_index, tiny_queries):
+    """flush() must cover the batch the worker already dequeued, not just
+    what is still pending."""
+    qs = tiny_queries[Predicate.AND]
+    with AsyncBatchQueue(tiny_index, max_batch=1, max_wait_ms=0,
+                         method="prefilter") as q:
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.AND)
+                for i in range(3)]
+        q.flush(timeout=120)
+        assert all(f.done() for f in futs)
+
+
+def test_queue_close_drains_and_rejects(tiny_ds, tiny_index, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    q = AsyncBatchQueue(tiny_index, max_batch=64, max_wait_ms=60_000,
+                        method="prefilter")
+    fut = q.submit(qs.vectors[0], qs.bitmaps[0], Predicate.AND)
+    q.close()                                  # drains the pending query
+    assert fut.result(timeout=60).ids.shape == (10,)
+    with pytest.raises(RuntimeError, match="closed"):
+        q.submit(qs.vectors[0], qs.bitmaps[0], Predicate.AND)
+    q.close()                                  # idempotent
+
+
+def test_queue_validates(tiny_index, tiny_ds):
+    with pytest.raises(ValueError, match="max_batch"):
+        AsyncBatchQueue(tiny_index, max_batch=0, method="prefilter")
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        AsyncBatchQueue(tiny_index, max_wait_ms=-1, method="prefilter")
+    with AsyncBatchQueue(tiny_index, method="prefilter") as q:
+        with pytest.raises(ValueError, match="one query"):
+            q.submit(tiny_ds.vectors[:2], tiny_ds.bitmaps[:2],
+                     Predicate.AND)
+        # dim mismatches are rejected per caller at submit() — inside the
+        # worker they would fail the whole co-batched group
+        with pytest.raises(ValueError, match="vector dim"):
+            q.submit(tiny_ds.vectors[0, :-2], tiny_ds.bitmaps[0],
+                     Predicate.AND)
+        with pytest.raises(ValueError, match="bitmap width"):
+            q.submit(tiny_ds.vectors[0],
+                     np.concatenate([tiny_ds.bitmaps[0]] * 2),
+                     Predicate.AND)
+
+
+def test_queue_propagates_backend_errors(tiny_index, tiny_ds):
+    """A failing batch rejects exactly its own futures."""
+    with AsyncBatchQueue(tiny_index, max_batch=2, max_wait_ms=60_000,
+                         method="no_such_method") as q:
+        futs = [q.submit(tiny_ds.vectors[i], tiny_ds.bitmaps[i],
+                         Predicate.AND) for i in range(2)]
+        for f in futs:
+            with pytest.raises(KeyError, match="unknown method"):
+                f.result(timeout=60)
