@@ -1,0 +1,106 @@
+"""Live-index benchmark: upsert throughput and search latency under
+concurrent write load.
+
+Three gated numbers per (n, q) row:
+
+* ``upsert_us_per_row`` — streaming ingest cost (append + tombstone +
+  live-label-count bookkeeping), measured over batched upserts;
+* ``search_sealed_us`` — batched exact search on the untouched live
+  handle (the no-write floor; should track the plain ``FilteredIndex``
+  path modulo the merge fold);
+* ``search_live_us`` — the same search while a writer thread streams
+  upserts into the delta segment, i.e. what a reader pays when the
+  index is taking writes (base scan + delta scan + merge, with the
+  delta device mirror absorbing the sealed chunks).
+
+All three are lower-is-better, so the ``--check`` regression gate
+compares them uniformly.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.ann.index import QueryBatch
+from repro.ann.live import LiveFilteredIndex
+from repro.ann.predicates import Predicate
+from repro.data.ann_synth import DatasetSpec, make_queries, synthesize
+
+from benchmarks.common import emit, timeit_best_us
+
+_SPEC = DatasetSpec("bench_live", 8192, 32, 60, 8, 16, 1.3, 2.0, 0.5, 0.3, 17)
+_SMOKE_SPEC = DatasetSpec("bench_live_smoke", 2048, 32, 60, 8, 16,
+                          1.3, 2.0, 0.5, 0.3, 17)
+
+
+def run(verbose=True, smoke: bool = False, q: int | None = None,
+        write_rows: int | None = None):
+    if smoke:
+        spec, q, write_rows = _SMOKE_SPEC, q or 64, write_rows or 512
+    else:
+        spec, q, write_rows = _SPEC, q or 128, write_rows or 2048
+    ds = synthesize(spec)
+    qs = make_queries(ds, Predicate.AND, q, seed=5)
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    rng = np.random.default_rng(23)
+    new_vec = (ds.vectors[rng.integers(0, ds.n, write_rows)]
+               + rng.normal(scale=0.01, size=(write_rows, ds.dim))
+               .astype(np.float32))
+    new_bm = ds.bitmaps[rng.integers(0, ds.n, write_rows)]
+
+    rows = []
+    with LiveFilteredIndex(ds) as live:
+        live.search(batch, "prefilter")           # warm-up + compile
+        sealed_us = timeit_best_us(
+            lambda: live.search(batch, "prefilter"), repeat=5)
+
+        # upsert throughput: batched 64-row appends into the delta
+        def ingest():
+            for s in range(0, write_rows, 64):
+                live.upsert(new_vec[s: s + 64], new_bm[s: s + 64])
+
+        t_ingest = timeit_best_us(ingest, repeat=1)
+        upsert_us = t_ingest / write_rows
+        # warm the delta path at its steady shape before timing readers
+        live.search(batch, "prefilter")
+
+        # search latency while a writer streams more rows in. The write
+        # budget stays below one delta mirror chunk so the kernel shapes
+        # are stable and the gate measures contention, not recompiles.
+        import time as _time
+
+        stop = threading.Event()
+        budget = live._delta.chunk - 1
+
+        def writer():
+            for i in range(budget):
+                if stop.is_set():
+                    return
+                live.upsert(new_vec[i % write_rows: i % write_rows + 1],
+                            new_bm[i % write_rows: i % write_rows + 1])
+                _time.sleep(0.0005)
+
+        th = threading.Thread(target=writer, daemon=True)
+        th.start()
+        try:
+            live_us = timeit_best_us(
+                lambda: live.search(batch, "prefilter"), repeat=5)
+        finally:
+            stop.set()
+            th.join(timeout=30)
+        delta_rows = live.stats()["delta_rows"]
+
+    rows.append({"n": ds.n, "q": q, "delta_rows": int(delta_rows),
+                 "upsert_us_per_row": round(upsert_us, 2),
+                 "search_sealed_us": round(sealed_us, 1),
+                 "search_live_us": round(live_us, 1)})
+    if verbose:
+        r = rows[-1]
+        print(f"  n={r['n']} q={q}: upsert {r['upsert_us_per_row']:.1f} "
+              f"us/row, search sealed {sealed_us / 1e3:.1f} ms -> live "
+              f"{live_us / 1e3:.1f} ms (delta={r['delta_rows']} rows)",
+              flush=True)
+    path = emit(rows, "live_index")
+    return rows, path

@@ -6,12 +6,14 @@ writes per-harness CSVs under artifacts/bench/.
   PYTHONPATH=src python -m benchmarks.run --smoke
   PYTHONPATH=src python -m benchmarks.run --check
 
-``--smoke`` runs the kernel, routing-latency, and sharded-service
-harnesses at tiny sizes (synthetic router, no artifact build) and
-**appends** a per-PR record (keyed by git SHA) to the
+``--smoke`` runs the kernel, routing-latency, sharded-service, and
+live-index harnesses at tiny sizes (synthetic router, no artifact build)
+and **appends** a per-PR record (keyed by git SHA) to the
 ``BENCH_kernels.json`` trajectory at the repo root. ``--check`` compares
 the latest recorded run against the median of the last (up to) 3 prior
-records and exits 1 if any smoke number regressed by more than 25 %.
+records and exits 1 if any smoke number regressed by more than 25 %;
+every failure line names the regressing metric and the baseline window
+(which prior SHAs the median came from).
 """
 
 from __future__ import annotations
@@ -72,7 +74,8 @@ def _keep_best(old: dict, new: dict) -> dict:
     for section, key_cols, pick in [
             ("kernels", ("n", "q"), None),
             ("routing_latency", ("dataset", "pred", "q"), "batched_us"),
-            ("sharded_service", ("shards", "n", "q"), "batch_us")]:
+            ("sharded_service", ("shards", "n", "q"), "batch_us"),
+            ("live_index", ("n", "q"), "search_live_us")]:
         old_rows = {tuple(r[c] for c in key_cols): r
                     for r in old.get(section, [])}
         out = []
@@ -99,8 +102,8 @@ def _keep_best(old: dict, new: dict) -> dict:
 
 
 def run_smoke() -> None:
-    from benchmarks import (bench_kernels, bench_routing_latency,
-                            bench_sharded)
+    from benchmarks import (bench_kernels, bench_live,
+                            bench_routing_latency, bench_sharded)
 
     print("# == smoke: kernels (tiny sizes) ==", flush=True)
     rows_k, _ = bench_kernels.run(verbose=True, sizes=(1024, 4096))
@@ -110,12 +113,16 @@ def run_smoke() -> None:
     print("# == smoke: sharded service (1/2 shards, CPU fallback) ==",
           flush=True)
     rows_s, _ = bench_sharded.run(verbose=True, smoke=True)
+    print("# == smoke: live index (upserts + search under writes) ==",
+          flush=True)
+    rows_v, _ = bench_live.run(verbose=True, smoke=True)
     record = {
         "sha": _git_sha(),
         "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "kernels": rows_k,
         "routing_latency": rows_l,
         "sharded_service": rows_s,
+        "live_index": rows_v,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
     }
@@ -156,34 +163,44 @@ def run_check() -> None:
         ("routing_latency", ("dataset", "pred", "q"),
          ("batched_us", "per_query_us")),
         ("sharded_service", ("shards", "n", "q"), ("batch_us",)),
+        ("live_index", ("n", "q"),
+         ("upsert_us_per_row", "search_sealed_us", "search_live_us")),
     ]
-    failures = 0
+    failures: list[str] = []
     for section, key_cols, metrics in comparisons:
-        history: dict = {}               # (key, metric) -> [vals, oldest..]
+        history: dict = {}   # (key, metric) -> [(sha, val), oldest..]
         for r in prior:
             for row in r.get(section, []):
                 key = tuple(row[c] for c in key_cols)
                 for metric in metrics:
                     if metric in row:
-                        history.setdefault((key, metric),
-                                           []).append(row[metric])
+                        history.setdefault((key, metric), []).append(
+                            (r.get("sha", "?"), row[metric]))
         for row in last.get(section, []):
             key = tuple(row[c] for c in key_cols)
             for metric in metrics:
-                vals = history.get((key, metric))
-                if metric not in row or not vals:
+                window = history.get((key, metric))
+                if metric not in row or not window:
                     continue
-                base = statistics.median(vals[-3:])
+                window = window[-3:]
+                base = statistics.median(v for _, v in window)
                 ratio = row[metric] / max(base, 1e-9)
                 flag = "REGRESSION" if ratio > CHECK_TOLERANCE else "ok"
                 if ratio > CHECK_TOLERANCE:
-                    failures += 1
+                    failures.append(
+                        f"{section}{list(key)} {metric}: {base} -> "
+                        f"{row[metric]} ({ratio:.2f}x > "
+                        f"{CHECK_TOLERANCE}x) vs median of "
+                        f"{len(window)} prior record(s) "
+                        f"[{', '.join(sha for sha, _ in window)}]")
                 print(f"  {section}{list(key)} {metric}: "
                       f"{base} -> {row[metric]} "
                       f"({ratio:.2f}x) {flag}", flush=True)
     if failures:
-        print(f"check: {failures} regression(s) beyond "
-              f"{CHECK_TOLERANCE}x", flush=True)
+        print(f"check: {len(failures)} regression(s) beyond "
+              f"{CHECK_TOLERANCE}x:", flush=True)
+        for f in failures:
+            print(f"  REGRESSION {f}", flush=True)
         raise SystemExit(1)
     print("check: no regressions beyond tolerance", flush=True)
 
@@ -192,7 +209,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,pareto,fig4,table5,table6,"
-                         "table7,latency,kernels,sharded,roofline")
+                         "table7,latency,kernels,sharded,live,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size kernels+latency run, appends a per-PR "
                          "record to BENCH_kernels.json at the repo root")
@@ -214,7 +231,7 @@ def main() -> None:
                             bench_feature_ablation, bench_featureset_latency,
                             bench_cls_vs_reg, bench_depth,
                             bench_routing_latency, bench_kernels,
-                            bench_roofline, bench_sharded)
+                            bench_live, bench_roofline, bench_sharded)
 
     harnesses = {
         "table1": ("paper Table 1: best method grid", bench_table1.run),
@@ -232,6 +249,8 @@ def main() -> None:
                     bench_kernels.run),
         "sharded": ("sharded service vs single-index dispatch",
                     bench_sharded.run),
+        "live": ("live index: upsert throughput + search under writes",
+                 bench_live.run),
         "roofline": ("roofline terms from the dry-run artifacts",
                      bench_roofline.run),
     }

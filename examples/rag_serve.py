@@ -7,12 +7,17 @@ Requests are served through `AsyncBatchQueue`: every request `submit()`s
 its single query independently (as concurrent callers would) and the
 queue coalesces them into routed micro-batches. `--shards N` swaps the
 single `FilteredIndex` for a row-sharded `ShardedFilteredIndex` +
-`ShardedRouterService`.
+`ShardedRouterService`. `--live` serves a `LiveFilteredIndex`
+(`ShardedLiveIndex` with shards) instead and runs a writer thread that
+streams upserts/deletes into the corpus *while* requests are in flight,
+then compacts and serves one more round from the swapped base.
 
-    PYTHONPATH=src python examples/rag_serve.py [--requests 32] [--shards 2]
+    PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
+        [--shards 2] [--live]
 """
 
 import argparse
+import threading
 import time
 
 import jax
@@ -20,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ann.index import FilteredIndex
+from repro.ann.live import LiveFilteredIndex, ShardedLiveIndex
 from repro.ann.predicates import Predicate
 from repro.ann.service import (AsyncBatchQueue, RouterService,
                                ShardedRouterService)
@@ -39,6 +45,9 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--shards", type=int, default=1,
                     help="row shards for the corpus (1 = single index)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve a live index with a concurrent writer "
+                         "thread (streaming upserts/deletes + compaction)")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
 
@@ -48,14 +57,21 @@ def main():
     fx = FilteredIndex(ds)
     coll = T.collect({"corpus": fx}, n_queries=60, seed=0, verbose=False)
     router = T.train_router(coll, coll.table, epochs=80)
-    if args.shards > 1:
+    if args.live:
+        fx.close()               # the live handle owns its own tensors
+        lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
+               else LiveFilteredIndex(ds))
+        svc = (ShardedRouterService(lfx, router, t=0.9) if args.shards > 1
+               else RouterService(lfx, router, t=0.9))
+    elif args.shards > 1:
         fx.close()               # collect() is done; shards own their tensors
         sfx = ShardedFilteredIndex(ds, args.shards)
         svc = ShardedRouterService(sfx, router, t=0.9)
     else:
         svc = RouterService(fx, router, t=0.9)
-    print(f"corpus: {ds.n} vectors ({args.shards} shard(s)); router "
-          f"trained ({len(router.table.entries)} table entries)")
+    print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
+          f"live={args.live}); router trained "
+          f"({len(router.table.entries)} table entries)")
 
     # --- served LM (reduced config; embeddings from its hidden states) ---
     cfg = get_smoke_config(args.arch)
@@ -82,20 +98,69 @@ def main():
 
     # --- route + retrieve through the async micro-batch queue: each
     # request submits independently (concurrent callers), the queue
-    # coalesces them into routed batches ---
+    # coalesces them into routed batches. With --live a writer thread
+    # streams upserts/deletes into the corpus while requests fly ---
+    writer_stats = {"upserts": 0, "deletes": 0}
+    stop_writer = threading.Event()
+    # cap the stream below one delta mirror chunk: the first routed batch
+    # pays one delta-kernel compile and every later search reuses it (an
+    # unbounded writer would grow the delta mid-compile and force a
+    # recompile at every chunk crossing)
+    writer_budget = 400
+
+    def writer():
+        wrng = np.random.default_rng(42)
+        while not stop_writer.is_set() and \
+                writer_stats["upserts"] < writer_budget:
+            src = wrng.integers(0, ds.n, size=8)
+            ids = svc.index.upsert(
+                ds.vectors[src] + wrng.normal(
+                    scale=0.01, size=(8, ds.dim)).astype(np.float32),
+                ds.bitmaps[src])
+            writer_stats["upserts"] += len(ids)
+            if writer_stats["upserts"] % 32 == 0:
+                svc.index.delete(ids[:2])
+                writer_stats["deletes"] += 2
+            time.sleep(0.01)
+
     t0 = time.perf_counter()
     retrieved = np.full((b, 5), -1, np.int32)
+    wt = None
+    if args.live:
+        wt = threading.Thread(target=writer, daemon=True)
+        wt.start()
     with AsyncBatchQueue(svc, max_batch=16, max_wait_ms=20.0) as queue:
         futs = [queue.submit(emb[i], qbms[i], preds[i], k=5)
                 for i in range(b)]
         for i, f in enumerate(futs):
             retrieved[i] = f.result(timeout=300).ids
         qstats = queue.stats()
+    if wt is not None:
+        stop_writer.set()
+        wt.join(timeout=30)
     t_retrieve = time.perf_counter() - t0
     print(f"queue: {qstats['batches']} micro-batches for "
           f"{qstats['queries']} requests "
-          f"(largest {qstats['max_batch_seen']}, "
+          f"(largest {qstats['max_batch_seen']}, depth "
+          f"{qstats['max_queue_depth']}, "
           f"flushes {qstats['flush_reasons']})")
+    if args.live:
+        st = svc.index.stats()
+        print(f"live writer: {writer_stats['upserts']} upserts, "
+              f"{writer_stats['deletes']} deletes concurrent with "
+              f"serving (delta={st['delta_rows']} rows, "
+              f"n_live={st['n_live']})")
+        gen = svc.index.compact()
+        st = svc.index.stats()
+        print(f"compacted -> generation {gen}: base_n={st['base_n']}, "
+              f"delta_rows={st['delta_rows']}")
+        # one more request round from the freshly swapped base
+        with AsyncBatchQueue(svc, max_batch=16, max_wait_ms=20.0) as queue:
+            futs = [queue.submit(emb[i], qbms[i], preds[i], k=5)
+                    for i in range(min(b, 8))]
+            for i, f in enumerate(futs):
+                retrieved[i] = f.result(timeout=300).ids
+        print("post-compact serving OK")
 
     # --- generate conditioned on retrieval (ids appended as tokens) ---
     t0 = time.perf_counter()

@@ -2,13 +2,18 @@
 TPU-native filtered-ANN methods, and the owned serving surface
 (`FilteredIndex` + `QueryBatch`/`SearchResult` + `RouterService`, scaled
 out by `ShardedFilteredIndex`/`ShardedRouterService` and the async
-micro-batch queue — see docs/serving.md)."""
+micro-batch queue, and made writable by `LiveFilteredIndex`/
+`ShardedLiveIndex` — streaming upserts/deletes with delta segments,
+tombstones, snapshot epochs, and background compaction — see
+docs/serving.md)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult)
+from repro.ann.live import LiveFilteredIndex, LiveSnapshot, ShardedLiveIndex
 from repro.ann.sharded import ShardedFilteredIndex
 
 __all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
-           "RoutingDecision", "SearchResult", "ShardedFilteredIndex"]
+           "RoutingDecision", "SearchResult", "ShardedFilteredIndex",
+           "LiveFilteredIndex", "LiveSnapshot", "ShardedLiveIndex"]

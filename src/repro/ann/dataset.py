@@ -35,14 +35,33 @@ class ANNDataset:
     def build(name: str, vectors: np.ndarray,
               label_sets: Sequence[Sequence[int]], universe: int) -> "ANNDataset":
         vectors = np.asarray(vectors, dtype=np.float32)
-        n = vectors.shape[0]
-        assert len(label_sets) == n
+        assert len(label_sets) == vectors.shape[0]
         bitmaps = lb.pack_label_sets(label_sets, universe)
-        # group by unique bitmap
-        keys = [lb.bitmap_key(bitmaps[i]) for i in range(n)]
+        return ANNDataset.from_packed(name, vectors, bitmaps, universe)
+
+    @staticmethod
+    def from_packed(name: str, vectors: np.ndarray, bitmaps: np.ndarray,
+                    universe: int, *, return_order: bool = False):
+        """Group-sorted construction from already-packed bitmaps.
+
+        Same grouping as `build` (group ids assigned by first appearance
+        of a bitmap, rows stably sorted by group), so re-building from
+        rows that are already group-sorted reproduces the identical row
+        order — the property `LiveFilteredIndex.compact` relies on for
+        sealed/live equivalence.
+
+        With `return_order=True` also returns the [N] permutation where
+        `order[i]` is the *input* row index of output row `i` (the id
+        remap the live-index compaction uses to translate tombstones).
+        """
+        vectors = np.asarray(vectors, dtype=np.float32)
+        bitmaps = np.asarray(bitmaps, dtype=np.uint32)
+        n = vectors.shape[0]
+        assert bitmaps.shape[0] == n
         lookup: dict[bytes, int] = {}
         gid = np.empty(n, dtype=np.int32)
-        for i, k in enumerate(keys):
+        for i in range(n):
+            k = lb.bitmap_key(bitmaps[i])
             if k not in lookup:
                 lookup[k] = len(lookup)
             gid[i] = lookup[k]
@@ -52,24 +71,19 @@ class ANNDataset:
         gid = gid[order]
         g = len(lookup)
         group_bitmaps = np.zeros((g, bitmaps.shape[1]), dtype=np.uint32)
-        group_start = np.zeros(g, dtype=np.int32)
-        group_size = np.zeros(g, dtype=np.int32)
-        for j in range(g):
-            group_size[j] = 0
         # contiguous runs after stable sort
-        starts = np.searchsorted(gid, np.arange(g), side="left")
-        ends = np.searchsorted(gid, np.arange(g), side="right")
-        group_start[:] = starts
-        group_size[:] = ends - starts
+        starts = np.searchsorted(gid, np.arange(g), side="left").astype(np.int32)
+        ends = np.searchsorted(gid, np.arange(g), side="right").astype(np.int32)
         for k, j in lookup.items():
             group_bitmaps[j] = np.frombuffer(k, dtype=np.uint32)
-        return ANNDataset(
+        ds = ANNDataset(
             name=name, vectors=vectors, bitmaps=bitmaps, universe=universe,
             group_of=gid, group_bitmaps=group_bitmaps,
-            group_start=group_start, group_size=group_size,
+            group_start=starts, group_size=(ends - starts).astype(np.int32),
             group_lookup=lookup,
             norms_sq=np.sum(vectors.astype(np.float64) ** 2, axis=1).astype(np.float32),
         )
+        return (ds, order) if return_order else ds
 
     # ---- basic stats ---------------------------------------------------
     @property

@@ -115,7 +115,8 @@ class SearchResult:
     * `decisions` — per-query `RoutingDecision` (None for direct
       single-method searches);
     * `timings` — stage wall-clock seconds (`route_s`, `search_s`,
-      `total_s`).
+      `total_s`; live indexes additionally report `base_s`, `delta_s`
+      and `merge_s` for the base scan / delta scan / candidate fold).
     """
     ids: np.ndarray
     distances: np.ndarray
@@ -267,6 +268,12 @@ class FilteredIndex:
         if key not in self._indexes:
             self._indexes[key] = method.build(self.ds, dict(build_params))
         return self._indexes[key]
+
+    def built_keys(self) -> list[tuple]:
+        """Keys of every built index: (method_name, build_params_tuple).
+        `LiveFilteredIndex.compact` replays these against the new base so
+        a compaction swap doesn't cold-start the serving methods."""
+        return list(self._indexes.keys())
 
     def evict(self, method_name: str | None = None) -> int:
         """Drop built indexes (all of one method, or every method).

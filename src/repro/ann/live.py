@@ -1,0 +1,1431 @@
+"""Live index subsystem — streaming upserts/deletes over a sealed base.
+
+`LiveFilteredIndex` turns the frozen `FilteredIndex` serving handle into
+a mutable one without giving up the batched read path:
+
+* **delta segment** (`DeltaSegment`) — an append-only, host-growable
+  store of upserted vectors/bitmaps, mirrored to the device in fixed
+  `chunk`-row blocks (sealed chunks upload once; only the partial tail
+  chunk re-uploads per search);
+* **tombstone bitmap** — one bool per id over base + delta; `delete()`
+  marks ids dead and bumps a version so snapshots stay consistent;
+* **snapshot epochs** (`LiveSnapshot`) — a cheap consistent read view:
+  the delta high-watermark plus a tombstone copy, pinned to its base
+  *generation* so an in-flight batch keeps its base alive across a
+  concurrent `compact()`;
+* **background compaction** — `compact()` folds the surviving base and
+  delta rows into a fresh group-sorted `ANNDataset` (the same
+  construction `ANNDataset.build` uses, so upsert-everything-then-compact
+  is bit-identical to building the index directly), rebuilds the old
+  base's method indexes in a worker thread, and atomically swaps the
+  base under the generation counter while old-epoch readers drain.
+
+The read path runs the routed method on the base (overfetched by the
+base tombstone count, capped at k — so up to k deletions ranked above a
+query's live matches cannot crowd them out of the top-k; beyond that
+the base segment degrades gracefully until `compact()` folds the
+tombstones away, which is the intended cadence), a brute-force
+`ops.masked_topk` pass on the delta segment (overfetched by the *exact*
+delta tombstone count — the delta stays exact at any deletion load),
+masks tombstones in both candidate sets, and folds them through
+`ops.merge_topk`. Ids are per-generation row ids: base rows keep their
+dataset row id, delta rows take `base_n + insertion_order`; compaction
+remaps both (`stats()["generation"]` tells epochs apart).
+
+`ShardedLiveIndex` scales the same surface across row shards: upserts
+round-robin over per-shard delta segments, per-shard ids globalise
+through the shard row offsets (base) and a global insertion-order map
+(delta), and `RouterService`/`AsyncBatchQueue` serve either handle
+unchanged. Routing features stay fresh through the `live_stats()`
+protocol `repro.core.features` consumes (live per-label counts and
+exact live selectivity corrections).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
+
+from repro.ann import labels as lb
+from repro.ann import registry as registry_mod
+from repro.ann.dataset import ANNDataset
+from repro.ann.engine import ParamSetting, resolve_setting
+from repro.ann.index import (FilteredIndex, QueryBatch, SearchResult,
+                             exact_distances)
+from repro.ann.predicates import Predicate
+from repro.ann.sharded import merge_candidates, stack_candidates
+
+DEFAULT_DELTA_CHUNK = 512
+
+
+def _bucket(k: int, mult: int = 8) -> int:
+    """Round up to a multiple of `mult` — the overfetch width follows the
+    tombstone count, and bucketing it bounds jit recompilations."""
+    return ((int(k) + mult - 1) // mult) * mult
+
+
+def _label_counts(bitmaps: np.ndarray, universe: int,
+                  weights: np.ndarray | None = None) -> np.ndarray:
+    """[U] per-label carrier counts from packed [N, W] bitmaps."""
+    if bitmaps.shape[0] == 0:
+        return np.zeros(universe, dtype=np.int64)
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = ((bitmaps[:, :, None] >> shifts) & np.uint32(1)).astype(np.int64)
+    bits = bits.reshape(bitmaps.shape[0], -1)[:, :universe]
+    if weights is not None:
+        bits = weights[:, None] * bits
+    return bits.sum(0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveStats:
+    """Live-set summary the routing features consume (see
+    `repro.core.features`): exact live size, per-label carrier
+    fractions, and the bitmap rows needed to correct base selectivity
+    counts (subtract tombstoned base rows, add live delta rows).
+    `base_ds` is the sealed base the tombstone rows refer to — the
+    feature layer counts base matches against *it*, so a compaction
+    racing the feature pass can't pair generation-g corrections with a
+    generation-g+1 base."""
+    n_live: int
+    label_freq: np.ndarray          # [U] live per-label carrier fractions
+    base_tomb_bitmaps: np.ndarray   # [Tb, W] bitmaps of dead base rows
+    delta_bitmaps: np.ndarray       # [Dl, W] bitmaps of live delta rows
+    base_ds: object = None          # ANNDataset of this snapshot's base
+
+
+class DeltaSegment:
+    """Append-only host store with a chunked device mirror.
+
+    Host arrays grow by doubling; rows never mutate once appended, so
+    concurrent readers can slice up to their snapshot watermark without
+    locking. The device mirror covers whole `chunk`-row blocks of
+    appended data and is extended (one upload per new block) under a
+    private lock; `device_view` pads the partial tail chunk with
+    sentinel rows (zero vector + `PAD_SCORE` norm — never selected by
+    `masked_topk`) so the kernel sees shapes that change only at chunk
+    boundaries.
+    """
+
+    def __init__(self, dim: int, width: int, *,
+                 chunk: int = DEFAULT_DELTA_CHUNK):
+        self.dim = int(dim)
+        self.width = int(width)
+        self.chunk = max(1, int(chunk))
+        self._vec = np.empty((0, self.dim), np.float32)
+        self._bm = np.empty((0, self.width), np.uint32)
+        self._norms = np.empty((0,), np.float32)
+        self._rows = 0
+        self._dev = None            # (vectors, norms, bitmaps) jax arrays
+        self._dev_rows = 0          # rows covered by the mirror
+        self._dev_lock = threading.Lock()
+
+    @property
+    def rows(self) -> int:
+        return self._rows
+
+    def _grow(self, need: int) -> None:
+        cap = self._vec.shape[0]
+        if need <= cap:
+            return
+        new_cap = max(need, max(self.chunk, 2 * cap))
+        for name, fill_shape in (("_vec", (new_cap, self.dim)),
+                                 ("_bm", (new_cap, self.width)),
+                                 ("_norms", (new_cap,))):
+            old = getattr(self, name)
+            new = np.zeros(fill_shape, old.dtype)
+            new[: self._rows] = old[: self._rows]
+            setattr(self, name, new)
+
+    def append(self, vectors: np.ndarray,
+               bitmaps: np.ndarray) -> tuple[int, int]:
+        """Append rows; returns the local id range [start, stop)."""
+        n = vectors.shape[0]
+        start = self._rows
+        self._grow(start + n)
+        self._vec[start: start + n] = vectors
+        self._bm[start: start + n] = bitmaps
+        self._norms[start: start + n] = np.sum(
+            vectors.astype(np.float64) ** 2, axis=1).astype(np.float32)
+        self._rows = start + n
+        return start, start + n
+
+    def host_view(self, rows: int):
+        """(vectors, bitmaps, norms) for the first `rows` rows (views —
+        valid for any watermark that was reached before the call)."""
+        return self._vec[:rows], self._bm[:rows], self._norms[:rows]
+
+    def device_view(self, rows: int, scope):
+        """Device tensors covering the first `rows` rows, padded to a
+        chunk multiple with never-selected sentinel rows. `scope` is a
+        zero-arg context factory placing uploads (the owning handle's
+        `_device_scope`)."""
+        import jax.numpy as jnp
+
+        from repro.kernels import masked_topk as mk
+
+        full = (rows // self.chunk) * self.chunk
+        with self._dev_lock:
+            if full > self._dev_rows:
+                with scope():
+                    vec = jnp.asarray(self._vec[self._dev_rows: full])
+                    bm = jnp.asarray(self._bm[self._dev_rows: full])
+                    nm = jnp.asarray(self._norms[self._dev_rows: full])
+                    if self._dev is None:
+                        self._dev = (vec, nm, bm)
+                    else:
+                        self._dev = (
+                            jnp.concatenate([self._dev[0], vec]),
+                            jnp.concatenate([self._dev[1], nm]),
+                            jnp.concatenate([self._dev[2], bm]))
+                self._dev_rows = full
+            dev = self._dev
+        parts_v = [dev[0][:full]] if full else []
+        parts_n = [dev[1][:full]] if full else []
+        parts_b = [dev[2][:full]] if full else []
+        tail = rows - full
+        if tail:
+            tv = np.zeros((self.chunk, self.dim), np.float32)
+            tb = np.zeros((self.chunk, self.width), np.uint32)
+            tn = np.full((self.chunk,), mk.PAD_SCORE, np.float32)
+            tv[:tail] = self._vec[full:rows]
+            tb[:tail] = self._bm[full:rows]
+            tn[:tail] = self._norms[full:rows]
+            with scope():
+                parts_v.append(jnp.asarray(tv))
+                parts_n.append(jnp.asarray(tn))
+                parts_b.append(jnp.asarray(tb))
+        if not parts_v:
+            return (jnp.zeros((0, self.dim), jnp.float32),
+                    jnp.zeros((0,), jnp.float32),
+                    jnp.zeros((0, self.width), jnp.uint32))
+        if len(parts_v) == 1:
+            return parts_v[0], parts_n[0], parts_b[0]
+        return (jnp.concatenate(parts_v), jnp.concatenate(parts_n),
+                jnp.concatenate(parts_b))
+
+    def device_rows(self) -> int:
+        return self._dev_rows
+
+    def drop_device(self) -> None:
+        with self._dev_lock:
+            self._dev = None
+            self._dev_rows = 0
+
+
+class _StageTimings:
+    """Thread-local stage-timing accumulator shared by the live handles:
+    `run_method` calls `_stage_add`, the service layer drains with
+    `pop_stage_timings` (per thread, so pipelined queue workers don't
+    cross-contaminate). Subclasses set `self._local = threading.local()`
+    in __init__."""
+
+    def _stage_add(self, d: dict) -> None:
+        acc = getattr(self._local, "timings", None)
+        if acc is None:
+            acc = self._local.timings = {}
+        for key, val in d.items():
+            acc[key] = acc.get(key, 0.0) + val
+
+    def pop_stage_timings(self) -> dict:
+        """Return and clear this thread's accumulated stage timings."""
+        acc = getattr(self._local, "timings", None) or {}
+        self._local.timings = {}
+        return acc
+
+
+class LiveSnapshot:
+    """Consistent read epoch over a `LiveFilteredIndex`.
+
+    Captures the delta high-watermark, a tombstone copy, and the base
+    generation — and *pins* that generation (the sealed base handle
+    stays open) until `release()` / the context manager exits. Searches
+    that are handed a snapshot see exactly this state regardless of
+    concurrent `upsert`/`delete`/`compact` calls.
+    """
+
+    __slots__ = ("generation", "base_n", "delta_rows", "tombstones",
+                 "tombstone_version", "delta", "_owner", "_released")
+
+    def __init__(self, owner, generation, base_n, delta_rows, tombstones,
+                 tombstone_version, delta):
+        self.generation = generation
+        self.base_n = base_n
+        self.delta_rows = delta_rows
+        self.tombstones = tombstones
+        self.tombstone_version = tombstone_version
+        self.delta = delta
+        self._owner = owner
+        self._released = False
+
+    @property
+    def n_total(self) -> int:
+        return self.base_n + self.delta_rows
+
+    @property
+    def n_live(self) -> int:
+        return self.n_total - int(self.tombstones.sum())
+
+    def release(self) -> None:
+        """Unpin the snapshot's generation (idempotent, thread-safe). A
+        drained, superseded generation frees its base handle here."""
+        with self._owner._lock:        # flag flip atomic wrt double release
+            if self._released:
+                return
+            self._released = True
+        self._owner._release_reader(self.generation)
+
+    def __enter__(self) -> "LiveSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return (f"LiveSnapshot(gen={self.generation}, base_n={self.base_n}, "
+                f"delta_rows={self.delta_rows}, "
+                f"tombstones={int(self.tombstones.sum())})")
+
+
+class LiveFilteredIndex(_StageTimings):
+    """Mutable serving handle: sealed base + delta segment + tombstones.
+
+    Args:
+        ds: the sealed base dataset, or None for an empty live index
+            (then `name`/`dim`/`universe` are required — e.g. via the
+            `empty` constructor). Routed serving (`RouterService`) needs
+            a non-empty base for its dataset-level features; direct
+            method search works from empty.
+        registry: optional `MethodRegistry` for method-name resolution.
+        device: optional jax device pin (forwarded to the base handle
+            and the delta mirror uploads).
+        delta_chunk: delta device-mirror block size in rows.
+    """
+
+    def __init__(self, ds: ANNDataset | None = None, *, name: str | None = None,
+                 dim: int | None = None, universe: int | None = None,
+                 registry=None, device=None,
+                 delta_chunk: int = DEFAULT_DELTA_CHUNK):
+        if ds is None:
+            if name is None or dim is None or universe is None:
+                raise ValueError(
+                    "an empty LiveFilteredIndex needs name=, dim= and "
+                    "universe= (or pass a base ANNDataset)")
+            self._name, self._dim = str(name), int(dim)
+            self._universe = int(universe)
+            self._width = lb.n_words(self._universe)
+            self._base_fx: FilteredIndex | None = None
+            self._base_n = 0
+            base_counts = np.zeros(self._universe, dtype=np.int64)
+        else:
+            self._name, self._dim = ds.name, ds.dim
+            self._universe = ds.universe
+            self._width = ds.bitmaps.shape[1]
+            self._base_fx = FilteredIndex(ds, registry=registry,
+                                          device=device)
+            self._base_n = ds.n
+            base_counts = _label_counts(
+                ds.group_bitmaps, ds.universe,
+                weights=ds.group_size.astype(np.int64))
+        self._registry = registry
+        self._placement = device
+        self._delta_chunk = int(delta_chunk)
+        self._delta = DeltaSegment(self._dim, self._width, chunk=delta_chunk)
+        self._tomb = np.zeros(self._base_n, bool)
+        self._tomb_version = 0
+        self._live_label_counts = base_counts
+        self._generation = 0
+        self._lock = threading.RLock()
+        self._readers: dict[int, int] = {}      # generation -> pin count
+        self._retired: dict[int, FilteredIndex | None] = {}
+        self._compact_pool: ThreadPoolExecutor | None = None
+        self._compacting: Future | None = None
+        self._last_remap: np.ndarray | None = None
+        self._features = None       # repro.core.features cache slot
+        self._local = threading.local()
+        self._closed = False
+
+    @classmethod
+    def empty(cls, name: str, dim: int, universe: int,
+              **kw) -> "LiveFilteredIndex":
+        """A live index with no sealed base — everything starts as delta."""
+        return cls(None, name=name, dim=dim, universe=universe, **kw)
+
+    # ---- lifecycle ------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def ds(self) -> ANNDataset | None:
+        """The current generation's sealed base dataset (None when the
+        index started empty and has not compacted yet)."""
+        fx = self._base_fx
+        return None if fx is None else fx.ds
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    @property
+    def base_n(self) -> int:
+        return self._base_n
+
+    @property
+    def n_total(self) -> int:
+        return self._base_n + self._delta.rows
+
+    @property
+    def n_live(self) -> int:
+        with self._lock:
+            return self.n_total - int(self._tomb.sum())
+
+    @property
+    def device(self):
+        """Base device tensors (routing-feature kernels). Requires a
+        non-empty base."""
+        if self._base_fx is None:
+            raise RuntimeError(
+                f"LiveFilteredIndex({self._name!r}) has no sealed base yet "
+                f"(compact() first, or serve it unrouted)")
+        return self._base_fx.device
+
+    def close(self) -> None:
+        """Stop the handle: wait out a running compaction (its swap is
+        skipped once closed), close the base of every generation, drop
+        the delta device mirror. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            comp = self._compacting
+        if comp is not None:
+            try:
+                comp.result(timeout=300)
+            except BaseException:
+                pass
+        with self._lock:
+            if self._base_fx is not None:
+                self._base_fx.close()
+            for fx in self._retired.values():
+                if fx is not None:
+                    fx.close()
+            self._retired.clear()
+            self._delta.drop_device()
+            self._features = None
+        if self._compact_pool is not None:
+            self._compact_pool.shutdown(wait=True)
+            self._compact_pool = None
+
+    def __enter__(self) -> "LiveFilteredIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"LiveFilteredIndex({self._name!r}) is closed")
+
+    def _device_scope(self):
+        import contextlib
+
+        if self._placement is None:
+            return contextlib.nullcontext()
+        import jax
+
+        return jax.default_device(self._placement)
+
+    # ---- write path -----------------------------------------------------
+    def upsert(self, vectors, bitmaps) -> np.ndarray:
+        """Append rows to the delta segment.
+
+        Args:
+            vectors: [R, d] (or [d]) float embeddings.
+            bitmaps: [R, W] (or [W]) packed uint32 label sets.
+        Returns: [R] int64 assigned ids (valid for this generation;
+            `compact()` remaps them).
+        Raises: RuntimeError if closed; ValueError on shape mismatch.
+        """
+        vectors = np.asarray(vectors, dtype=np.float32)
+        bitmaps = np.asarray(bitmaps, dtype=np.uint32)
+        if vectors.ndim == 1:
+            vectors = vectors[None]
+        if bitmaps.ndim == 1:
+            bitmaps = bitmaps[None]
+        if vectors.ndim != 2 or vectors.shape[1] != self._dim:
+            raise ValueError(
+                f"upsert vectors must be [R, {self._dim}]; got "
+                f"{vectors.shape}")
+        if bitmaps.shape != (vectors.shape[0], self._width):
+            raise ValueError(
+                f"upsert bitmaps must be [{vectors.shape[0]}, "
+                f"{self._width}]; got {bitmaps.shape}")
+        # the bit expansion only depends on the arguments — keep it out
+        # of the lock so big ingest batches don't stall readers
+        counts = _label_counts(bitmaps, self._universe)
+        with self._lock:
+            self._check_open()
+            start, stop = self._delta.append(vectors, bitmaps)
+            self._tomb = np.concatenate(
+                [self._tomb, np.zeros(stop - start, bool)])
+            self._live_label_counts = self._live_label_counts + counts
+            return np.arange(self._base_n + start, self._base_n + stop,
+                             dtype=np.int64)
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or delta rows of the current generation).
+        Returns the number of *newly* deleted rows; already-dead ids are
+        no-ops. Raises IndexError on out-of-range ids."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        with self._lock:
+            self._check_open()
+            n_tot = self.n_total
+            if ids.size and (ids.min() < 0 or ids.max() >= n_tot):
+                raise IndexError(
+                    f"delete ids must be in [0, {n_tot}); got range "
+                    f"[{ids.min()}, {ids.max()}]")
+            fresh = ids[~self._tomb[ids]]
+            fresh = np.unique(fresh)
+            if fresh.size:
+                self._tomb[fresh] = True
+                self._tomb_version += 1
+                self._live_label_counts = (
+                    self._live_label_counts
+                    - _label_counts(self._bitmaps_of(fresh), self._universe))
+            return int(fresh.size)
+
+    def _bitmaps_of(self, gids: np.ndarray) -> np.ndarray:
+        """[R, W] packed bitmaps for current-generation global ids."""
+        out = np.zeros((gids.size, self._width), np.uint32)
+        base = gids < self._base_n
+        if base.any():
+            out[base] = self._base_fx.ds.bitmaps[gids[base]]
+        if (~base).any():
+            out[~base] = self._delta._bm[gids[~base] - self._base_n]
+        return out
+
+    def fetch(self, ids, snapshot: LiveSnapshot | None = None) -> np.ndarray:
+        """[R, d] vectors for result ids (−1 rows come back as NaN).
+        With a snapshot, ids are interpreted in that epoch's id space."""
+        snap = snapshot or self.snapshot()
+        try:
+            ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+            out = np.full((ids.size, self._dim), np.nan, np.float32)
+            fx = self._base_for(snap)
+            base = (ids >= 0) & (ids < snap.base_n)
+            if base.any():
+                out[base] = fx.ds.vectors[ids[base]]
+            delta = ids >= snap.base_n
+            if delta.any():
+                dvec, _, _ = snap.delta.host_view(snap.delta_rows)
+                out[delta] = dvec[ids[delta] - snap.base_n]
+            return out
+        finally:
+            if snapshot is None:
+                snap.release()
+
+    # ---- snapshots / epochs ---------------------------------------------
+    def snapshot(self) -> LiveSnapshot:
+        """Pin a consistent read epoch (see `LiveSnapshot`). Callers that
+        hold one across writes must `release()` it (context manager
+        supported); searches without an explicit snapshot take and
+        release one internally."""
+        with self._lock:
+            self._check_open()
+            rows = self._delta.rows
+            gen = self._generation
+            self._readers[gen] = self._readers.get(gen, 0) + 1
+            return LiveSnapshot(self, gen, self._base_n, rows,
+                                self._tomb[: self._base_n + rows].copy(),
+                                self._tomb_version, self._delta)
+
+    def _release_reader(self, gen: int) -> None:
+        with self._lock:
+            left = self._readers.get(gen, 0) - 1
+            if left > 0:
+                self._readers[gen] = left
+                return
+            self._readers.pop(gen, None)
+            fx = self._retired.pop(gen, None)
+        if fx is not None:
+            fx.close()
+
+    def _base_for(self, snap: LiveSnapshot) -> FilteredIndex | None:
+        with self._lock:
+            if snap.generation == self._generation:
+                return self._base_fx
+            if snap.generation in self._retired:
+                return self._retired[snap.generation]
+        raise RuntimeError(
+            f"snapshot generation {snap.generation} has been released "
+            f"(current generation {self._generation})")
+
+    # ---- read path -------------------------------------------------------
+    def _resolve(self, method):
+        if isinstance(method, str):
+            reg = self._registry or registry_mod.default_registry()
+            return reg.get(method)
+        return method
+
+    def run_method(self, method, setting: ParamSetting, batch: QueryBatch,
+                   *, snapshot: LiveSnapshot | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Raw live execution of one (method, setting): routed method on
+        the base, brute-force `masked_topk` on the delta, tombstones
+        masked in both, candidates folded through `merge_topk`.
+
+        Returns the `FilteredIndex.run_method` contract: ([Q, k] int32
+        ids with −1 pad, [Q, k] float32 ranking scores with +inf at −1).
+        Stage timings (`base_s`/`delta_s`/`merge_s`) accumulate on a
+        thread-local, drained by `pop_stage_timings()`.
+        """
+        self._check_open()
+        snap = snapshot
+        if snap is None:
+            snap = self.snapshot()
+        try:
+            return self._run(method, setting, batch, snap)
+        finally:
+            if snapshot is None:
+                snap.release()
+
+    def _run(self, method, setting, batch: QueryBatch, snap: LiveSnapshot):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        k = batch.k
+        tomb = snap.tombstones
+        base_dead = int(tomb[: snap.base_n].sum())
+        delta_dead = int(tomb[snap.base_n:].sum())
+        parts = []
+        t0 = time.perf_counter()
+        fx = self._base_for(snap) if snap.base_n else None
+        if fx is not None:
+            # overfetch by the tombstone count (capped at k, bucketed to
+            # bound recompiles) so deletions can't crowd out live rows
+            kb = _bucket(k + min(base_dead, k)) if base_dead else k
+            b_ids, b_raw = fx.run_method(
+                self._resolve(method), setting,
+                QueryBatch(batch.vectors, batch.bitmaps, batch.pred, kb))
+            b_ids = np.asarray(b_ids, dtype=np.int32)
+            b_raw = np.asarray(b_raw, dtype=np.float32)
+            if base_dead:
+                valid = b_ids >= 0
+                dead = np.zeros_like(valid)
+                dead[valid] = tomb[b_ids[valid]]
+                b_ids = np.where(dead, np.int32(-1), b_ids)
+                b_raw = np.where(dead, np.float32(np.inf), b_raw)
+            parts.append((b_ids, b_raw))
+        t1 = time.perf_counter()
+        if snap.delta_rows:
+            # exact overfetch: top-(k + dead) over the delta always
+            # contains the live top-k
+            kd = _bucket(k + min(delta_dead, snap.delta_rows))
+            dvec, dnorm, dbm = snap.delta.device_view(
+                snap.delta_rows, self._device_scope)
+            d_ids, d_raw = ops.masked_topk(
+                jnp.asarray(batch.vectors), jnp.asarray(batch.bitmaps),
+                dvec, dnorm, dbm, pred=int(batch.pred), k=kd)
+            d_ids = np.asarray(d_ids, dtype=np.int32)
+            d_raw = np.asarray(d_raw, dtype=np.float32)
+            # sentinel/pad rows are already −1; rows past the watermark
+            # (appended since the snapshot) and tombstoned rows drop here
+            valid = (d_ids >= 0) & (d_ids < snap.delta_rows)
+            dead = ~valid
+            dead[valid] |= tomb[snap.base_n + d_ids[valid]]
+            d_ids = np.where(dead, np.int32(-1),
+                             d_ids + np.int32(snap.base_n))
+            d_raw = np.where(dead, np.float32(np.inf), d_raw)
+            parts.append((d_ids, d_raw))
+        t2 = time.perf_counter()
+        if not parts:
+            ids = np.full((batch.q, k), -1, np.int32)
+            raw = np.full((batch.q, k), np.inf, np.float32)
+        else:
+            ids, raw = merge_candidates(*stack_candidates(parts), k=k)
+        t3 = time.perf_counter()
+        self._stage_add({"base_s": t1 - t0, "delta_s": t2 - t1,
+                         "merge_s": t3 - t2})
+        return ids, raw
+
+    def search(self, batch: QueryBatch, method,
+               setting: ParamSetting | str | None = None, *,
+               snapshot: LiveSnapshot | None = None) -> SearchResult:
+        """Direct single-method live search (no routing). Args/semantics
+        match `FilteredIndex.search`, plus `snapshot=` to read a pinned
+        epoch; timings gain `base_s`/`delta_s`/`merge_s`."""
+        self._check_open()
+        method = self._resolve(method)
+        if not isinstance(setting, ParamSetting):
+            setting = resolve_setting(method, setting)
+        self.pop_stage_timings()
+        t0 = time.perf_counter()
+        ids, raw = self.run_method(method, setting, batch,
+                                   snapshot=snapshot)
+        dt = time.perf_counter() - t0
+        timings = {"search_s": dt, "total_s": dt}
+        timings.update(self.pop_stage_timings())
+        return SearchResult(
+            ids=ids, distances=exact_distances(raw, ids, batch.vectors),
+            decisions=None, timings=timings)
+
+    # ---- routing-feature freshness ---------------------------------------
+    def live_stats(self) -> LiveStats:
+        """Current live-set summary for the routing features (exact live
+        size, live per-label fractions, correction bitmaps)."""
+        with self._lock:
+            rows = self._delta.rows
+            tomb = self._tomb
+            n_live = self._base_n + rows - int(tomb.sum())
+            base_dead = np.nonzero(tomb[: self._base_n])[0]
+            base_bm = (self._base_fx.ds.bitmaps[base_dead]
+                       if base_dead.size else
+                       np.zeros((0, self._width), np.uint32))
+            delta_live = ~tomb[self._base_n: self._base_n + rows]
+            delta_bm = self._delta._bm[:rows][delta_live]
+            return LiveStats(
+                n_live=n_live,
+                label_freq=(self._live_label_counts.astype(np.float64)
+                            / max(n_live, 1)),
+                base_tomb_bitmaps=base_bm,
+                delta_bitmaps=delta_bm.copy(),
+                base_ds=self.ds)
+
+    # ---- compaction ------------------------------------------------------
+    def compact(self, timeout: float | None = None) -> int:
+        """Merge base + delta (minus tombstones) into a fresh sealed base
+        and swap it in. Blocks until done; returns the new generation.
+        See `compact_async` for the non-blocking form."""
+        return self.compact_async().result(timeout=timeout)
+
+    def compact_async(self) -> Future:
+        """Start (or join) a background compaction.
+
+        The worker thread gathers the surviving rows under a snapshot,
+        builds the new group-sorted `ANNDataset` + `FilteredIndex`,
+        replays the old base's built method indexes, then swaps
+        atomically under the write lock: rows upserted and tombstones
+        set *during* the rebuild are carried over (tail rows become the
+        new delta; late deletes are translated through the id remap).
+        Old-generation readers keep their base until their snapshots
+        release. Returns a Future of the new generation; a second call
+        while one runs returns the same Future.
+        """
+        with self._lock:
+            self._check_open()
+            if self._compacting is not None and not self._compacting.done():
+                return self._compacting
+            if self._compact_pool is None:
+                self._compact_pool = ThreadPoolExecutor(
+                    max_workers=1,
+                    thread_name_prefix=f"compact-{self._name}")
+            snap = self.snapshot()
+            fut = self._compact_pool.submit(self._compact_job, snap)
+            self._compacting = fut
+            return fut
+
+    def _compact_job(self, snap: LiveSnapshot) -> int:
+        try:
+            keep_base = ~snap.tombstones[: snap.base_n]
+            keep_delta = ~snap.tombstones[snap.base_n:]
+            dvec, dbm, _ = snap.delta.host_view(snap.delta_rows)
+            base_ds = None if snap.base_n == 0 else self._base_for(snap).ds
+            vec_parts, bm_parts = [], []
+            if base_ds is not None:
+                vec_parts.append(base_ds.vectors[keep_base])
+                bm_parts.append(base_ds.bitmaps[keep_base])
+            vec_parts.append(dvec[keep_delta])
+            bm_parts.append(dbm[keep_delta])
+            vectors = np.concatenate(vec_parts) if vec_parts else \
+                np.zeros((0, self._dim), np.float32)
+            bitmaps = np.concatenate(bm_parts) if bm_parts else \
+                np.zeros((0, self._width), np.uint32)
+            kept = np.concatenate([
+                np.nonzero(keep_base)[0],
+                snap.base_n + np.nonzero(keep_delta)[0]])
+            new_ds, order = ANNDataset.from_packed(
+                self._name, vectors, bitmaps, self._universe,
+                return_order=True)
+            inv = np.empty(order.size, np.int64)
+            inv[order] = np.arange(order.size)
+            remap = np.full(snap.n_total, -1, np.int64)
+            remap[kept] = inv
+            new_fx = FilteredIndex(new_ds, registry=self._registry,
+                                   device=self._placement)
+            old_fx = self._base_for(snap) if snap.base_n else None
+            if old_fx is not None:
+                for m_name, build in old_fx.built_keys():
+                    try:
+                        new_fx.get_index(m_name, build)
+                    except KeyError:
+                        pass        # method no longer registered
+            with self._lock:
+                if self._closed:
+                    new_fx.close()
+                    return self._generation
+                rows_now = self._delta.rows
+                tvec, tbm, _ = self._delta.host_view(rows_now)
+                tail = slice(snap.delta_rows, rows_now)
+                new_delta = DeltaSegment(self._dim, self._width,
+                                         chunk=self._delta_chunk)
+                n_tail = rows_now - snap.delta_rows
+                if n_tail:
+                    new_delta.append(tvec[tail], tbm[tail])
+                new_tomb = np.zeros(new_ds.n + n_tail, bool)
+                # deletes that landed after the compaction snapshot
+                newly = self._tomb[: snap.n_total] & ~snap.tombstones
+                ng = remap[np.nonzero(newly)[0]]
+                new_tomb[ng[ng >= 0]] = True
+                new_tomb[new_ds.n:] = self._tomb[snap.n_total:
+                                                 snap.n_total + n_tail]
+                old_gen = self._generation
+                old_base = self._base_fx
+                self._base_fx = new_fx
+                self._base_n = new_ds.n
+                self._delta = new_delta
+                self._tomb = new_tomb
+                self._tomb_version += 1
+                self._generation = old_gen + 1
+                self._features = None       # dataset features went stale
+                self._last_remap = remap
+                if self._readers.get(old_gen):
+                    # record the retirement even for an empty base (None)
+                    # so pinned snapshots of generation 0 stay resolvable
+                    self._retired[old_gen] = old_base
+                elif old_base is not None:
+                    old_base.close()
+                return self._generation
+        finally:
+            snap.release()
+            with self._lock:
+                self._compacting = None
+
+    # ---- maintenance -----------------------------------------------------
+    def last_remap(self) -> np.ndarray | None:
+        """Id translation of the most recent `compact()`: `remap[old_id]`
+        is the row's id in the new generation, −1 if it was deleted.
+        None before the first compaction. Ids are per-generation, so
+        clients holding ids across a compaction re-resolve through
+        this."""
+        return self._last_remap
+
+    def built_keys(self) -> list[tuple]:
+        return [] if self._base_fx is None else self._base_fx.built_keys()
+
+    def stats(self) -> dict:
+        """State snapshot: generation, live/total row counts, delta and
+        tombstone sizes, mirror coverage, compaction status."""
+        with self._lock:
+            rows = self._delta.rows
+            return {
+                "dataset": self._name,
+                "generation": self._generation,
+                "base_n": self._base_n,
+                "delta_rows": rows,
+                "delta_device_rows": self._delta.device_rows(),
+                "tombstones": int(self._tomb.sum()),
+                "n_live": self._base_n + rows - int(self._tomb.sum()),
+                "tombstone_version": self._tomb_version,
+                "compacting": (self._compacting is not None
+                               and not self._compacting.done()),
+                "retired_generations": sorted(self._retired),
+                "closed": self._closed,
+            }
+
+
+# ---------------------------------------------------------------------------
+# sharded live index — round-robin upserts over per-shard delta segments
+# ---------------------------------------------------------------------------
+
+class ShardedLiveSnapshot:
+    """Consistent cross-shard read epoch: one pinned `LiveSnapshot` per
+    shard plus the shard list / bounds / gid maps of the epoch, all
+    captured under the sharded index's write lock. Pins the epoch (old
+    shard lists survive a compaction swap) until `release()`."""
+
+    __slots__ = ("epoch", "shards", "bounds", "snaps", "gmaps",
+                 "_owner", "_released")
+
+    def __init__(self, owner, epoch, shards, bounds, snaps, gmaps):
+        self.epoch = epoch
+        self.shards = shards
+        self.bounds = bounds
+        self.snaps = snaps
+        self.gmaps = gmaps
+        self._owner = owner
+        self._released = False
+
+    def release(self) -> None:
+        """Unpin this epoch (idempotent, thread-safe)."""
+        with self._owner._lock:
+            if self._released:
+                return
+            self._released = True
+        for snap in self.snaps:
+            snap.release()
+        self._owner._release_epoch(self.epoch)
+
+    def __enter__(self) -> "ShardedLiveSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class ShardedLiveIndex(_StageTimings):
+    """Row-sharded live handle: one `LiveFilteredIndex` per shard.
+
+    Upserts round-robin row-by-row across shards; global delta ids are
+    assigned in insertion order (`total_base_n + j`) and mapped to
+    (shard, local-row) so `delete()` and result globalisation agree.
+    `run_method` snapshots every shard under one lock (a consistent
+    cross-shard epoch), fans out, globalises per-shard ids, and reduces
+    through `merge_topk`. `compact()` rebuilds **globally**: all
+    surviving rows merge into one fresh dataset that is re-sharded
+    contiguously, so the result is exactly a `ShardedFilteredIndex`
+    over the compacted data.
+
+    Args mirror `ShardedFilteredIndex` (+ the empty-base form of
+    `LiveFilteredIndex` via `name`/`dim`/`universe`).
+    """
+
+    def __init__(self, ds: ANNDataset | None = None, n_shards: int = 1, *,
+                 name: str | None = None, dim: int | None = None,
+                 universe: int | None = None, devices=None, registry=None,
+                 parallel: bool = True,
+                 delta_chunk: int = DEFAULT_DELTA_CHUNK):
+        from repro.ann.distributed import shard_bounds, shard_devices
+
+        n_shards = int(n_shards)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1; got {n_shards}")
+        if devices is None:
+            devices = shard_devices(n_shards)
+        self._registry = registry
+        self._delta_chunk = int(delta_chunk)
+        self._devices = devices
+        if ds is None:
+            if name is None or dim is None or universe is None:
+                raise ValueError(
+                    "an empty ShardedLiveIndex needs name=, dim= and "
+                    "universe= (or pass a base ANNDataset)")
+            self._name, self._dim = str(name), int(dim)
+            self._universe = int(universe)
+            self._base_ds: ANNDataset | None = None
+            self.bounds = np.zeros(n_shards + 1, dtype=np.int64)
+            self.shards = [
+                LiveFilteredIndex.empty(
+                    f"{self._name}/shard{i}", self._dim, self._universe,
+                    registry=registry, device=devices[i],
+                    delta_chunk=delta_chunk)
+                for i in range(n_shards)]
+        else:
+            self._name, self._dim = ds.name, ds.dim
+            self._universe = ds.universe
+            self._base_ds = ds
+            self.bounds = shard_bounds(ds.n, n_shards)
+            self.shards = [
+                LiveFilteredIndex(
+                    ds.row_slice(int(s), int(e),
+                                 name=f"{ds.name}/shard{i}"),
+                    registry=registry, device=devices[i],
+                    delta_chunk=delta_chunk)
+                for i, (s, e) in enumerate(zip(self.bounds[:-1],
+                                               self.bounds[1:]))]
+        self._total_base = 0 if ds is None else ds.n
+        self._delta_loc: list[tuple[int, int]] = []  # gid-j -> (shard, row)
+        self._shard_gids: list[list[int]] = [[] for _ in self.shards]
+        self._gid_arrays: list[np.ndarray] | None = None   # search cache
+        self._last_remap: np.ndarray | None = None
+        self._next_shard = 0
+        self._parallel = bool(parallel) and n_shards > 1
+        self._pool = (ThreadPoolExecutor(
+            max_workers=n_shards,
+            thread_name_prefix=f"live-shard-{self._name}")
+            if self._parallel else None)
+        self._lock = threading.RLock()
+        self._epoch = 0
+        self._epoch_readers: dict[int, int] = {}
+        self._old_shards: dict[int, list] = {}
+        self._feature_fx: FilteredIndex | None = None
+        self._compact_pool: ThreadPoolExecutor | None = None
+        self._compacting: Future | None = None
+        self._features = None
+        self._local = threading.local()
+        self._closed = False
+
+    # ---- lifecycle ------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def ds(self) -> ANNDataset | None:
+        """The current generation's full base dataset (None before the
+        first compact of an empty-started index)."""
+        return self._base_ds
+
+    @property
+    def generation(self) -> int:
+        return self._epoch
+
+    @property
+    def n_live(self) -> int:
+        with self._lock:
+            return sum(s.n_live for s in self.shards)
+
+    @property
+    def feature_index(self) -> FilteredIndex:
+        """Full-base `FilteredIndex` on shard-0's device for the TPU
+        routing-feature kernels (lazy, like `ShardedFilteredIndex`)."""
+        self._check_open()
+        if self._base_ds is None:
+            raise RuntimeError(
+                f"ShardedLiveIndex({self._name!r}) has no sealed base yet")
+        if self._feature_fx is None:
+            self._feature_fx = FilteredIndex(
+                self._base_ds, registry=self._registry,
+                device=self._devices[0])
+        return self._feature_fx
+
+    @property
+    def device(self):
+        return self.feature_index.device
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            comp = self._compacting
+        if comp is not None:
+            try:
+                comp.result(timeout=300)
+            except BaseException:
+                pass
+        with self._lock:
+            for s in self.shards:
+                s.close()
+            for old in self._old_shards.values():
+                for s in old:
+                    s.close()
+            self._old_shards.clear()
+            if self._feature_fx is not None:
+                self._feature_fx.close()
+                self._feature_fx = None
+            self._features = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        if self._compact_pool is not None:
+            self._compact_pool.shutdown(wait=True)
+            self._compact_pool = None
+
+    def __enter__(self) -> "ShardedLiveIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"ShardedLiveIndex({self._name!r}) is closed")
+
+    # ---- write path -----------------------------------------------------
+    def upsert(self, vectors, bitmaps) -> np.ndarray:
+        """Append rows, round-robin across shards. Returns [R] global
+        ids (current generation)."""
+        vectors = np.asarray(vectors, dtype=np.float32)
+        bitmaps = np.asarray(bitmaps, dtype=np.uint32)
+        if vectors.ndim == 1:
+            vectors = vectors[None]
+        if bitmaps.ndim == 1:
+            bitmaps = bitmaps[None]
+        with self._lock:
+            self._check_open()
+            n = vectors.shape[0]
+            nsh = self.n_shards
+            shard_of = (self._next_shard + np.arange(n)) % nsh
+            gid0 = self._total_base + len(self._delta_loc)
+            d0 = len(self._delta_loc)
+            self._delta_loc.extend([None] * n)
+            for s in range(nsh):
+                rows = np.nonzero(shard_of == s)[0]
+                if rows.size == 0:
+                    continue
+                start_local = self.shards[s]._delta.rows
+                self.shards[s].upsert(vectors[rows], bitmaps[rows])
+                for off, j in enumerate(rows):
+                    self._delta_loc[d0 + int(j)] = (s, start_local + off)
+                    self._shard_gids[s].append(gid0 + int(j))
+            self._gid_arrays = None           # searches rebuild lazily
+            self._next_shard = (self._next_shard + n) % nsh
+            return np.arange(gid0, gid0 + n, dtype=np.int64)
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids; returns the number newly deleted."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        with self._lock:
+            self._check_open()
+            n_tot = self._total_base + len(self._delta_loc)
+            if ids.size and (ids.min() < 0 or ids.max() >= n_tot):
+                raise IndexError(
+                    f"delete ids must be in [0, {n_tot}); got range "
+                    f"[{ids.min()}, {ids.max()}]")
+            per: dict[int, list] = {}
+            for gid in ids.tolist():
+                if gid < self._total_base:
+                    s = int(np.searchsorted(self.bounds, gid,
+                                            side="right")) - 1
+                    per.setdefault(s, []).append(gid - int(self.bounds[s]))
+                else:
+                    s, row = self._delta_loc[gid - self._total_base]
+                    per.setdefault(s, []).append(
+                        self.shards[s].base_n + row)
+            return sum(self.shards[s].delete(lids)
+                       for s, lids in per.items())
+
+    # ---- read path -------------------------------------------------------
+    def _map_shards(self, fn, items):
+        if self._pool is not None:
+            return list(self._pool.map(fn, items))
+        return [fn(it) for it in items]
+
+    def snapshot(self) -> ShardedLiveSnapshot:
+        """Pin a consistent cross-shard read epoch (see
+        `ShardedLiveSnapshot`); callers must `release()` it."""
+        with self._lock:
+            self._check_open()
+            epoch = self._epoch
+            shards = list(self.shards)
+            bounds = self.bounds.copy()
+            snaps = [s.snapshot() for s in shards]
+            if self._gid_arrays is None:      # invalidated by upsert
+                self._gid_arrays = [np.asarray(g, dtype=np.int64)
+                                    for g in self._shard_gids]
+            gmaps = self._gid_arrays
+            self._epoch_readers[epoch] = \
+                self._epoch_readers.get(epoch, 0) + 1
+            return ShardedLiveSnapshot(self, epoch, shards, bounds,
+                                       snaps, gmaps)
+
+    def run_method(self, method, setting: ParamSetting, batch: QueryBatch,
+                   *, snapshot: ShardedLiveSnapshot | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Raw sharded live execution: consistent per-shard snapshots,
+        parallel fan-out, id globalisation (base via shard offsets,
+        delta via the insertion-order map), `merge_topk` reduction.
+        Pass `snapshot=` to pin several calls to one epoch."""
+        self._check_open()
+        snap = snapshot if snapshot is not None else self.snapshot()
+        shards, bounds = snap.shards, snap.bounds
+        snaps, gmaps = snap.snaps, snap.gmaps
+        try:
+            def shard_run(sv):
+                # drain the shard's stage timings *in the worker thread*
+                # (they live on a thread-local) and return them alongside
+                out = sv[0].run_method(method, setting, batch,
+                                       snapshot=sv[1])
+                return out, sv[0].pop_stage_timings()
+
+            ran = self._map_shards(shard_run, list(zip(shards, snaps)))
+            per = [r for r, _ in ran]
+            # shards overlap in wall-clock: report the slowest stage
+            for key in ("base_s", "delta_s"):
+                vals = [t.get(key, 0.0) for _, t in ran]
+                if any(vals):
+                    self._stage_add({key: max(vals)})
+            t0 = time.perf_counter()
+            parts = []
+            for s, ((ids, raw), ssnap) in enumerate(zip(per, snaps)):
+                ids = np.asarray(ids, dtype=np.int64)
+                raw = np.asarray(raw, dtype=np.float32)
+                out = np.full(ids.shape, -1, np.int64)
+                is_base = (ids >= 0) & (ids < ssnap.base_n)
+                out[is_base] = ids[is_base] + int(bounds[s])
+                is_delta = ids >= ssnap.base_n
+                if is_delta.any():
+                    out[is_delta] = gmaps[s][ids[is_delta] - ssnap.base_n]
+                parts.append((out.astype(np.int32), raw))
+            gids, graw = merge_candidates(*stack_candidates(parts),
+                                          k=batch.k)
+            self._stage_add({"merge_s": time.perf_counter() - t0})
+            return gids, graw
+        finally:
+            if snapshot is None:
+                snap.release()
+
+    def _release_epoch(self, epoch: int) -> None:
+        with self._lock:
+            left = self._epoch_readers.get(epoch, 0) - 1
+            if left > 0:
+                self._epoch_readers[epoch] = left
+                return
+            self._epoch_readers.pop(epoch, None)
+            old = (self._old_shards.pop(epoch, None)
+                   if epoch != self._epoch else None)
+        if old:
+            for s in old:
+                s.close()
+
+    def search(self, batch: QueryBatch, method,
+               setting: ParamSetting | str | None = None) -> SearchResult:
+        """Direct single-method sharded live search (no routing)."""
+        self._check_open()
+        if isinstance(method, str):
+            reg = self._registry or registry_mod.default_registry()
+            method = reg.get(method)
+        if not isinstance(setting, ParamSetting):
+            setting = resolve_setting(method, setting)
+        self.pop_stage_timings()
+        t0 = time.perf_counter()
+        ids, raw = self.run_method(method, setting, batch)
+        dt = time.perf_counter() - t0
+        timings = {"search_s": dt, "total_s": dt}
+        timings.update(self.pop_stage_timings())
+        return SearchResult(
+            ids=ids, distances=exact_distances(raw, ids, batch.vectors),
+            decisions=None, timings=timings)
+
+    # ---- routing-feature freshness ---------------------------------------
+    def live_stats(self) -> LiveStats:
+        """Aggregate live-set summary across shards (one consistent
+        epoch: shard stats and the base dataset are read under the same
+        lock a compaction swap takes)."""
+        with self._lock:
+            per = [s.live_stats() for s in self.shards]
+            base_ds = self._base_ds
+        n_live = sum(p.n_live for p in per)
+        counts = sum((p.label_freq * p.n_live for p in per),
+                     np.zeros(self._universe))
+        return LiveStats(
+            n_live=n_live,
+            label_freq=counts / max(n_live, 1),
+            base_tomb_bitmaps=np.concatenate(
+                [p.base_tomb_bitmaps for p in per]),
+            delta_bitmaps=np.concatenate([p.delta_bitmaps for p in per]),
+            base_ds=base_ds)
+
+    # ---- compaction ------------------------------------------------------
+    def compact(self, timeout: float | None = None) -> int:
+        """Global rebuild + re-shard; blocks, returns the new epoch."""
+        return self.compact_async().result(timeout=timeout)
+
+    def compact_async(self) -> Future:
+        """Background global compaction: merge every shard's surviving
+        base + delta rows (in global id order) into one fresh dataset,
+        re-shard it contiguously, swap the shard list atomically, and
+        drain old-epoch readers before closing the old shards. Writes
+        during the rebuild carry over exactly as in
+        `LiveFilteredIndex.compact_async`."""
+        with self._lock:
+            self._check_open()
+            if self._compacting is not None and not self._compacting.done():
+                return self._compacting
+            if self._compact_pool is None:
+                self._compact_pool = ThreadPoolExecutor(
+                    max_workers=1,
+                    thread_name_prefix=f"compact-{self._name}")
+            fut = self._compact_pool.submit(self._compact_job)
+            self._compacting = fut
+            return fut
+
+    def _gather(self, snaps, locs):
+        """Surviving rows in global id order + the kept-gid list."""
+        vec_parts, bm_parts, kept = [], [], []
+        for s, snap in enumerate(snaps):
+            if snap.base_n == 0:
+                continue
+            keep = ~snap.tombstones[: snap.base_n]
+            ds = self.shards[s]._base_for(snap).ds
+            vec_parts.append(ds.vectors[keep])
+            bm_parts.append(ds.bitmaps[keep])
+            kept.append(int(self.bounds[s]) + np.nonzero(keep)[0])
+        n_delta = len(locs)
+        if n_delta:
+            dvec = np.zeros((n_delta, self._dim), np.float32)
+            dbm = np.zeros((n_delta, lb.n_words(self._universe)), np.uint32)
+            alive = np.zeros(n_delta, bool)
+            loc_shard = np.array([l[0] for l in locs], np.int64)
+            loc_row = np.array([l[1] for l in locs], np.int64)
+            for s, snap in enumerate(snaps):
+                mine = loc_shard == s
+                if not mine.any():
+                    continue
+                sv, sb, _ = snap.delta.host_view(snap.delta_rows)
+                rows = loc_row[mine]
+                dvec[mine] = sv[rows]
+                dbm[mine] = sb[rows]
+                alive[mine] = ~snap.tombstones[snap.base_n + rows]
+            vec_parts.append(dvec[alive])
+            bm_parts.append(dbm[alive])
+            kept.append(self._total_base + np.nonzero(alive)[0])
+        if vec_parts:
+            return (np.concatenate(vec_parts), np.concatenate(bm_parts),
+                    np.concatenate(kept))
+        width = lb.n_words(self._universe)
+        return (np.zeros((0, self._dim), np.float32),
+                np.zeros((0, width), np.uint32),
+                np.zeros(0, np.int64))
+
+    def _compact_job(self) -> int:
+        from repro.ann.distributed import shard_bounds
+
+        snaps = None
+        try:
+            with self._lock:
+                snaps = [s.snapshot() for s in self.shards]
+                locs = list(self._delta_loc)
+                old_total = self._total_base + len(locs)
+            vectors, bitmaps, kept = self._gather(snaps, locs)
+            new_ds, order = ANNDataset.from_packed(
+                self._name, vectors, bitmaps, self._universe,
+                return_order=True)
+            inv = np.empty(order.size, np.int64)
+            inv[order] = np.arange(order.size)
+            remap = np.full(old_total, -1, np.int64)
+            remap[kept] = inv
+            nsh = self.n_shards
+            built = []
+            for s in self.shards:
+                built.extend(k for k in s.built_keys() if k not in built)
+            if new_ds.n >= nsh:
+                new_bounds = shard_bounds(new_ds.n, nsh)
+                new_shards = [
+                    LiveFilteredIndex(
+                        new_ds.row_slice(int(a), int(b),
+                                         name=f"{self._name}/shard{i}"),
+                        registry=self._registry, device=self._devices[i],
+                        delta_chunk=self._delta_chunk)
+                    for i, (a, b) in enumerate(zip(new_bounds[:-1],
+                                                   new_bounds[1:]))]
+                new_base: ANNDataset | None = new_ds
+            else:
+                # fewer surviving rows than shards: restart from empty
+                # shards and replay the rows as delta below
+                new_bounds = np.zeros(nsh + 1, dtype=np.int64)
+                new_shards = [
+                    LiveFilteredIndex.empty(
+                        f"{self._name}/shard{i}", self._dim,
+                        self._universe, registry=self._registry,
+                        device=self._devices[i],
+                        delta_chunk=self._delta_chunk)
+                    for i in range(nsh)]
+                new_base = None
+            for shard in new_shards:
+                if shard._base_fx is None:
+                    continue
+                for m_name, build in built:
+                    try:
+                        shard._base_fx.get_index(m_name, build)
+                    except KeyError:
+                        pass
+            with self._lock:
+                if self._closed:
+                    for s in new_shards:
+                        s.close()
+                    return self._epoch
+                old_shards = self.shards
+                old_locs_n = len(locs)
+                tail = self._delta_loc[old_locs_n:]
+                late_tomb: list[int] = []       # old gids deleted late
+                for s, snap in enumerate(snaps):
+                    cur = old_shards[s]._tomb
+                    newly = cur[: snap.n_total] & ~snap.tombstones
+                    lids = np.nonzero(newly)[0]
+                    for lid in lids:
+                        if lid < snap.base_n:
+                            late_tomb.append(int(self.bounds[s]) + int(lid))
+                        else:
+                            row = int(lid) - snap.base_n
+                            gid = self._shard_gids[s][row]
+                            late_tomb.append(int(gid))
+                # collect tail rows (upserted during the rebuild) in
+                # global insertion order, with their current tombstones
+                tail_rows = []
+                for j, (s, row) in enumerate(tail):
+                    shard = old_shards[s]
+                    vec = shard._delta._vec[row]
+                    bm = shard._delta._bm[row]
+                    dead = bool(shard._tomb[shard.base_n + row])
+                    tail_rows.append((vec, bm, dead))
+                old_epoch = self._epoch
+                self.shards = new_shards
+                self.bounds = new_bounds
+                self._base_ds = new_base
+                self._total_base = new_ds.n if new_base is not None else 0
+                self._delta_loc = []
+                self._shard_gids = [[] for _ in new_shards]
+                self._gid_arrays = None
+                self._next_shard = 0
+                self._epoch = old_epoch + 1
+                self._last_remap = remap
+                self._features = None
+                if self._feature_fx is not None:
+                    self._feature_fx.close()
+                    self._feature_fx = None
+                # replay: rows that didn't make the snapshot (and every
+                # row when the base fell below the shard count)
+                replay = []
+                if new_base is None and new_ds.n:
+                    replay.append((new_ds.vectors, new_ds.bitmaps, None))
+                if tail_rows:
+                    replay.append((
+                        np.stack([t[0] for t in tail_rows]),
+                        np.stack([t[1] for t in tail_rows]),
+                        np.array([t[2] for t in tail_rows], bool)))
+                for vecs, bms, dead in replay:
+                    gids = self.upsert(vecs, bms)
+                    if dead is not None and dead.any():
+                        self.delete(gids[dead])
+                if late_tomb:
+                    ng = remap[np.asarray(late_tomb, np.int64)]
+                    ng = ng[(ng >= 0) & (ng < self._total_base
+                                         + len(self._delta_loc))]
+                    if ng.size:
+                        self.delete(ng)
+                if self._epoch_readers.get(old_epoch):
+                    self._old_shards[old_epoch] = old_shards
+                else:
+                    for s in old_shards:
+                        s.close()
+                return self._epoch
+        finally:
+            if snaps is not None:
+                for snap in snaps:
+                    snap.release()
+            with self._lock:
+                self._compacting = None
+
+    # ---- maintenance -----------------------------------------------------
+    def last_remap(self) -> np.ndarray | None:
+        """Global-id translation of the most recent `compact()` (see
+        `LiveFilteredIndex.last_remap`)."""
+        return self._last_remap
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "dataset": self._name,
+                "generation": self._epoch,
+                "n_shards": self.n_shards,
+                "base_n": self._total_base,
+                "delta_rows": len(self._delta_loc),
+                "n_live": sum(s.n_live for s in self.shards),
+                "compacting": (self._compacting is not None
+                               and not self._compacting.done()),
+                "closed": self._closed,
+                "shards": [s.stats() for s in self.shards],
+            }

@@ -102,6 +102,60 @@ class RouterService:
         return [RoutingDecision(m, ps) for m, ps in dec]
 
     # ---- serving ---------------------------------------------------------
+    def execute(self, batch: QueryBatch,
+                decisions: list[RoutingDecision]) -> SearchResult:
+        """Run already-routed decisions: each (method, ps) group executes
+        as one batched search on the owned index. This is the second
+        stage of the pipeline — `search` is `route` + `execute`, and the
+        double-buffered `AsyncBatchQueue` worker calls the stages
+        separately so batch t+1 routes while batch t executes.
+
+        Live indexes report their per-call stage timings
+        (`base_s`/`delta_s`/`merge_s`) through `pop_stage_timings()`;
+        they are folded into the result's timings here. When the index
+        exposes `snapshot()` (the live handles), one batch-wide snapshot
+        pins every (method, ps) group to the same epoch — a compaction
+        swapping mid-batch cannot make one result mix two id spaces.
+        """
+        t1 = time.perf_counter()
+        ids = np.full((batch.q, batch.k), -1, dtype=np.int32)
+        raw = np.full((batch.q, batch.k), np.inf, dtype=np.float32)
+        pop = getattr(self.index, "pop_stage_timings", None)
+        if callable(pop):
+            pop()                        # clear this thread's stale slate
+        snap_fn = getattr(self.index, "snapshot", None)
+        snap = snap_fn() if callable(snap_fn) else None
+        groups: dict = {}
+        for qi, d in enumerate(decisions):
+            groups.setdefault(d, []).append(qi)
+        try:
+            for (m_name, ps_id), idxs in groups.items():
+                method = self.methods[m_name]
+                # B may not cover a brand-new deployment dataset yet: fall
+                # back to the method's max-budget setting until benchmarked.
+                setting = engine.resolve_setting(method, ps_id)
+                idxs = np.asarray(idxs)
+                sub = batch.take(idxs)
+                g_ids, g_raw = (
+                    self.index.run_method(method, setting, sub,
+                                          snapshot=snap)
+                    if snap is not None
+                    else self.index.run_method(method, setting, sub))
+                ids[idxs] = g_ids
+                raw[idxs] = g_raw
+        finally:
+            if snap is not None:
+                snap.release()
+        t2 = time.perf_counter()
+        timings = {"search_s": t2 - t1, "total_s": t2 - t1}
+        if callable(pop):
+            timings.update(pop())
+        return SearchResult(
+            ids=ids,
+            distances=exact_distances(raw, ids, batch.vectors),
+            decisions=list(decisions),
+            timings=timings)
+
     def search(self, batch: QueryBatch, *,
                t: float | None = None) -> SearchResult:
         """Route the batch, then run each (method, ps) group as one
@@ -112,7 +166,8 @@ class RouterService:
             t: optional per-call recall threshold override.
         Returns: a `SearchResult` — [Q, k] ids, exact squared-L2
             distances, per-query `RoutingDecision`s, and stage timings
-            (`route_s`, `search_s`, `total_s`).
+            (`route_s`, `search_s`, `total_s`; plus the live-index
+            stages when the index is a `LiveFilteredIndex`).
         Raises: ValueError on batch/dataset shape mismatch; RuntimeError
             if the underlying index is closed.
         """
@@ -120,29 +175,10 @@ class RouterService:
         r_hat = self.predict(batch)
         decisions = self._decide(r_hat, batch, t)
         t1 = time.perf_counter()
-
-        ids = np.full((batch.q, batch.k), -1, dtype=np.int32)
-        raw = np.full((batch.q, batch.k), np.inf, dtype=np.float32)
-        groups: dict = {}
-        for qi, d in enumerate(decisions):
-            groups.setdefault(d, []).append(qi)
-        for (m_name, ps_id), idxs in groups.items():
-            method = self.methods[m_name]
-            # B may not cover a brand-new deployment dataset yet: fall
-            # back to the method's max-budget setting until benchmarked.
-            setting = engine.resolve_setting(method, ps_id)
-            idxs = np.asarray(idxs)
-            g_ids, g_raw = self.index.run_method(method, setting,
-                                                 batch.take(idxs))
-            ids[idxs] = g_ids
-            raw[idxs] = g_raw
-        t2 = time.perf_counter()
-        return SearchResult(
-            ids=ids,
-            distances=exact_distances(raw, ids, batch.vectors),
-            decisions=decisions,
-            timings={"route_s": t1 - t0, "search_s": t2 - t1,
-                     "total_s": t2 - t0})
+        res = self.execute(batch, decisions)
+        res.timings["route_s"] = t1 - t0
+        res.timings["total_s"] = res.timings["search_s"] + (t1 - t0)
+        return res
 
     def search_chunked(self, batch: QueryBatch, *,
                        chunk: int = engine.DEFAULT_QCHUNK,
@@ -161,7 +197,9 @@ class RouterService:
             res = self.search(
                 QueryBatch(qv, qb, batch.pred, batch.k), t=t)
             for key, val in res.timings.items():
-                timings[key] += val
+                # live indexes add stage keys (base_s/delta_s/merge_s)
+                # beyond the pre-seeded three
+                timings[key] = timings.get(key, 0.0) + val
             dec = np.empty(len(res.decisions), dtype=object)
             dec[:] = res.decisions
             return res.ids, res.distances, dec
@@ -210,19 +248,21 @@ class ShardedRouterService(RouterService):
     `ops.merge_topk` kernel inside the handle's `run_method`.
 
     Args:
-        index: a `ShardedFilteredIndex` (TypeError otherwise — a plain
-            `FilteredIndex` belongs in `RouterService`).
+        index: a `ShardedFilteredIndex` or `ShardedLiveIndex` (TypeError
+            otherwise — a plain `FilteredIndex`/`LiveFilteredIndex`
+            belongs in `RouterService`).
         router / t / methods: as in `RouterService`.
     """
 
     def __init__(self, index, router, *, t: float = 0.9, methods=None):
+        from repro.ann.live import ShardedLiveIndex
         from repro.ann.sharded import ShardedFilteredIndex
 
-        if not isinstance(index, ShardedFilteredIndex):
+        if not isinstance(index, (ShardedFilteredIndex, ShardedLiveIndex)):
             raise TypeError(
-                f"ShardedRouterService needs a ShardedFilteredIndex; got "
-                f"{type(index).__name__} (use RouterService for "
-                f"single-index handles)")
+                f"ShardedRouterService needs a ShardedFilteredIndex or "
+                f"ShardedLiveIndex; got {type(index).__name__} (use "
+                f"RouterService for single-index handles)")
         super().__init__(index, router, t=t, methods=methods)
 
 
@@ -253,18 +293,61 @@ class _PendingQuery:
     future: Future
 
 
+class _DaemonExecutor:
+    """Single daemon worker running submitted calls in order — the
+    execution stage of the queue's two-stage pipeline. Unlike a
+    `ThreadPoolExecutor` (non-daemon threads since 3.9) its thread is a
+    daemon, so a hung backend search can neither block interpreter exit
+    nor make `AsyncBatchQueue.close(timeout=...)` wait forever."""
+
+    def __init__(self, name: str):
+        import queue
+
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def submit(self, fn, *args) -> Future:
+        fut: Future = Future()
+        self._q.put((fut, fn, args))
+        return fut
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fut, fn, args = item
+            try:
+                fut.set_result(fn(*args))
+            except BaseException as e:
+                fut.set_exception(e)
+
+    def shutdown(self, timeout: float | None = None) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=timeout)
+
+
 class AsyncBatchQueue:
     """Coalesces concurrent single-query `submit()` calls into
     micro-batches.
 
-    A background worker drains the queue into one batched
-    `service.search` call per (predicate, k) group whenever either knob
-    trips:
+    A background worker drains the queue into one batched call per
+    (predicate, k) group whenever either knob trips:
 
     * `max_batch` — this many requests are pending (flush immediately;
       latency-optimal under load);
     * `max_wait_ms` — the oldest pending request has waited this long
       (bounds tail latency when traffic is sparse).
+
+    The worker is a **two-stage pipeline** (double-buffered): when the
+    backend separates routing from execution (`RouterService.route` /
+    `.execute`), the worker thread routes batch *t+1* while a dedicated
+    single-thread executor is still executing batch *t* — the routing
+    forward and the search kernels overlap instead of serialising.
+    Backends without the split (a bare `FilteredIndex` with `method=`)
+    run both stages on the executor unchanged.
 
     Callers get a `concurrent.futures.Future` resolving to a
     `QueryResult`; a failed batch propagates its exception to exactly
@@ -301,13 +384,20 @@ class AsyncBatchQueue:
             self._search = service.search
         else:
             self._search = lambda b: service.search(b, method, setting)
+        # routed services expose route()/execute() separately — that is
+        # what lets the worker route batch t+1 while t executes
+        self._pipelined = (method is None
+                           and callable(getattr(service, "route", None))
+                           and callable(getattr(service, "execute", None)))
         self._cv = threading.Condition()
         self._pending: list[_PendingQuery] = []
         self._inflight: list[Future] = []
         self._flush_req = False
         self._closed = False
         self._stats = {"queries": 0, "batches": 0, "max_batch_seen": 0,
-                       "flush_reasons": {}}
+                       "max_queue_depth": 0, "flush_reasons": {}}
+        self._exec = _DaemonExecutor("async-batch-exec")
+        self._exec_fut: Future | None = None
         self._worker = threading.Thread(
             target=self._run, name="async-batch-queue", daemon=True)
         self._worker.start()
@@ -348,6 +438,8 @@ class AsyncBatchQueue:
             if self._closed:
                 raise RuntimeError("AsyncBatchQueue is closed")
             self._pending.append(req)
+            self._stats["max_queue_depth"] = max(
+                self._stats["max_queue_depth"], len(self._pending))
             self._cv.notify_all()
         return req.future
 
@@ -366,12 +458,19 @@ class AsyncBatchQueue:
         cf.wait(futs, timeout=timeout)
 
     def close(self, timeout: float | None = 30.0) -> None:
-        """Stop accepting work, drain what's pending, join the worker.
+        """Stop accepting work, drain what's pending (both pipeline
+        stages), join the worker and the execution stage. The timeout
+        bounds the whole call; both stage threads are daemons, so a
+        hung backend search is abandoned rather than waited on.
         Idempotent."""
+        t0 = time.monotonic()
         with self._cv:
             self._closed = True
             self._cv.notify_all()
         self._worker.join(timeout=timeout)
+        left = (None if timeout is None
+                else max(0.0, timeout - (time.monotonic() - t0)))
+        self._exec.shutdown(timeout=left)
 
     def __enter__(self) -> "AsyncBatchQueue":
         return self
@@ -380,15 +479,17 @@ class AsyncBatchQueue:
         self.close()
 
     def stats(self) -> dict:
-        """Counters: queries/batches served, largest batch, and a
-        flush-reason histogram (max_batch / max_wait / flush / close)."""
+        """Counters: queries/batches served, largest batch, the
+        queue-depth high-water mark (`max_queue_depth` — how far
+        submissions ran ahead of the pipeline), and a flush-reason
+        histogram (max_batch / max_wait / flush / close)."""
         with self._cv:
             s = dict(self._stats)
             s["flush_reasons"] = dict(self._stats["flush_reasons"])
             s["pending"] = len(self._pending)
             return s
 
-    # ---- worker ----------------------------------------------------------
+    # ---- worker: stage 1 (collect + route), stage 2 (execute) ------------
     def _run(self) -> None:
         while True:
             with self._cv:
@@ -415,40 +516,76 @@ class AsyncBatchQueue:
                         self._cv.wait()
                 take = self._pending[: self.max_batch]
                 del self._pending[: len(take)]
-                self._inflight = [p.future for p in take]
+                self._inflight.extend(p.future for p in take)
                 if not self._pending:
                     self._flush_req = False
-            try:
-                self._execute(take, reason)
-            finally:
-                with self._cv:
-                    self._inflight = []
+            # stage 1 in this thread: batch assembly + routing. This
+            # overlaps with the executor still running the previous
+            # batch — the double buffer.
+            staged = self._route_stage(take)
+            prev = self._exec_fut
+            if prev is not None:
+                try:               # depth-1 pipeline: wait out batch t-1
+                    prev.result()
+                except BaseException:
+                    pass           # its failures already reached callers
+            self._exec_fut = self._exec.submit(
+                self._exec_stage, staged, reason,
+                [p.future for p in take])
 
-    def _execute(self, take: list[_PendingQuery], reason: str) -> None:
-        with self._cv:
-            self._stats["queries"] += len(take)
-            self._stats["batches"] += 1
-            self._stats["max_batch_seen"] = max(
-                self._stats["max_batch_seen"], len(take))
-            rs = self._stats["flush_reasons"]
-            rs[reason] = rs.get(reason, 0) + 1
+    def _route_stage(self, take: list[_PendingQuery]) -> list:
+        """Group requests into per-(pred, k) batches and, when the
+        backend supports it, route them. Routing failures reject exactly
+        their group's futures here, before the execute stage."""
         groups: dict = {}
         for req in take:
             groups.setdefault((req.pred, req.k), []).append(req)
+        staged = []
         for (pred, k), reqs in groups.items():
             try:
                 batch = QueryBatch(np.stack([r.vector for r in reqs]),
                                    np.stack([r.bitmap for r in reqs]),
                                    pred, k)
-                res = self._search(batch)
-                for j, req in enumerate(reqs):
-                    dec = (res.decisions[j]
-                           if res.decisions is not None else None)
-                    if not req.future.done():    # caller may have cancelled
-                        req.future.set_result(QueryResult(
-                            ids=res.ids[j], distances=res.distances[j],
-                            decision=dec))
-            except BaseException as e:     # propagate to exactly this group
+                decisions = (self.service.route(batch)
+                             if self._pipelined else None)
+                staged.append((reqs, batch, decisions))
+            except BaseException as e:
                 for req in reqs:
                     if not req.future.done():
                         req.future.set_exception(e)
+        return staged
+
+    def _exec_stage(self, staged: list, reason: str,
+                    futs: list[Future]) -> None:
+        try:
+            with self._cv:
+                n = sum(len(reqs) for reqs, _, _ in staged)
+                self._stats["queries"] += n
+                self._stats["batches"] += 1
+                self._stats["max_batch_seen"] = max(
+                    self._stats["max_batch_seen"], len(futs))
+                rs = self._stats["flush_reasons"]
+                rs[reason] = rs.get(reason, 0) + 1
+            for reqs, batch, decisions in staged:
+                try:
+                    res = (self.service.execute(batch, decisions)
+                           if decisions is not None
+                           else self._search(batch))
+                    for j, req in enumerate(reqs):
+                        dec = (res.decisions[j]
+                               if res.decisions is not None else None)
+                        if not req.future.done():   # caller may have cancelled
+                            req.future.set_result(QueryResult(
+                                ids=res.ids[j], distances=res.distances[j],
+                                decision=dec))
+                except BaseException as e:   # propagate to exactly this group
+                    for req in reqs:
+                        if not req.future.done():
+                            req.future.set_exception(e)
+        finally:
+            with self._cv:
+                for f in futs:
+                    try:
+                        self._inflight.remove(f)
+                    except ValueError:
+                        pass

@@ -37,6 +37,43 @@ from repro.ann.index import (FilteredIndex, QueryBatch, SearchResult,
                              exact_distances)
 
 
+def stack_candidates(parts) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-segment (ids, raw) pairs into [S, Q, K] arrays.
+
+    Segments may disagree on their candidate width K (the live delta
+    path overfetches by its tombstone count); narrower segments are
+    padded with −1 ids / +inf scores, which `ops.merge_topk` treats as
+    invalid slots. Ids must already be global (disjoint across parts).
+    """
+    kmax = max(i.shape[1] for i, _ in parts)
+    ids, raws = [], []
+    for i, r in parts:
+        i = np.asarray(i, dtype=np.int32)
+        r = np.asarray(r, dtype=np.float32)
+        pad = kmax - i.shape[1]
+        if pad:
+            i = np.concatenate(
+                [i, np.full((i.shape[0], pad), -1, np.int32)], axis=1)
+            r = np.concatenate(
+                [r, np.full((r.shape[0], pad), np.inf, np.float32)], axis=1)
+        ids.append(i)
+        raws.append(r)
+    return np.stack(ids), np.stack(raws)
+
+
+def merge_candidates(ids: np.ndarray, raw: np.ndarray,
+                     k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Reduce [S, Q, K] globalised candidates to the global top-k through
+    the `ops.merge_topk` kernel. Returns ([Q, k] i32 ids with −1 pad,
+    [Q, k] f32 scores with +inf at −1)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    gids, graw = ops.merge_topk(jnp.asarray(ids), jnp.asarray(raw), k=k)
+    return np.asarray(gids), np.asarray(graw)
+
+
 class ShardedFilteredIndex:
     """Row-sharded serving handle: one `FilteredIndex` per shard plus the
     cross-shard merge. API-compatible with `FilteredIndex` wherever the
@@ -167,21 +204,15 @@ class ShardedFilteredIndex:
         the difference.
         Raises: RuntimeError if closed; ValueError on shape mismatch.
         """
-        import jax.numpy as jnp
-
-        from repro.kernels import ops
-
         self._check_open()
         per = self._map_shards(
             lambda fx: fx.run_method(method, setting, batch))
         offs = self.bounds[:-1]
-        ids = np.stack([np.where(np.asarray(i) >= 0,
-                                 np.asarray(i) + np.int32(off), -1)
-                        for (i, _), off in zip(per, offs)]).astype(np.int32)
-        raw = np.stack([np.asarray(r) for (_, r) in per]).astype(np.float32)
-        gids, graw = ops.merge_topk(jnp.asarray(ids), jnp.asarray(raw),
-                                    k=batch.k)
-        return np.asarray(gids), np.asarray(graw)
+        parts = [(np.where(np.asarray(i) >= 0,
+                           np.asarray(i) + np.int32(off), -1), r)
+                 for (i, r), off in zip(per, offs)]
+        ids, raw = stack_candidates(parts)
+        return merge_candidates(ids, raw, batch.k)
 
     def search(self, batch: QueryBatch, method,
                setting: ParamSetting | str | None = None) -> SearchResult:

@@ -226,8 +226,43 @@ def dataset_features(ds: ANNDataset, *, sample: int = 256, k: int = 20,
 # per-query features — batched fast path + scalar reference
 # ---------------------------------------------------------------------------
 
+_LIVE_UNKNOWN = object()   # "look it up" sentinel for the live= kwargs
+
+
+def _live_of(fx):
+    """The handle's `LiveStats`, when `fx` is a live index (duck-typed:
+    anything exposing `live_stats()` — `LiveFilteredIndex` /
+    `ShardedLiveIndex`). None for sealed handles."""
+    get = getattr(fx, "live_stats", None)
+    return get() if callable(get) else None
+
+
+def _match_counts(qbms: np.ndarray, bitmaps: np.ndarray,
+                  pred: Predicate) -> np.ndarray:
+    """[Q] exact predicate match counts of each query against a small
+    row set (word-looped, unweighted) — the live-correction workhorse."""
+    pred = Predicate(pred)
+    q, w = qbms.shape
+    n = bitmaps.shape[0]
+    if pred == Predicate.EQUALITY:
+        ok = np.ones((q, n), dtype=bool)
+        for i in range(w):
+            ok &= bitmaps[None, :, i] == qbms[:, i, None]
+    elif pred == Predicate.OR:
+        ok = np.zeros((q, n), dtype=bool)
+        for i in range(w):
+            ok |= (bitmaps[None, :, i] & qbms[:, i, None]) != 0
+    else:                                       # AND
+        ok = np.ones((q, n), dtype=bool)
+        for i in range(w):
+            qw = qbms[:, i, None]
+            ok &= (bitmaps[None, :, i] & qw) == qw
+    return ok.sum(1).astype(np.float64)
+
+
 def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
-                      pred: Predicate, *, fx=None) -> np.ndarray:
+                      pred: Predicate, *, fx=None,
+                      live=_LIVE_UNKNOWN) -> np.ndarray:
     """[Q] predicate selectivity fractions for a whole query batch.
 
     On TPU this is one Pallas `selectivity` kernel call over the
@@ -239,8 +274,41 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
     `fx`: the caller's owned `FilteredIndex` for `ds`, when it has one —
     otherwise the TPU path falls back to the shared default pool (which
     would pin a *second* copy of the device tensors if an owned handle
-    already exists).
+    already exists). When `fx` is a **live** handle, the base counts are
+    corrected exactly to the live set: matches on tombstoned base rows
+    are subtracted, matches on live delta rows added, and the fraction
+    is taken over the live row count — so routing never sees the stale
+    sealed-base selectivity as the delta grows. Callers that already
+    hold a `LiveStats` pass it via `live=` (one consistent snapshot per
+    feature pass); `live=None` forces the sealed path.
     """
+    if live is _LIVE_UNKNOWN:
+        live = _live_of(fx)
+    if live is None:
+        return _base_selectivity(ds, qbms, pred, fx=fx)
+    # count base matches against the *snapshot's* base (LiveStats.base_ds)
+    # rather than the caller's `ds`: a compaction racing this pass would
+    # otherwise pair generation-g tombstone corrections with a
+    # generation-g+1 base. (The TPU kernel path still reads the handle's
+    # current device tensors; the CPU group-table path is fully
+    # consistent, and a post-compact base has its tombstones folded in,
+    # so the one-batch skew on TPU is bounded by the delta size.)
+    base_ds = live.base_ds
+    if base_ds is None or base_ds.n == 0:
+        counts = np.zeros(qbms.shape[0], dtype=np.float64)
+    else:
+        counts = _base_selectivity(base_ds, qbms, pred, fx=fx) * base_ds.n
+    if live.base_tomb_bitmaps.shape[0]:
+        counts = counts - _match_counts(qbms, live.base_tomb_bitmaps, pred)
+    if live.delta_bitmaps.shape[0]:
+        counts = counts + _match_counts(qbms, live.delta_bitmaps, pred)
+    return np.maximum(counts, 0.0) / max(live.n_live, 1)
+
+
+def _base_selectivity(ds: ANNDataset, qbms: np.ndarray,
+                      pred: Predicate, *, fx=None) -> np.ndarray:
+    """Sealed-base selectivity fractions (over `ds.n`); see
+    `batch_selectivity` for the serving-facing wrapper."""
     import jax
 
     pred = Predicate(pred)
@@ -261,7 +329,7 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
     # evaluate unique bitmaps once and scatter the results back
     uq, inv = np.unique(qbms, axis=0, return_inverse=True)
     if uq.shape[0] < qbms.shape[0]:
-        return batch_selectivity(ds, uq, pred, fx=fx)[inv]
+        return _base_selectivity(ds, uq, pred, fx=fx)[inv]
 
     gb = ds.group_bitmaps                       # [G, W]
     q, w = qbms.shape
@@ -303,22 +371,28 @@ def batch_selectivity(ds: ANNDataset, qbms: np.ndarray,
 
 def query_feature_arrays(ds: ANNDataset, dsf: DatasetFeatures,
                          qbms: np.ndarray, pred: Predicate, *,
-                         fx=None) -> dict:
+                         fx=None, live=_LIVE_UNKNOWN) -> dict:
     """All 6 query-aware features for a whole batch: name -> [Q] float64.
 
     Numerically identical to Q calls of `query_features` (asserted by
-    tests/test_features.py) but fully vectorised.
+    tests/test_features.py) but fully vectorised. For a live handle the
+    per-label frequencies come from the live counts (`fx.live_stats()`)
+    instead of the sealed-base `dsf.label_freq`; the same `LiveStats`
+    snapshot feeds every column (pass `live=` to share one with the
+    caller).
     """
     bits = _unpack_bits(qbms, ds.universe)                 # [Q, U] bool
     nl = bits.sum(1)
-    lf = dsf.label_freq[None, :]
+    if live is _LIVE_UNKNOWN:
+        live = _live_of(fx)
+    lf = (dsf.label_freq if live is None else live.label_freq)[None, :]
     has = nl > 0
     minf = np.where(has, np.min(np.where(bits, lf, np.inf), axis=1), 0.0)
     maxf = np.where(has, np.max(np.where(bits, lf, -np.inf), axis=1), 0.0)
     meanf = np.where(has, (bits * lf).sum(1) / np.maximum(nl, 1), 0.0)
-    sel = batch_selectivity(ds, qbms, pred, fx=fx)
+    sel = batch_selectivity(ds, qbms, pred, fx=fx, live=live)
     cooc = sel if Predicate(pred) == Predicate.AND \
-        else batch_selectivity(ds, qbms, Predicate.AND, fx=fx)
+        else batch_selectivity(ds, qbms, Predicate.AND, fx=fx, live=live)
     return {
         "n_labels": nl.astype(np.float64),
         "selectivity": sel,
@@ -352,10 +426,13 @@ def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
     order; 'pred' expands to a 3-way one-hot. Query-aware columns come from
     the batched `query_feature_arrays` pass — no per-query Python loop.
     `fx`: optional owned `FilteredIndex` (see `batch_selectivity`; also
-    holds the dataset-feature cache)."""
+    holds the dataset-feature cache). A live handle additionally corrects
+    the selectivity/label-frequency columns and the `size` feature to the
+    live row set."""
     dsf = dataset_features(ds, fx=fx)
     nq = qbms.shape[0]
-    qf = query_feature_arrays(ds, dsf, qbms, pred, fx=fx) \
+    live = _live_of(fx)        # one consistent snapshot per feature pass
+    qf = query_feature_arrays(ds, dsf, qbms, pred, fx=fx, live=live) \
         if any(n in QUERY_FEATURES for n in feature_names) else {}
     cols = []
     for name in feature_names:
@@ -366,5 +443,8 @@ def feature_matrix(ds: ANNDataset, qbms: np.ndarray, pred: Predicate,
         elif name in QUERY_FEATURES:
             cols.append(np.asarray(qf[name], dtype=np.float64)[:, None])
         else:
-            cols.append(np.full((nq, 1), dsf.values[name]))
+            val = dsf.values[name]
+            if live is not None and name == "size":
+                val = float(live.n_live)
+            cols.append(np.full((nq, 1), val))
     return np.concatenate(cols, axis=1).astype(np.float32)

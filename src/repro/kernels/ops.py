@@ -103,14 +103,19 @@ def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
         dists: [S, Q, K] float32 per-shard scores; +inf (or any value ≥
             `masked_topk.PAD_SCORE`) marks invalid slots alongside id −1.
         k: output width; defaults to K (merge per-shard top-K into a
-            global top-K). Must satisfy k <= K.
+            global top-K). k > K is allowed — the candidate axis is
+            padded with invalid slots, so the surplus comes back as −1
+            ids with +inf dists (the delta-segment path hits this when a
+            segment holds fewer candidates than the requested k).
         bq: query tile size; interpret: force/suppress interpret mode
             (default: interpret off-TPU).
 
     The kernel carries the running [Q, k] result across the shard axis in
     VMEM scratch (same accumulation as `masked_topk`), so the merge makes
     one pass over the [S, Q, K] candidates with no [Q, S*K] reshuffle.
-    Invalid outputs come back as id −1 with dist +inf.
+    S=1 skips the Pallas launch entirely: a single segment only needs the
+    re-sort that pushes its invalid slots to the tail, which one XLA
+    `top_k` does. Invalid outputs come back as id −1 with dist +inf.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -119,6 +124,18 @@ def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
         k = kk
     d = jnp.where((ids < 0) | (dists >= mk.PAD_SCORE) | jnp.isnan(dists),
                   mk.PAD_SCORE, dists.astype(jnp.float32))
+    if k > kk:
+        d = jnp.concatenate(
+            [d, jnp.full((s, q, k - kk), mk.PAD_SCORE, d.dtype)], axis=2)
+        ids = jnp.concatenate(
+            [ids, jnp.full((s, q, k - kk), -1, ids.dtype)], axis=2)
+        kk = k
+    if s == 1:                      # single-segment pass-through
+        neg, sel = jax.lax.top_k(-d[0], k)
+        out_i = jnp.take_along_axis(ids[0], sel, axis=1)
+        bad = (out_i < 0) | (-neg >= mk.PAD_SCORE)
+        return (jnp.where(bad, -1, out_i),
+                jnp.where(bad, jnp.inf, -neg))
     bq_eff = min(bq, max(8, q))
     pad = (-q) % bq_eff
     if pad:

@@ -20,11 +20,18 @@ def predicate_mask_ref(bitmaps, qbms, pred: int):
 
 
 def masked_topk_ref(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int):
-    """Exact masked top-k: ids [Q, k] i32 (−1 pad), dists [Q, k] f32."""
+    """Exact masked top-k: ids [Q, k] i32 (−1 pad), dists [Q, k] f32.
+
+    k may exceed N (a delta segment smaller than the requested width):
+    the candidate axis is padded so the surplus comes back as −1/+inf."""
     scores = norms[None, :].astype(jnp.float32) - 2.0 * jnp.dot(
         qvecs, base.T, preferred_element_type=jnp.float32)
     mask = predicate_mask_ref(bitmaps, qbms, pred)
     s = jnp.where(mask, scores, jnp.inf)
+    if k > s.shape[1]:
+        s = jnp.concatenate(
+            [s, jnp.full((s.shape[0], k - s.shape[1]), jnp.inf, s.dtype)],
+            axis=1)
     neg, idx = jax.lax.top_k(-s, k)
     ids = jnp.where(jnp.isinf(neg), -1, idx).astype(jnp.int32)
     return ids, -neg
@@ -38,13 +45,19 @@ def selectivity_ref(qbms, bitmaps, *, pred: int):
 def merge_topk_ref(ids, dists, *, k: int | None = None):
     """Cross-shard merge oracle: flatten [S, Q, K] candidates to
     [Q, S*K] and re-extract the k smallest. Invalid slots (id −1 or
-    non-finite dist) come back as id −1 / dist +inf, trailing."""
+    non-finite dist) come back as id −1 / dist +inf, trailing. k may
+    exceed S*K — the candidate axis is padded with invalid slots."""
     s, q, kk = ids.shape
     if k is None:
         k = kk
     i_all = jnp.moveaxis(ids, 0, 1).reshape(q, s * kk)
     d_all = jnp.moveaxis(dists, 0, 1).reshape(q, s * kk)
     d_all = jnp.where((i_all < 0) | ~jnp.isfinite(d_all), jnp.inf, d_all)
+    if k > s * kk:
+        d_all = jnp.concatenate(
+            [d_all, jnp.full((q, k - s * kk), jnp.inf, d_all.dtype)], axis=1)
+        i_all = jnp.concatenate(
+            [i_all, jnp.full((q, k - s * kk), -1, i_all.dtype)], axis=1)
     neg, sel = jax.lax.top_k(-d_all, k)
     out_ids = jnp.take_along_axis(i_all, sel, axis=1)
     out_ids = jnp.where(jnp.isinf(neg), -1, out_ids).astype(jnp.int32)

@@ -223,3 +223,62 @@ def test_merge_topk_fewer_than_k_global(rng):
     nval = (np.asarray(ids) >= 0).sum(axis=(0, 2))
     got = (np.asarray(gi) >= 0).sum(1)
     np.testing.assert_array_equal(got, np.minimum(nval, 10))
+
+
+# ---------------------------------------------------------------------------
+# live-index (delta path) edge cases: S=1 pass-through, k wider than the
+# candidate axis, all-tombstoned segments
+# ---------------------------------------------------------------------------
+
+def test_merge_topk_single_segment_pass_through(rng):
+    """S=1 skips the Pallas fold; semantics must be unchanged even for
+    *unsorted* inputs with interleaved invalid slots."""
+    d = np.abs(rng.normal(size=(1, 11, 8))).astype(np.float32)
+    ids = rng.permutation(11 * 8).astype(np.int32).reshape(1, 11, 8)
+    d[0, :, 3] = np.inf                    # invalid mid-row slots
+    ids[0, :, 5] = -1
+    gi, gd = ops.merge_topk(jnp.asarray(ids), jnp.asarray(d))
+    ri, rd = ref.merge_topk_ref(jnp.asarray(ids), jnp.asarray(d))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd))
+
+
+@pytest.mark.parametrize("s", [1, 3])
+def test_merge_topk_k_exceeds_candidate_width(s, rng):
+    """k > K (the delta segment holds fewer surviving candidates than
+    requested): the surplus must come back as −1 ids / +inf dists."""
+    ids, d = _merge_case(rng, s, 9, 4)
+    gi, gd = ops.merge_topk(ids, d, k=10)
+    ri, rd = ref.merge_topk_ref(ids, d, k=10)
+    assert gi.shape == (9, 10)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rd))
+    nval = (np.asarray(ids) >= 0).sum(axis=(0, 2))
+    np.testing.assert_array_equal((np.asarray(gi) >= 0).sum(1),
+                                  np.minimum(nval, 10))
+
+
+def test_merge_topk_all_invalid_everywhere(rng):
+    """An all-tombstoned segment set: every slot invalid -> all −1/+inf
+    (the exact-distance layer then reports NaN at the −1 pad)."""
+    ids = np.full((2, 7, 6), -1, np.int32)
+    d = np.full((2, 7, 6), np.inf, np.float32)
+    gi, gd = ops.merge_topk(jnp.asarray(ids), jnp.asarray(d), k=5)
+    assert (np.asarray(gi) == -1).all()
+    assert np.isinf(np.asarray(gd)).all()
+    from repro.ann.index import exact_distances
+    dist = exact_distances(np.asarray(gd), np.asarray(gi),
+                           np.zeros((7, 4), np.float32))
+    assert np.isnan(dist).all()
+
+
+def test_masked_topk_k_exceeds_rows(rng):
+    """k larger than the whole (padded) segment: parity with the padded
+    reference oracle, trailing −1s."""
+    case = _rand_case(rng, 4, 40, 8, 1)
+    ids, d = ops.masked_topk(*case, pred=1, k=64, bq=8, bn=256)
+    rids, rd = ref.masked_topk_ref(*case, pred=1, k=64)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    valid = np.asarray(ids) >= 0
+    np.testing.assert_allclose(np.asarray(d)[valid],
+                               np.asarray(rd)[valid], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,578 @@
+"""The live index subsystem: streaming upserts/deletes, tombstone-aware
+search, snapshot epochs, background compaction, sharded live indexes,
+routing-feature freshness, and the double-buffered async queue."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.live import DeltaSegment, LiveFilteredIndex, ShardedLiveIndex
+from repro.ann.predicates import Predicate, eval_predicate_np
+from repro.ann.service import AsyncBatchQueue, RouterService, \
+    ShardedRouterService
+from repro.core import features as F
+
+ALL_PREDS = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+
+
+def _assert_same_result(res, want):
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_allclose(res.distances, want.distances,
+                               rtol=1e-5, atol=1e-5, equal_nan=True)
+
+
+def _live_oracle(vectors, bitmaps, tomb, qv, qb, pred, k):
+    """Exact masked top-k ids over an explicit (rows, tombstones) state."""
+    norms = np.sum(vectors.astype(np.float64) ** 2, axis=1)
+    out = np.full((qv.shape[0], k), -1, np.int32)
+    for qi in range(qv.shape[0]):
+        ok = eval_predicate_np(bitmaps, qb[qi][None], pred) & ~tomb
+        idx = np.nonzero(ok)[0]
+        if not idx.size:
+            continue
+        d = norms[idx] - 2.0 * vectors[idx] @ qv[qi].astype(np.float64)
+        o = np.argsort(d, kind="stable")[:k]
+        out[qi, : o.size] = idx[o]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sealed/live equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_live_equals_sealed_before_writes(tiny_ds, tiny_index, tiny_queries,
+                                          pred):
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    want = tiny_index.search(batch, "prefilter")
+    with LiveFilteredIndex(tiny_ds) as live:
+        res = live.search(batch, "prefilter")
+    _assert_same_result(res, want)
+    assert {"base_s", "delta_s", "merge_s"} <= res.timings.keys()
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_upsert_all_matches_sealed_pre_compact(tiny_ds, tiny_index,
+                                               tiny_queries, pred):
+    """Everything in the delta (no base at all): the brute-force delta
+    path must already be exact."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    want = tiny_index.search(batch, "prefilter")
+    with LiveFilteredIndex.empty("tiny", tiny_ds.dim,
+                                 tiny_ds.universe) as live:
+        for s in range(0, tiny_ds.n, 150):
+            live.upsert(tiny_ds.vectors[s: s + 150],
+                        tiny_ds.bitmaps[s: s + 150])
+        _assert_same_result(live.search(batch, "prefilter"), want)
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+@pytest.mark.parametrize("q_take,k", [(25, 10), (1, 10), (7, 40)])
+def test_upsert_all_then_compact_matches_fresh(tiny_ds, tiny_index,
+                                               tiny_queries, pred,
+                                               q_take, k):
+    """The acceptance bar: empty live + upsert-everything + compact is
+    bit-identical (ids AND distances) to a FilteredIndex built directly,
+    across predicates, ragged Q, and k > matches."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors[:q_take], qs.bitmaps[:q_take], pred, k)
+    want = tiny_index.search(batch, "prefilter")
+    with LiveFilteredIndex.empty("tiny", tiny_ds.dim,
+                                 tiny_ds.universe) as live:
+        live.upsert(tiny_ds.vectors, tiny_ds.bitmaps)
+        gen = live.compact()
+        assert gen == 1 and live.stats()["delta_rows"] == 0
+        # the rebuilt base is bit-identical to the original dataset
+        np.testing.assert_array_equal(live.ds.vectors, tiny_ds.vectors)
+        np.testing.assert_array_equal(live.ds.bitmaps, tiny_ds.bitmaps)
+        _assert_same_result(live.search(batch, "prefilter"), want)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_sharded_upsert_all_then_compact_matches_fresh(tiny_ds, tiny_index,
+                                                       tiny_queries,
+                                                       n_shards, pred):
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    want = tiny_index.search(batch, "prefilter")
+    with ShardedLiveIndex(None, n_shards, name="tiny", dim=tiny_ds.dim,
+                          universe=tiny_ds.universe) as live:
+        live.upsert(tiny_ds.vectors, tiny_ds.bitmaps)
+        _assert_same_result(live.search(batch, "prefilter"), want)
+        live.compact()
+        assert live.generation == 1
+        _assert_same_result(live.search(batch, "prefilter"), want)
+
+
+def test_mixed_base_plus_delta_is_exact(tiny_ds, tiny_queries, rng):
+    """Sealed base + live delta + tombstones in both segments must match
+    the brute-force oracle over the merged live state, and never surface
+    a deleted id."""
+    extra_v = tiny_ds.vectors[:80] + np.float32(0.01)
+    extra_b = tiny_ds.bitmaps[:80]
+    with LiveFilteredIndex(tiny_ds) as live:
+        new_ids = live.upsert(extra_v, extra_b)
+        dele = np.concatenate([np.arange(10, 40), new_ids[5:20]])
+        assert live.delete(dele) == 45
+        assert live.delete(dele[:3]) == 0            # idempotent
+        all_v = np.concatenate([tiny_ds.vectors, extra_v])
+        all_b = np.concatenate([tiny_ds.bitmaps, extra_b])
+        tomb = np.zeros(all_v.shape[0], bool)
+        tomb[dele] = True
+        for pred in ALL_PREDS:
+            qs = tiny_queries[pred]
+            res = live.search(
+                QueryBatch(qs.vectors, qs.bitmaps, pred, 10), "prefilter")
+            want = _live_oracle(all_v, all_b, tomb, qs.vectors,
+                                qs.bitmaps, pred, 10)
+            np.testing.assert_array_equal(res.ids, want)
+            assert not np.isin(res.ids[res.ids >= 0], dele).any()
+
+
+def test_all_tombstoned_yields_padded_results(tiny_ds, tiny_queries):
+    """Deleting every row (base and delta) must produce −1 ids with NaN
+    distances everywhere — the all-tombstoned edge case."""
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        live.upsert(tiny_ds.vectors[:30], tiny_ds.bitmaps[:30])
+        live.delete(np.arange(live.n_total))
+        assert live.n_live == 0
+        res = live.search(batch, "prefilter")
+        assert (res.ids == -1).all()
+        assert np.isnan(res.distances).all()
+
+
+def test_empty_live_index_searches(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 5)
+    with LiveFilteredIndex.empty("void", tiny_ds.dim,
+                                 tiny_ds.universe) as live:
+        res = live.search(batch, "prefilter")
+        assert (res.ids == -1).all() and np.isnan(res.distances).all()
+
+
+def test_compact_preserves_results_and_remaps_ids(tiny_ds, tiny_queries):
+    """Pre/post-compact results agree on distances and on the vectors
+    behind the ids (the ids themselves are remapped)."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        ids = live.upsert(tiny_ds.vectors[:60] + np.float32(0.02),
+                          tiny_ds.bitmaps[:60])
+        live.delete(np.concatenate([np.arange(0, 20), ids[:10]]))
+        before = live.search(batch, "prefilter")
+        vec_before = live.fetch(before.ids.ravel())
+        gen = live.compact()
+        assert gen == 1
+        after = live.search(batch, "prefilter")
+        np.testing.assert_allclose(after.distances, before.distances,
+                                   rtol=1e-5, atol=1e-5, equal_nan=True)
+        vec_after = live.fetch(after.ids.ravel())
+        np.testing.assert_allclose(vec_after, vec_before,
+                                   rtol=0, atol=0, equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# snapshots / epochs
+# ---------------------------------------------------------------------------
+
+def test_snapshot_isolates_from_writes(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        want = live.search(batch, "prefilter")
+        with live.snapshot() as snap:
+            live.upsert(tiny_ds.vectors[:40] + np.float32(0.5),
+                        tiny_ds.bitmaps[:40])
+            live.delete(np.arange(0, 50))
+            # the pinned epoch still sees the pre-write state
+            _assert_same_result(
+                live.search(batch, "prefilter", snapshot=snap), want)
+            # a fresh search sees the writes
+            fresh = live.search(batch, "prefilter")
+            assert not np.array_equal(fresh.ids, want.ids)
+
+
+def test_snapshot_survives_compaction(tiny_ds, tiny_queries):
+    """An old-epoch reader drains cleanly: its base stays open across a
+    compact() and is freed on release."""
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        live.upsert(tiny_ds.vectors[:20] + np.float32(0.1),
+                    tiny_ds.bitmaps[:20])
+        snap = live.snapshot()
+        want = live.search(batch, "prefilter", snapshot=snap)
+        live.compact()
+        assert live.generation == 1
+        assert live.stats()["retired_generations"] == [0]
+        # the old epoch still reads its own (pre-compact) id space
+        _assert_same_result(
+            live.search(batch, "prefilter", snapshot=snap), want)
+        snap.release()
+        assert live.stats()["retired_generations"] == []
+        with pytest.raises(RuntimeError, match="released"):
+            live.search(batch, "prefilter", snapshot=snap)
+
+
+def test_snapshot_of_empty_base_generation_survives_compact(tiny_ds):
+    """A pinned generation-0 snapshot must stay resolvable across a
+    compact even when generation 0 had no base at all."""
+    with LiveFilteredIndex.empty("tiny", tiny_ds.dim,
+                                 tiny_ds.universe) as live:
+        ids = live.upsert(tiny_ds.vectors[:50], tiny_ds.bitmaps[:50])
+        with live.snapshot() as snap:
+            live.compact()
+            assert live.generation == 1
+            vecs = live.fetch(ids, snapshot=snap)   # old-epoch delta ids
+            np.testing.assert_array_equal(vecs, tiny_ds.vectors[:50])
+
+
+def test_last_remap_translates_ids(tiny_ds):
+    with LiveFilteredIndex(tiny_ds) as live:
+        ids = live.upsert(tiny_ds.vectors[:20] + np.float32(0.01),
+                          tiny_ds.bitmaps[:20])
+        live.delete([0, 1, int(ids[0])])
+        assert live.last_remap() is None
+        live.compact()
+        remap = live.last_remap()
+        assert remap is not None and remap.shape == (tiny_ds.n + 20,)
+        assert remap[0] == remap[1] == remap[int(ids[0])] == -1
+        survivors = remap[remap >= 0]
+        assert survivors.size == tiny_ds.n + 20 - 3
+        # a surviving row's new id resolves to the same vector
+        np.testing.assert_array_equal(live.ds.vectors[remap[5]],
+                                      tiny_ds.vectors[5])
+
+
+def test_search_racing_delete_and_compact_never_surfaces(tiny_ds,
+                                                         tiny_queries):
+    """The acceptance race: a writer deletes rows and compacts while a
+    reader searches; a result observed under a snapshot must never
+    contain a row whose delete completed before the snapshot."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    live = LiveFilteredIndex(tiny_ds)
+    try:
+        new_ids = live.upsert(tiny_ds.vectors + np.float32(0.01),
+                              tiny_ds.bitmaps)
+        deleted_vecs: list[np.ndarray] = []
+        stop = threading.Event()
+
+        def writer():
+            rng = np.random.default_rng(11)
+            order = rng.permutation(tiny_ds.n)
+            i = 0
+            while not stop.is_set() and i < 220:
+                gid = int(new_ids[order[i]])
+                vec = (tiny_ds.vectors[order[i]] + np.float32(0.01)).copy()
+                g0 = live.generation
+                try:
+                    live.delete([gid])
+                except IndexError:
+                    break     # ids are per-generation: stale after a swap
+                if live.generation == g0:   # certainly applied this epoch
+                    deleted_vecs.append(vec)   # happens-after the delete
+                i += 1
+                if i == 120:
+                    live.compact_async()       # race a compaction too
+            stop.set()
+
+        th = threading.Thread(target=writer)
+        th.start()
+        checked = 0
+        while not stop.is_set() or checked == 0:
+            known = list(deleted_vecs)          # before the snapshot
+            with live.snapshot() as snap:
+                res = live.search(batch, "prefilter", snapshot=snap)
+                got = live.fetch(res.ids[res.ids >= 0].ravel(),
+                                 snapshot=snap)
+            if known:
+                dead = np.stack(known)
+                for v in got:
+                    assert not (np.abs(dead - v).max(1) < 1e-12).any(), \
+                        "a deleted row surfaced in a post-delete snapshot"
+                checked += 1
+        th.join(timeout=60)
+        assert checked >= 1
+    finally:
+        live.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded live: round-robin, global ids, delete routing
+# ---------------------------------------------------------------------------
+
+def test_sharded_live_matches_single_live(tiny_ds, tiny_queries):
+    extra_v = tiny_ds.vectors[:90] + np.float32(0.03)
+    extra_b = tiny_ds.bitmaps[:90]
+    with LiveFilteredIndex(tiny_ds) as single, \
+            ShardedLiveIndex(tiny_ds, 3) as sharded:
+        ids_s = single.upsert(extra_v, extra_b)
+        ids_h = sharded.upsert(extra_v, extra_b)
+        np.testing.assert_array_equal(ids_s, ids_h)   # same global id space
+        dele = np.concatenate([np.arange(25, 55), ids_s[10:30]])
+        assert single.delete(dele) == sharded.delete(dele) == 50
+        for pred in ALL_PREDS:
+            qs = tiny_queries[pred]
+            batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+            _assert_same_result(sharded.search(batch, "prefilter"),
+                                single.search(batch, "prefilter"))
+
+
+def test_sharded_live_compact_with_deletes(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with ShardedLiveIndex(tiny_ds, 2) as live:
+        ids = live.upsert(tiny_ds.vectors[:50] + np.float32(0.02),
+                          tiny_ds.bitmaps[:50])
+        live.delete(np.concatenate([np.arange(5, 30), ids[:10]]))
+        before = live.search(batch, "prefilter")
+        live.compact()
+        assert live.generation == 1
+        st = live.stats()
+        assert st["base_n"] == tiny_ds.n + 50 - 35
+        assert st["delta_rows"] == 0
+        after = live.search(batch, "prefilter")
+        np.testing.assert_allclose(after.distances, before.distances,
+                                   rtol=1e-5, atol=1e-5, equal_nan=True)
+
+
+def test_sharded_live_writes_during_compaction_carry_over(tiny_ds,
+                                                          tiny_queries):
+    """Rows upserted while a compaction is rebuilding must survive the
+    swap (as the new delta)."""
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        fut = live.compact_async()
+        live.upsert(tiny_ds.vectors[:15] + np.float32(0.25),
+                    tiny_ds.bitmaps[:15])
+        fut.result(timeout=120)
+        st = live.stats()
+        assert st["generation"] == 1
+        assert st["n_live"] == tiny_ds.n + 15
+        all_v = np.concatenate([tiny_ds.vectors,
+                                tiny_ds.vectors[:15] + np.float32(0.25)])
+        all_b = np.concatenate([tiny_ds.bitmaps, tiny_ds.bitmaps[:15]])
+        res = live.search(batch, "prefilter")
+        want = _live_oracle(all_v, all_b, np.zeros(all_v.shape[0], bool),
+                            qs.vectors, qs.bitmaps, Predicate.OR, 10)
+        got_vecs = live.fetch(res.ids.ravel())
+        want_vecs = np.where((want >= 0).ravel()[:, None],
+                             all_v[np.clip(want.ravel(), 0, None)], np.nan)
+        np.testing.assert_allclose(got_vecs, want_vecs, equal_nan=True,
+                                   rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# routing-feature freshness
+# ---------------------------------------------------------------------------
+
+def test_live_selectivity_matches_oracle(tiny_ds, tiny_queries):
+    extra_v = tiny_ds.vectors[:70] + np.float32(0.04)
+    extra_b = tiny_ds.bitmaps[200:270]
+    with LiveFilteredIndex(tiny_ds) as live:
+        ids = live.upsert(extra_v, extra_b)
+        live.delete(np.concatenate([np.arange(40, 90), ids[:15]]))
+        all_b = np.concatenate([tiny_ds.bitmaps, extra_b])
+        tomb = np.zeros(all_b.shape[0], bool)
+        tomb[40:90] = True
+        tomb[ids[:15]] = True
+        n_live = int((~tomb).sum())
+        for pred in ALL_PREDS:
+            qb = tiny_queries[pred].bitmaps
+            got = F.batch_selectivity(tiny_ds, qb, pred, fx=live)
+            want = np.array([
+                float((eval_predicate_np(all_b, qb[i][None], pred)
+                       & ~tomb).sum()) / n_live
+                for i in range(qb.shape[0])])
+            np.testing.assert_allclose(got, want, atol=1e-12)
+        stats = live.live_stats()
+        assert stats.n_live == n_live
+        # label carrier fractions over the live rows, exactly
+        shifts = np.arange(32, dtype=np.uint32)
+        bits = ((all_b[~tomb][:, :, None] >> shifts) & np.uint32(1))
+        bits = bits.reshape(n_live, -1)[:, : tiny_ds.universe]
+        np.testing.assert_allclose(stats.label_freq,
+                                   bits.sum(0) / n_live, atol=1e-12)
+
+
+def test_feature_matrix_uses_live_size(tiny_ds, tiny_queries):
+    qb = tiny_queries[Predicate.AND].bitmaps
+    with LiveFilteredIndex(tiny_ds) as live:
+        live.upsert(tiny_ds.vectors[:25], tiny_ds.bitmaps[:25])
+        live.delete([0, 1, 2])
+        x = F.feature_matrix(tiny_ds, qb, Predicate.AND,
+                             ["size", "selectivity"], fx=live)
+        assert (x[:, 0] == tiny_ds.n + 25 - 3).all()
+
+
+def test_router_service_serves_live_index(tiny_ds, tiny_index,
+                                          tiny_queries, toy_router):
+    """RouterService over a live handle: same decisions as over the
+    sealed handle while untouched; stage timings appear after writes."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    want = RouterService(tiny_index, toy_router, t=0.9).search(batch)
+    with LiveFilteredIndex(tiny_ds) as live:
+        svc = RouterService(live, toy_router, t=0.9)
+        res = svc.search(batch)
+        assert res.decisions == want.decisions
+        assert {"route_s", "search_s", "base_s", "delta_s",
+                "merge_s"} <= res.timings.keys()
+        live.upsert(tiny_ds.vectors[:30] + np.float32(0.01),
+                    tiny_ds.bitmaps[:30])
+        res2 = svc.search(batch)
+        assert res2.ids.shape == (qs.q, 10)
+        assert res2.timings["delta_s"] > 0
+
+
+def test_router_service_search_chunked_over_live(tiny_ds, tiny_queries,
+                                                 toy_router):
+    """search_chunked must fold the live stage-timing keys it has not
+    pre-seeded (regression: KeyError 'base_s')."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        live.upsert(tiny_ds.vectors[:20] + np.float32(0.01),
+                    tiny_ds.bitmaps[:20])
+        svc = RouterService(live, toy_router, t=0.9)
+        want = svc.search(batch)
+        res = svc.search_chunked(batch, chunk=8)
+        np.testing.assert_array_equal(res.ids, want.ids)
+        assert res.decisions == want.decisions
+        assert res.timings["delta_s"] > 0
+
+
+def test_sharded_router_service_accepts_live(tiny_ds, tiny_queries,
+                                             toy_router):
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    with ShardedLiveIndex(tiny_ds, 2) as live:
+        svc = ShardedRouterService(live, toy_router, t=0.9)
+        res = svc.search(batch)
+        assert res.ids.shape == (qs.q, 10)
+        assert len(res.decisions) == qs.q
+
+
+# ---------------------------------------------------------------------------
+# delta segment mechanics + validation
+# ---------------------------------------------------------------------------
+
+def test_delta_segment_growth_and_mirror(tiny_ds):
+    import contextlib
+
+    seg = DeltaSegment(tiny_ds.dim, tiny_ds.bitmaps.shape[1], chunk=16)
+    for s in range(0, 40, 8):
+        seg.append(tiny_ds.vectors[s: s + 8], tiny_ds.bitmaps[s: s + 8])
+    assert seg.rows == 40
+    vec, norms, bm = seg.device_view(40, contextlib.nullcontext)
+    # 32 mirrored rows (two sealed chunks) + one padded tail chunk
+    assert vec.shape[0] == 48 and seg.device_rows() == 32
+    np.testing.assert_allclose(np.asarray(vec)[:40], tiny_ds.vectors[:40])
+    from repro.kernels import masked_topk as mk
+    assert (np.asarray(norms)[40:] >= mk.PAD_SCORE).all()
+    hv, hb, hn = seg.host_view(40)
+    np.testing.assert_array_equal(hb, tiny_ds.bitmaps[:40])
+    # the mirror never re-uploads sealed chunks
+    seg.append(tiny_ds.vectors[40:41], tiny_ds.bitmaps[40:41])
+    vec2, _, _ = seg.device_view(41, contextlib.nullcontext)
+    assert seg.device_rows() == 32 and vec2.shape[0] == 48
+
+
+def test_live_validation_and_lifecycle(tiny_ds):
+    live = LiveFilteredIndex(tiny_ds)
+    with pytest.raises(ValueError, match="vectors"):
+        live.upsert(tiny_ds.vectors[:2, :-3], tiny_ds.bitmaps[:2])
+    with pytest.raises(ValueError, match="bitmaps"):
+        live.upsert(tiny_ds.vectors[:2],
+                    np.concatenate([tiny_ds.bitmaps[:2]] * 2, axis=1))
+    with pytest.raises(IndexError, match="delete ids"):
+        live.delete([tiny_ds.n + 5])
+    live.close()
+    live.close()                                  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        live.upsert(tiny_ds.vectors[:1], tiny_ds.bitmaps[:1])
+    with pytest.raises(RuntimeError, match="closed"):
+        live.snapshot()
+    with pytest.raises(ValueError, match="needs name"):
+        LiveFilteredIndex()
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedLiveIndex(tiny_ds, 0)
+
+
+# ---------------------------------------------------------------------------
+# async queue: double-buffered pipeline
+# ---------------------------------------------------------------------------
+
+def test_queue_pipeline_matches_unpipelined(tiny_ds, tiny_index,
+                                            tiny_queries, toy_router):
+    """The two-stage worker must produce exactly the same results and
+    decisions as a direct routed search."""
+    svc = RouterService(tiny_index, toy_router, t=0.9)
+    qs = tiny_queries[Predicate.AND]
+    want = svc.search(QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10))
+    with AsyncBatchQueue(svc, max_batch=8, max_wait_ms=10) as q:
+        assert q._pipelined
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.AND)
+                for i in range(qs.q)]
+        results = [f.result(timeout=120) for f in futs]
+        stats = q.stats()
+    assert [r.decision for r in results] == want.decisions
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.ids, want.ids[i])
+    assert stats["batches"] >= 2                 # pipelined across batches
+    assert stats["max_queue_depth"] >= 1
+
+
+def test_queue_depth_high_water_mark(tiny_ds, tiny_index, tiny_queries):
+    qs = tiny_queries[Predicate.OR]
+    with AsyncBatchQueue(tiny_index, max_batch=64, max_wait_ms=60_000,
+                         method="prefilter") as q:
+        futs = [q.submit(qs.vectors[i], qs.bitmaps[i], Predicate.OR)
+                for i in range(6)]
+        q.flush(timeout=120)
+        stats = q.stats()
+        [f.result(timeout=60) for f in futs]
+    assert stats["max_queue_depth"] >= 1
+    assert stats["max_queue_depth"] <= 6
+
+
+def test_queue_serves_live_index_under_writes(tiny_ds, tiny_queries):
+    """Concurrent callers + a live writer thread: every result is
+    well-formed and never contains a pre-deleted id."""
+    qs = tiny_queries[Predicate.AND]
+    with LiveFilteredIndex(tiny_ds) as live:
+        ids = live.upsert(tiny_ds.vectors[:60] + np.float32(0.01),
+                          tiny_ds.bitmaps[:60])
+        live.delete(ids[:20])                     # dead before any search
+        with AsyncBatchQueue(live, max_batch=8, max_wait_ms=5,
+                             method="prefilter") as q:
+            stop = threading.Event()
+
+            def writer():
+                i = 0
+                while not stop.is_set() and i < 40:
+                    live.upsert(tiny_ds.vectors[i: i + 1] + np.float32(0.2),
+                                tiny_ds.bitmaps[i: i + 1])
+                    i += 1
+                    time.sleep(0.001)
+
+            th = threading.Thread(target=writer)
+            th.start()
+            futs = [q.submit(qs.vectors[i % qs.q], qs.bitmaps[i % qs.q],
+                             Predicate.AND) for i in range(24)]
+            results = [f.result(timeout=120) for f in futs]
+            stop.set()
+            th.join(timeout=60)
+        for r in results:
+            assert r.ids.shape == (10,)
+            assert not np.isin(r.ids[r.ids >= 0], ids[:20]).any()
