@@ -1,0 +1,103 @@
+"""Storage-subsystem benchmark: snapshot write bandwidth, cold-open
+latency, and WAL replay throughput.
+
+Three gated numbers per (n, rows) row — all wall-clock, lower is
+better, so the ``--check`` regression gate compares them uniformly:
+
+* ``snapshot_write_ms`` — `IndexStore.checkpoint()` cost: segment file
+  write (vectors + bitmaps + group tables + keys) plus the manifest
+  commit. The derived ``write_mb_s`` column reports the implied
+  bandwidth over the segment bytes;
+* ``cold_open_ms`` — `IndexStore.open()` on a cleanly checkpointed
+  store: manifest read, memmap construction, handle build (no WAL
+  records to replay — the zero-copy floor of a restart);
+* ``wal_replay_ms`` — `IndexStore.open()` when the same ``rows``
+  upserts (plus deletes) live only in the WAL; the derived
+  ``replay_rows_s`` column is the recovery ingest rate.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.ann.live import LiveFilteredIndex
+from repro.ann.store import IndexStore
+from repro.data.ann_synth import DatasetSpec, synthesize
+
+from benchmarks.common import emit, timeit_best_us
+
+_SPEC = DatasetSpec("bench_store", 8192, 32, 60, 8, 16,
+                    1.3, 2.0, 0.5, 0.3, 17)
+_SMOKE_SPEC = DatasetSpec("bench_store_smoke", 2048, 32, 60, 8, 16,
+                          1.3, 2.0, 0.5, 0.3, 17)
+
+
+def _segment_bytes(path: str, manifest: dict) -> int:
+    seg = os.path.join(path, manifest["segment"])
+    return sum(os.path.getsize(os.path.join(seg, f))
+               for f in os.listdir(seg)
+               if os.path.isfile(os.path.join(seg, f)))
+
+
+def run(verbose=True, smoke: bool = False, write_rows: int | None = None):
+    spec = _SMOKE_SPEC if smoke else _SPEC
+    write_rows = write_rows or (512 if smoke else 2048)
+    ds = synthesize(spec)
+    rng = np.random.default_rng(23)
+    src = rng.integers(0, ds.n, write_rows)
+    new_vec = (ds.vectors[src]
+               + rng.normal(scale=0.01, size=(write_rows, ds.dim))
+               .astype(np.float32))
+    new_bm = ds.bitmaps[src]
+
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        # --- snapshot write: checkpoint() of the full base ---------------
+        path = os.path.join(root, "snap")
+        store = IndexStore.create(path, LiveFilteredIndex(ds))
+        seg_bytes = _segment_bytes(path, store.manifest)
+        snap_us = timeit_best_us(store.checkpoint, repeat=3)
+        write_mb_s = (seg_bytes / (1 << 20)) / (snap_us / 1e6)
+
+        # --- cold open: clean store, nothing to replay -------------------
+        store.close()
+        open_us = timeit_best_us(
+            lambda: IndexStore.open(path).close(), repeat=3)
+
+        # --- WAL replay: the same rows live only in the log --------------
+        wal_path = os.path.join(root, "wal")
+        wstore = IndexStore.create(wal_path, LiveFilteredIndex(ds))
+        for s in range(0, write_rows, 64):
+            ids = wstore.index.upsert(new_vec[s: s + 64],
+                                      new_bm[s: s + 64])
+            if s % 256 == 0:
+                wstore.index.delete(ids[:4])
+        wstore.close()
+        replay_us = timeit_best_us(
+            lambda: IndexStore.open(wal_path).close(), repeat=3)
+        replay_rows_s = write_rows / max(replay_us - open_us, 1.0) * 1e6
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    rows = [{
+        "n": ds.n, "rows": write_rows,
+        "segment_mb": round(seg_bytes / (1 << 20), 2),
+        "snapshot_write_ms": round(snap_us / 1e3, 2),
+        "write_mb_s": round(write_mb_s, 1),
+        "cold_open_ms": round(open_us / 1e3, 2),
+        "wal_replay_ms": round(replay_us / 1e3, 2),
+        "replay_rows_s": round(replay_rows_s, 0),
+    }]
+    if verbose:
+        r = rows[-1]
+        print(f"  n={r['n']} rows={r['rows']}: snapshot "
+              f"{r['snapshot_write_ms']:.1f} ms ({r['write_mb_s']:.0f} "
+              f"MB/s), cold open {r['cold_open_ms']:.1f} ms, WAL replay "
+              f"{r['wal_replay_ms']:.1f} ms ({r['replay_rows_s']:.0f} "
+              f"rows/s)", flush=True)
+    path = emit(rows, "store")
+    return rows, path

@@ -75,7 +75,8 @@ def _keep_best(old: dict, new: dict) -> dict:
             ("kernels", ("n", "q"), None),
             ("routing_latency", ("dataset", "pred", "q"), "batched_us"),
             ("sharded_service", ("shards", "n", "q"), "batch_us"),
-            ("live_index", ("n", "q"), "search_live_us")]:
+            ("live_index", ("n", "q"), "search_live_us"),
+            ("store", ("n", "rows"), "cold_open_ms")]:
         old_rows = {tuple(r[c] for c in key_cols): r
                     for r in old.get(section, [])}
         out = []
@@ -103,7 +104,8 @@ def _keep_best(old: dict, new: dict) -> dict:
 
 def run_smoke() -> None:
     from benchmarks import (bench_kernels, bench_live,
-                            bench_routing_latency, bench_sharded)
+                            bench_routing_latency, bench_sharded,
+                            bench_store)
 
     print("# == smoke: kernels (tiny sizes) ==", flush=True)
     rows_k, _ = bench_kernels.run(verbose=True, sizes=(1024, 4096))
@@ -116,6 +118,9 @@ def run_smoke() -> None:
     print("# == smoke: live index (upserts + search under writes) ==",
           flush=True)
     rows_v, _ = bench_live.run(verbose=True, smoke=True)
+    print("# == smoke: store (snapshot write / cold open / WAL replay) ==",
+          flush=True)
+    rows_t, _ = bench_store.run(verbose=True, smoke=True)
     record = {
         "sha": _git_sha(),
         "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -123,6 +128,7 @@ def run_smoke() -> None:
         "routing_latency": rows_l,
         "sharded_service": rows_s,
         "live_index": rows_v,
+        "store": rows_t,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
     }
@@ -165,6 +171,8 @@ def run_check() -> None:
         ("sharded_service", ("shards", "n", "q"), ("batch_us",)),
         ("live_index", ("n", "q"),
          ("upsert_us_per_row", "search_sealed_us", "search_live_us")),
+        ("store", ("n", "rows"),
+         ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
     ]
     failures: list[str] = []
     for section, key_cols, metrics in comparisons:
@@ -209,7 +217,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,pareto,fig4,table5,table6,"
-                         "table7,latency,kernels,sharded,live,roofline")
+                         "table7,latency,kernels,sharded,live,store,"
+                         "roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size kernels+latency run, appends a per-PR "
                          "record to BENCH_kernels.json at the repo root")
@@ -231,7 +240,8 @@ def main() -> None:
                             bench_feature_ablation, bench_featureset_latency,
                             bench_cls_vs_reg, bench_depth,
                             bench_routing_latency, bench_kernels,
-                            bench_live, bench_roofline, bench_sharded)
+                            bench_live, bench_roofline, bench_sharded,
+                            bench_store)
 
     harnesses = {
         "table1": ("paper Table 1: best method grid", bench_table1.run),
@@ -251,6 +261,8 @@ def main() -> None:
                     bench_sharded.run),
         "live": ("live index: upsert throughput + search under writes",
                  bench_live.run),
+        "store": ("storage: snapshot write / cold open / WAL replay",
+                  bench_store.run),
         "roofline": ("roofline terms from the dry-run artifacts",
                      bench_roofline.run),
     }

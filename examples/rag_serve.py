@@ -12,11 +12,20 @@ single `FilteredIndex` for a row-sharded `ShardedFilteredIndex` +
 streams upserts/deletes into the corpus *while* requests are in flight,
 then compacts and serves one more round from the swapped base.
 
+`--data-dir DIR` makes the corpus durable through `repro.ann.store`:
+the first run builds + trains as usual, then persists the corpus, the
+router artifact, and every subsequent upsert/delete (write-ahead
+logged) under DIR; later runs skip the offline stage entirely and
+recover the index — including writes from previous sessions — plus the
+version-stamped router from disk. Composes with `--live` and
+`--shards N` (the store remembers the shard layout).
+
     PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
-        [--shards 2] [--live]
+        [--shards 2] [--live] [--data-dir /tmp/rag-store]
 """
 
 import argparse
+import os
 import threading
 import time
 
@@ -30,6 +39,7 @@ from repro.ann.predicates import Predicate
 from repro.ann.service import (AsyncBatchQueue, RouterService,
                                ShardedRouterService)
 from repro.ann.sharded import ShardedFilteredIndex
+from repro.ann.store import MANIFEST, IndexStore
 from repro.ann import labels as lb
 from repro.configs.base import get_smoke_config
 from repro.core import training as T
@@ -37,6 +47,49 @@ from repro.data.ann_synth import DatasetSpec, synthesize
 from repro.launch.mesh import make_mesh_compat
 from repro.launch.serve import generate
 from repro.models import common, lm
+
+
+def _open_or_create_store(args):
+    """Recover (or initialise) the durable corpus + router.
+
+    Returns (store, router, service). A recovered store restores the
+    live handle — base segment memmap + WAL replay — and the linked,
+    version-stamped router artifact; a fresh directory runs the offline
+    stage once and persists everything for the next session.
+    """
+    if os.path.exists(os.path.join(args.data_dir, MANIFEST)):
+        store = IndexStore.open(args.data_dir)
+        router = store.load_router()
+        lfx = store.index
+        st = store.stats()
+        print(f"restored store: generation {st['index']['generation']}, "
+              f"{st['index']['n_live']} live rows, "
+              f"{st['replayed_records']} WAL record(s) replayed")
+        if isinstance(lfx, ShardedLiveIndex) and lfx.n_shards != \
+                args.shards and args.shards > 1:
+            print(f"  (store layout wins: {lfx.n_shards} shard(s), "
+                  f"ignoring --shards {args.shards})")
+    else:
+        ds = synthesize(
+            DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5,
+                        0.3, 7))
+        with FilteredIndex(ds) as fx:
+            coll = T.collect({"corpus": fx}, n_queries=60, seed=0,
+                             verbose=False)
+            router = T.train_router(coll, coll.table, epochs=80)
+        os.makedirs(args.data_dir, exist_ok=True)
+        router_dir = os.path.join(args.data_dir, "router")
+        router.save(router_dir)
+        store = IndexStore.create(args.data_dir, ds,
+                                  n_shards=args.shards,
+                                  router_dir=router_dir)
+        lfx = store.index
+        print(f"created store at {args.data_dir}: {ds.n} vectors, "
+              f"router artifact linked")
+    svc = (ShardedRouterService(lfx, router, t=0.9)
+           if isinstance(lfx, ShardedLiveIndex)
+           else RouterService(lfx, router, t=0.9))
+    return store, router, svc
 
 
 def main():
@@ -48,30 +101,42 @@ def main():
     ap.add_argument("--live", action="store_true",
                     help="serve a live index with a concurrent writer "
                          "thread (streaming upserts/deletes + compaction)")
+    ap.add_argument("--data-dir", default=None,
+                    help="durable IndexStore directory: restore the "
+                         "corpus + router from it on startup (skipping "
+                         "the offline stage), persist all writes to it, "
+                         "checkpoint on shutdown")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
 
-    # --- corpus + router (offline stage) ---
-    spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5, 0.3, 7)
-    ds = synthesize(spec)
-    fx = FilteredIndex(ds)
-    coll = T.collect({"corpus": fx}, n_queries=60, seed=0, verbose=False)
-    router = T.train_router(coll, coll.table, epochs=80)
-    if args.live:
-        fx.close()               # the live handle owns its own tensors
-        lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
-               else LiveFilteredIndex(ds))
-        svc = (ShardedRouterService(lfx, router, t=0.9) if args.shards > 1
-               else RouterService(lfx, router, t=0.9))
-    elif args.shards > 1:
-        fx.close()               # collect() is done; shards own their tensors
-        sfx = ShardedFilteredIndex(ds, args.shards)
-        svc = ShardedRouterService(sfx, router, t=0.9)
+    # --- corpus + router (offline stage, or store recovery) ---
+    store = None
+    if args.data_dir:
+        store, router, svc = _open_or_create_store(args)
+        ds = svc.index.ds        # the recovered sealed base
     else:
-        svc = RouterService(fx, router, t=0.9)
+        spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5,
+                           0.3, 7)
+        ds = synthesize(spec)
+        fx = FilteredIndex(ds)
+        coll = T.collect({"corpus": fx}, n_queries=60, seed=0,
+                         verbose=False)
+        router = T.train_router(coll, coll.table, epochs=80)
+        if args.live:
+            fx.close()           # the live handle owns its own tensors
+            lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
+                   else LiveFilteredIndex(ds))
+            svc = (ShardedRouterService(lfx, router, t=0.9)
+                   if args.shards > 1 else RouterService(lfx, router, t=0.9))
+        elif args.shards > 1:
+            fx.close()           # collect() is done; shards own their tensors
+            sfx = ShardedFilteredIndex(ds, args.shards)
+            svc = ShardedRouterService(sfx, router, t=0.9)
+        else:
+            svc = RouterService(fx, router, t=0.9)
     print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
-          f"live={args.live}); router trained "
-          f"({len(router.table.entries)} table entries)")
+          f"live={args.live}, durable={bool(args.data_dir)}); router "
+          f"ready ({len(router.table.entries)} table entries)")
 
     # --- served LM (reduced config; embeddings from its hidden states) ---
     cfg = get_smoke_config(args.arch)
@@ -150,7 +215,9 @@ def main():
               f"{writer_stats['deletes']} deletes concurrent with "
               f"serving (delta={st['delta_rows']} rows, "
               f"n_live={st['n_live']})")
-        gen = svc.index.compact()
+        # with a store, compaction commits the new generation through
+        # the manifest before the old segment is retired
+        gen = store.compact() if store is not None else svc.index.compact()
         st = svc.index.stats()
         print(f"compacted -> generation {gen}: base_n={st['base_n']}, "
               f"delta_rows={st['delta_rows']}")
@@ -178,7 +245,15 @@ def main():
     print("sample generations:", out[:2].tolist())
     hit = (retrieved >= 0).any(1).mean()
     print(f"retrieval hit rate: {hit:.2f}")
-    svc.index.close()
+    if store is not None:
+        store.checkpoint()       # fold this session's WAL into a segment
+        st = store.stats()
+        print(f"persisted store generation {st['store_generation']} at "
+              f"{st['path']} (segment {st['segment']}) — rerun with the "
+              f"same --data-dir to restore")
+        store.close()
+    else:
+        svc.index.close()
 
 
 if __name__ == "__main__":

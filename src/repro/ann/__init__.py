@@ -2,10 +2,12 @@
 TPU-native filtered-ANN methods, and the owned serving surface
 (`FilteredIndex` + `QueryBatch`/`SearchResult` + `RouterService`, scaled
 out by `ShardedFilteredIndex`/`ShardedRouterService` and the async
-micro-batch queue, and made writable by `LiveFilteredIndex`/
+micro-batch queue, made writable by `LiveFilteredIndex`/
 `ShardedLiveIndex` — streaming upserts/deletes with delta segments,
-tombstones, snapshot epochs, and background compaction — see
-docs/serving.md)."""
+tombstones, snapshot epochs, and background compaction — and made
+durable by `IndexStore` — segment files, write-ahead log, stable
+external keys, crash recovery — see docs/serving.md and
+docs/persistence.md)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
@@ -13,7 +15,9 @@ from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult)
 from repro.ann.live import LiveFilteredIndex, LiveSnapshot, ShardedLiveIndex
 from repro.ann.sharded import ShardedFilteredIndex
+from repro.ann.store import IndexStore, WriteAheadLog
 
 __all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
            "RoutingDecision", "SearchResult", "ShardedFilteredIndex",
-           "LiveFilteredIndex", "LiveSnapshot", "ShardedLiveIndex"]
+           "LiveFilteredIndex", "LiveSnapshot", "ShardedLiveIndex",
+           "IndexStore", "WriteAheadLog"]

@@ -9,12 +9,45 @@ group lookup — the paper's "precomputed set-count table".
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
 from typing import Sequence
 
 import numpy as np
 
 from repro.ann import labels as lb
 from repro.ann.predicates import Predicate, eval_predicate_np
+
+# on-disk segment format (one directory per sealed generation; see
+# docs/persistence.md): .npy array files + a segment.json manifest with
+# per-file sha1 checksums, readable zero-copy via np.memmap
+SEGMENT_FORMAT = "repro.ann-segment"
+SEGMENT_VERSION = 1
+SEGMENT_META = "segment.json"
+_SEGMENT_ARRAYS = ("vectors", "bitmaps", "norms_sq", "group_of",
+                   "group_bitmaps", "group_start", "group_size")
+
+
+def sha1_file(path: str, block: int = 1 << 22) -> str:
+    h = hashlib.sha1()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(block)
+            if not chunk:
+                return h.hexdigest()
+            h.update(chunk)
+
+
+def fsync_path(path: str) -> None:
+    """fsync a file or directory — durability before a manifest commit
+    may reference it (a committed manifest must never point at pages
+    still in the page cache)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 @dataclasses.dataclass
@@ -84,6 +117,93 @@ class ANNDataset:
             norms_sq=np.sum(vectors.astype(np.float64) ** 2, axis=1).astype(np.float32),
         )
         return (ds, order) if return_order else ds
+
+    # ---- durable segment files (repro.ann.store) -----------------------
+    def save_segment(self, dirpath: str) -> dict:
+        """Write this dataset as an immutable on-disk segment.
+
+        One ``.npy`` file per array plus a ``segment.json`` manifest
+        carrying shape metadata and per-file sha1 checksums. Segments are
+        written once per generation and never mutated; `load_segment`
+        maps them back zero-copy. Returns the manifest dict.
+        """
+        os.makedirs(dirpath, exist_ok=True)
+        files = {}
+        for field in _SEGMENT_ARRAYS:
+            fname = f"{field}.npy"
+            fpath = os.path.join(dirpath, fname)
+            arr = np.ascontiguousarray(getattr(self, field))
+            np.save(fpath, arr)
+            files[field] = {"file": fname, "sha1": sha1_file(fpath),
+                            "bytes": os.path.getsize(fpath),
+                            "shape": list(arr.shape),
+                            "dtype": str(arr.dtype)}
+        meta = {
+            "format": SEGMENT_FORMAT,
+            "version": SEGMENT_VERSION,
+            "name": self.name,
+            "n": self.n,
+            "dim": self.dim,
+            "universe": self.universe,
+            "width": int(self.bitmaps.shape[1]),
+            "n_groups": self.n_groups,
+            "files": files,
+        }
+        tmp = os.path.join(dirpath, SEGMENT_META + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(dirpath, SEGMENT_META))
+        # a manifest commit may reference this segment immediately: the
+        # array bytes and directory entries must be durable first
+        for field in _SEGMENT_ARRAYS:
+            fsync_path(os.path.join(dirpath, files[field]["file"]))
+        fsync_path(dirpath)
+        return meta
+
+    @staticmethod
+    def load_segment(dirpath: str, *, mmap: bool = True,
+                     verify: bool = False) -> "ANNDataset":
+        """Open an on-disk segment written by `save_segment`.
+
+        With ``mmap=True`` (default) every array is an ``np.memmap``
+        view of the segment file — a cold open touches only the
+        manifest, not the vector bytes. ``verify=True`` re-hashes every
+        file against the recorded sha1 (full read) and raises
+        ValueError on corruption; the default checks file sizes only.
+        """
+        meta_path = os.path.join(dirpath, SEGMENT_META)
+        if not os.path.exists(meta_path):
+            raise ValueError(f"{dirpath!r} is not a segment directory "
+                             f"(no {SEGMENT_META})")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if meta.get("format") != SEGMENT_FORMAT:
+            raise ValueError(
+                f"{dirpath!r} is not a {SEGMENT_FORMAT} segment "
+                f"(format={meta.get('format')!r})")
+        if int(meta.get("version", -1)) > SEGMENT_VERSION:
+            raise ValueError(
+                f"segment version {meta['version']} is newer than "
+                f"supported version {SEGMENT_VERSION}")
+        arrays = {}
+        for field in _SEGMENT_ARRAYS:
+            info = meta["files"][field]
+            fpath = os.path.join(dirpath, info["file"])
+            size = os.path.getsize(fpath)
+            if size != info["bytes"]:
+                raise ValueError(
+                    f"segment file {fpath!r} is {size} bytes; manifest "
+                    f"records {info['bytes']} (torn or corrupt segment)")
+            if verify and sha1_file(fpath) != info["sha1"]:
+                raise ValueError(
+                    f"segment file {fpath!r} fails its sha1 checksum")
+            arrays[field] = np.load(fpath, mmap_mode="r" if mmap else None)
+        lookup = {lb.bitmap_key(np.ascontiguousarray(bm)): j
+                  for j, bm in enumerate(arrays["group_bitmaps"])}
+        return ANNDataset(name=meta["name"], universe=int(meta["universe"]),
+                          group_lookup=lookup, **arrays)
 
     # ---- basic stats ---------------------------------------------------
     @property

@@ -195,6 +195,25 @@ class Method:
         """Offline index build; returns opaque index object."""
         return None
 
+    def index_arrays(self, index) -> dict | None:
+        """Persistable form of a built index, or None.
+
+        A dict of numpy arrays (possibly empty, for a stateless build)
+        means the index is cheap to persist: `repro.ann.store` writes it
+        as an ``.npz`` per generation and `index_from_arrays` restores
+        it on open. None (the default) means the build is rebuilt from
+        the dataset instead — correct for every method, just slower on
+        cold open.
+        """
+        return None
+
+    def index_from_arrays(self, ds: ANNDataset, build_params: dict,
+                          arrays: dict):
+        """Inverse of `index_arrays`; only called when it returned a
+        dict for this method."""
+        raise NotImplementedError(
+            f"method {self.name!r} does not persist its index")
+
     def search(self, fx, index, qvecs: np.ndarray, qbms: np.ndarray,
                pred: Predicate, k: int, search_params: dict):
         """Batched filtered search against the owned handle `fx`

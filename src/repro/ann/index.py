@@ -116,12 +116,19 @@ class SearchResult:
       single-method searches);
     * `timings` — stage wall-clock seconds (`route_s`, `search_s`,
       `total_s`; live indexes additionally report `base_s`, `delta_s`
-      and `merge_s` for the base scan / delta scan / candidate fold).
+      and `merge_s` for the base scan / delta scan / candidate fold);
+    * `keys` — [Q, k] int64 **stable external keys** for the returned
+      rows (−1 pad). Unlike `ids` — which are per-generation row ids a
+      live index remaps at every compaction — keys survive
+      `compact()` and a `repro.ann.store` save/reopen, so clients
+      should hold on to these. For sealed indexes keys equal the row
+      ids.
     """
     ids: np.ndarray
     distances: np.ndarray
     decisions: list[RoutingDecision] | None = None
     timings: dict = dataclasses.field(default_factory=dict)
+    keys: np.ndarray | None = None
 
     @property
     def q(self) -> int:
@@ -269,11 +276,33 @@ class FilteredIndex:
             self._indexes[key] = method.build(self.ds, dict(build_params))
         return self._indexes[key]
 
+    def adopt_index(self, method, build_params, index) -> None:
+        """Install an already-built index under (method, build-params) —
+        the deserialization hook `repro.ann.store` uses to rebuild
+        `built_keys()` on load without re-running the offline build.
+        Key normalisation matches `get_index`."""
+        self._check_open()
+        method = self._resolve_method(method)
+        if build_params is None:
+            build_params = ()
+        if isinstance(build_params, dict):
+            build_params = tuple(sorted(build_params.items()))
+        self._indexes[(method.name, tuple(build_params))] = index
+
     def built_keys(self) -> list[tuple]:
         """Keys of every built index: (method_name, build_params_tuple).
         `LiveFilteredIndex.compact` replays these against the new base so
         a compaction swap doesn't cold-start the serving methods."""
         return list(self._indexes.keys())
+
+    # ---- stable external keys -------------------------------------------
+    def keys_of(self, ids) -> np.ndarray:
+        """Stable external keys for result ids (−1 stays −1). A sealed
+        `FilteredIndex` never remaps its rows, so keys are the row ids —
+        this mirror of `LiveFilteredIndex.keys_of` keeps the serving
+        surface uniform across sealed and live handles."""
+        ids = np.asarray(ids, dtype=np.int64)
+        return np.where(ids >= 0, ids, np.int64(-1))
 
     def evict(self, method_name: str | None = None) -> int:
         """Drop built indexes (all of one method, or every method).
@@ -337,7 +366,8 @@ class FilteredIndex:
         dt = time.perf_counter() - t0
         return SearchResult(
             ids=ids, distances=exact_distances(raw, ids, batch.vectors),
-            decisions=None, timings={"search_s": dt, "total_s": dt})
+            decisions=None, timings={"search_s": dt, "total_s": dt},
+            keys=self.keys_of(ids))
 
 
 def _build_device_data(ds: ANNDataset) -> DeviceData:

@@ -241,24 +241,27 @@ class _StageTimings:
 class LiveSnapshot:
     """Consistent read epoch over a `LiveFilteredIndex`.
 
-    Captures the delta high-watermark, a tombstone copy, and the base
-    generation — and *pins* that generation (the sealed base handle
-    stays open) until `release()` / the context manager exits. Searches
-    that are handed a snapshot see exactly this state regardless of
-    concurrent `upsert`/`delete`/`compact` calls.
+    Captures the delta high-watermark, a tombstone copy, the external-key
+    prefix, and the base generation — and *pins* that generation (the
+    sealed base handle stays open) until `release()` / the context
+    manager exits. Searches that are handed a snapshot see exactly this
+    state regardless of concurrent `upsert`/`delete`/`compact` calls.
     """
 
     __slots__ = ("generation", "base_n", "delta_rows", "tombstones",
-                 "tombstone_version", "delta", "_owner", "_released")
+                 "tombstone_version", "delta", "keys", "next_key",
+                 "_owner", "_released")
 
     def __init__(self, owner, generation, base_n, delta_rows, tombstones,
-                 tombstone_version, delta):
+                 tombstone_version, delta, keys, next_key):
         self.generation = generation
         self.base_n = base_n
         self.delta_rows = delta_rows
         self.tombstones = tombstones
         self.tombstone_version = tombstone_version
         self.delta = delta
+        self.keys = keys
+        self.next_key = next_key
         self._owner = owner
         self._released = False
 
@@ -304,12 +307,21 @@ class LiveFilteredIndex(_StageTimings):
         device: optional jax device pin (forwarded to the base handle
             and the delta mirror uploads).
         delta_chunk: delta device-mirror block size in rows.
+        base_keys: optional [N] int64 stable external keys for the base
+            rows (defaults to the row ids 0..N-1). `repro.ann.store`
+            passes the persisted per-generation key map here on reopen.
+        next_key: first key `upsert` auto-assigns (defaults past the
+            largest base key).
+        generation: starting generation counter (restored stores resume
+            at the persisted generation instead of 0).
     """
 
     def __init__(self, ds: ANNDataset | None = None, *, name: str | None = None,
                  dim: int | None = None, universe: int | None = None,
                  registry=None, device=None,
-                 delta_chunk: int = DEFAULT_DELTA_CHUNK):
+                 delta_chunk: int = DEFAULT_DELTA_CHUNK,
+                 base_keys: np.ndarray | None = None,
+                 next_key: int | None = None, generation: int = 0):
         if ds is None:
             if name is None or dim is None or universe is None:
                 raise ValueError(
@@ -338,7 +350,19 @@ class LiveFilteredIndex(_StageTimings):
         self._tomb = np.zeros(self._base_n, bool)
         self._tomb_version = 0
         self._live_label_counts = base_counts
-        self._generation = 0
+        self._generation = int(generation)
+        if base_keys is None:
+            self._keys = np.arange(self._base_n, dtype=np.int64)
+        else:
+            self._keys = np.asarray(base_keys, dtype=np.int64).copy()
+            if self._keys.shape != (self._base_n,):
+                raise ValueError(
+                    f"base_keys must be [{self._base_n}]; got shape "
+                    f"{self._keys.shape}")
+        self._next_key = int(next_key) if next_key is not None else \
+            (int(self._keys.max()) + 1 if self._base_n else 0)
+        self._key_rows: dict | None = None    # key -> row, built lazily
+        self._wal = None                      # attached write-ahead log
         self._lock = threading.RLock()
         self._readers: dict[int, int] = {}      # generation -> pin count
         self._retired: dict[int, FilteredIndex | None] = {}
@@ -442,15 +466,20 @@ class LiveFilteredIndex(_StageTimings):
         return jax.default_device(self._placement)
 
     # ---- write path -----------------------------------------------------
-    def upsert(self, vectors, bitmaps) -> np.ndarray:
+    def upsert(self, vectors, bitmaps, *, keys=None) -> np.ndarray:
         """Append rows to the delta segment.
 
         Args:
             vectors: [R, d] (or [d]) float embeddings.
             bitmaps: [R, W] (or [W]) packed uint32 label sets.
+            keys: optional [R] int64 stable external keys for the rows
+                (auto-assigned sequentially when omitted). A key that
+                already names a *live* row is rejected — delete the old
+                row first to re-point a key.
         Returns: [R] int64 assigned ids (valid for this generation;
-            `compact()` remaps them).
-        Raises: RuntimeError if closed; ValueError on shape mismatch.
+            `compact()` remaps them — `keys_of` gives the stable keys).
+        Raises: RuntimeError if closed; ValueError on shape mismatch or
+            a duplicate live key.
         """
         vectors = np.asarray(vectors, dtype=np.float32)
         bitmaps = np.asarray(bitmaps, dtype=np.uint32)
@@ -471,12 +500,53 @@ class LiveFilteredIndex(_StageTimings):
         counts = _label_counts(bitmaps, self._universe)
         with self._lock:
             self._check_open()
+            ks = self._claim_keys(keys, vectors.shape[0])
+            if self._wal is not None:        # durable before applied
+                self._wal.log_upsert(self._generation, ks, vectors, bitmaps)
             start, stop = self._delta.append(vectors, bitmaps)
             self._tomb = np.concatenate(
                 [self._tomb, np.zeros(stop - start, bool)])
+            self._keys = np.concatenate([self._keys, ks])
+            if self._key_rows is not None:
+                self._key_rows.update(zip(
+                    ks.tolist(), range(self._base_n + start,
+                                       self._base_n + stop)))
             self._live_label_counts = self._live_label_counts + counts
             return np.arange(self._base_n + start, self._base_n + stop,
                              dtype=np.int64)
+
+    def _claim_keys(self, keys, n: int) -> np.ndarray:
+        """Validate/assign [n] external keys (caller holds the lock)."""
+        if keys is None:
+            ks = np.arange(self._next_key, self._next_key + n,
+                           dtype=np.int64)
+        else:
+            ks = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+            if ks.shape != (n,):
+                raise ValueError(
+                    f"upsert keys must be [{n}]; got shape {ks.shape}")
+            if np.unique(ks).size != n:
+                raise ValueError("upsert keys must be unique per batch")
+            key_rows = self._key_index()
+            for k in ks.tolist():
+                row = key_rows.get(k)
+                if row is not None and not self._tomb[row]:
+                    raise ValueError(
+                        f"key {k} already names a live row (id {row}); "
+                        f"delete it first to re-point the key")
+        self._next_key = max(self._next_key, int(ks.max()) + 1) if n else \
+            self._next_key
+        return ks
+
+    def _key_index(self) -> dict:
+        """key -> current-generation row map (caller holds the lock).
+        Built lazily, then maintained incrementally by `upsert`;
+        compaction invalidates it. Re-used keys map to their newest
+        row."""
+        if self._key_rows is None:
+            self._key_rows = dict(zip(
+                self._keys[: self.n_total].tolist(), range(self.n_total)))
+        return self._key_rows
 
     def delete(self, ids) -> int:
         """Tombstone ids (base or delta rows of the current generation).
@@ -490,6 +560,8 @@ class LiveFilteredIndex(_StageTimings):
                 raise IndexError(
                     f"delete ids must be in [0, {n_tot}); got range "
                     f"[{ids.min()}, {ids.max()}]")
+            if self._wal is not None:        # replay is idempotent
+                self._wal.log_delete(self._generation, ids)
             fresh = ids[~self._tomb[ids]]
             fresh = np.unique(fresh)
             if fresh.size:
@@ -499,6 +571,58 @@ class LiveFilteredIndex(_StageTimings):
                     self._live_label_counts
                     - _label_counts(self._bitmaps_of(fresh), self._universe))
             return int(fresh.size)
+
+    # ---- stable external keys -------------------------------------------
+    def keys_of(self, ids, snapshot: LiveSnapshot | None = None
+                ) -> np.ndarray:
+        """Stable external keys for (current-generation or snapshot) ids.
+
+        Returns an int64 array of `ids`' shape with −1 where the id is
+        −1. Keys survive `compact()` and a `repro.ann.store` round trip;
+        per-generation ids do not.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if snapshot is not None:
+            keys = snapshot.keys
+        else:
+            with self._lock:
+                keys = self._keys[: self.n_total]
+        out = np.full(ids.shape, -1, dtype=np.int64)
+        valid = ids >= 0
+        if valid.any():
+            out[valid] = keys[ids[valid]]
+        return out
+
+    def rows_of(self, keys) -> np.ndarray:
+        """Current-generation ids for external keys (−1 for a key that
+        has never been assigned). A re-used key maps to its newest
+        row."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            key_rows = self._key_index()
+            return np.array([key_rows.get(int(k), -1) for k in keys],
+                            dtype=np.int64)
+
+    def delete_keys(self, keys) -> int:
+        """Tombstone rows by stable external key; unknown keys raise
+        KeyError. Returns the number of newly deleted rows."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            rows = self.rows_of(keys)
+            if (rows < 0).any():
+                missing = keys[rows < 0].tolist()
+                raise KeyError(f"unknown external keys: {missing}")
+            return self.delete(rows)
+
+    # ---- durability hook (repro.ann.store) -------------------------------
+    def attach_wal(self, wal) -> None:
+        """Attach a write-ahead log: every subsequent `upsert`/`delete`
+        appends a record *before* the state mutates, and `compact_async`
+        logs a compaction barrier at its snapshot point. Pass None to
+        detach. The store owns the WAL lifecycle (rotation, fsync,
+        close); the live handle only appends."""
+        with self._lock:
+            self._wal = wal
 
     def _bitmaps_of(self, gids: np.ndarray) -> np.ndarray:
         """[R, W] packed bitmaps for current-generation global ids."""
@@ -541,9 +665,15 @@ class LiveFilteredIndex(_StageTimings):
             rows = self._delta.rows
             gen = self._generation
             self._readers[gen] = self._readers.get(gen, 0) + 1
+            # keys: a view is enough — _keys is only ever *reassigned*
+            # (concatenate on upsert, fresh array at the compaction
+            # swap), never written in place, so the sliced object stays
+            # frozen; tombstones mutate in place and must copy
             return LiveSnapshot(self, gen, self._base_n, rows,
                                 self._tomb[: self._base_n + rows].copy(),
-                                self._tomb_version, self._delta)
+                                self._tomb_version, self._delta,
+                                self._keys[: self._base_n + rows],
+                                self._next_key)
 
     def _release_reader(self, gen: int) -> None:
         with self._lock:
@@ -667,14 +797,20 @@ class LiveFilteredIndex(_StageTimings):
             setting = resolve_setting(method, setting)
         self.pop_stage_timings()
         t0 = time.perf_counter()
-        ids, raw = self.run_method(method, setting, batch,
-                                   snapshot=snapshot)
+        snap = snapshot if snapshot is not None else self.snapshot()
+        try:
+            ids, raw = self.run_method(method, setting, batch,
+                                       snapshot=snap)
+            keys = self.keys_of(ids, snapshot=snap)
+        finally:
+            if snapshot is None:
+                snap.release()
         dt = time.perf_counter() - t0
         timings = {"search_s": dt, "total_s": dt}
         timings.update(self.pop_stage_timings())
         return SearchResult(
             ids=ids, distances=exact_distances(raw, ids, batch.vectors),
-            decisions=None, timings=timings)
+            decisions=None, timings=timings, keys=keys)
 
     # ---- routing-feature freshness ---------------------------------------
     def live_stats(self) -> LiveStats:
@@ -727,6 +863,10 @@ class LiveFilteredIndex(_StageTimings):
                     max_workers=1,
                     thread_name_prefix=f"compact-{self._name}")
             snap = self.snapshot()
+            if self._wal is not None:
+                # barrier record: replay compacts synchronously at this
+                # point, reproducing the snapshot's fold exactly
+                self._wal.log_compact(self._generation)
             fut = self._compact_pool.submit(self._compact_job, snap)
             self._compacting = fut
             return fut
@@ -757,6 +897,9 @@ class LiveFilteredIndex(_StageTimings):
             inv[order] = np.arange(order.size)
             remap = np.full(snap.n_total, -1, np.int64)
             remap[kept] = inv
+            # stable keys follow their rows through the remap
+            new_keys = np.empty(new_ds.n, np.int64)
+            new_keys[remap[kept]] = snap.keys[kept]
             new_fx = FilteredIndex(new_ds, registry=self._registry,
                                    device=self._placement)
             old_fx = self._base_for(snap) if snap.base_n else None
@@ -791,6 +934,10 @@ class LiveFilteredIndex(_StageTimings):
                 self._base_n = new_ds.n
                 self._delta = new_delta
                 self._tomb = new_tomb
+                self._keys = np.concatenate(
+                    [new_keys, self._keys[snap.n_total:
+                                          snap.n_total + n_tail]])
+                self._key_rows = None
                 self._tomb_version += 1
                 self._generation = old_gen + 1
                 self._features = None       # dataset features went stale
@@ -808,6 +955,24 @@ class LiveFilteredIndex(_StageTimings):
                 self._compacting = None
 
     # ---- maintenance -----------------------------------------------------
+    def export_state(self, snap: LiveSnapshot) -> dict:
+        """Full logical state of a pinned snapshot — what a
+        `repro.ann.store` checkpoint persists: the sealed base dataset,
+        per-row stable keys, the delta rows in insertion order (with
+        keys), and the tombstoned ids of the epoch."""
+        base_fx = self._base_for(snap) if snap.base_n else None
+        dvec, dbm, _ = snap.delta.host_view(snap.delta_rows)
+        return {
+            "generation": snap.generation,
+            "base_ds": None if base_fx is None else base_fx.ds,
+            "base_keys": snap.keys[: snap.base_n],
+            "delta_vectors": dvec,
+            "delta_bitmaps": dbm,
+            "delta_keys": snap.keys[snap.base_n:],
+            "dead_ids": np.nonzero(snap.tombstones)[0].astype(np.int64),
+            "next_key": snap.next_key,
+        }
+
     def last_remap(self) -> np.ndarray | None:
         """Id translation of the most recent `compact()`: `remap[old_id]`
         is the row's id in the new generation, −1 if it was deleted.
@@ -833,6 +998,8 @@ class LiveFilteredIndex(_StageTimings):
                 "tombstones": int(self._tomb.sum()),
                 "n_live": self._base_n + rows - int(self._tomb.sum()),
                 "tombstone_version": self._tomb_version,
+                "next_key": self._next_key,
+                "wal_attached": self._wal is not None,
                 "compacting": (self._compacting is not None
                                and not self._compacting.done()),
                 "retired_generations": sorted(self._retired),
@@ -846,19 +1013,25 @@ class LiveFilteredIndex(_StageTimings):
 
 class ShardedLiveSnapshot:
     """Consistent cross-shard read epoch: one pinned `LiveSnapshot` per
-    shard plus the shard list / bounds / gid maps of the epoch, all
-    captured under the sharded index's write lock. Pins the epoch (old
-    shard lists survive a compaction swap) until `release()`."""
+    shard plus the shard list / bounds / gid maps / global key prefix of
+    the epoch, all captured under the sharded index's write lock. Pins
+    the epoch (old shard lists survive a compaction swap) until
+    `release()`."""
 
-    __slots__ = ("epoch", "shards", "bounds", "snaps", "gmaps",
-                 "_owner", "_released")
+    __slots__ = ("epoch", "shards", "bounds", "snaps", "gmaps", "keys",
+                 "next_key", "locs", "base_ds", "_owner", "_released")
 
-    def __init__(self, owner, epoch, shards, bounds, snaps, gmaps):
+    def __init__(self, owner, epoch, shards, bounds, snaps, gmaps,
+                 keys, next_key, locs, base_ds):
         self.epoch = epoch
         self.shards = shards
         self.bounds = bounds
         self.snaps = snaps
         self.gmaps = gmaps
+        self.keys = keys
+        self.next_key = next_key
+        self.locs = locs
+        self.base_ds = base_ds
         self._owner = owner
         self._released = False
 
@@ -900,7 +1073,9 @@ class ShardedLiveIndex(_StageTimings):
                  name: str | None = None, dim: int | None = None,
                  universe: int | None = None, devices=None, registry=None,
                  parallel: bool = True,
-                 delta_chunk: int = DEFAULT_DELTA_CHUNK):
+                 delta_chunk: int = DEFAULT_DELTA_CHUNK,
+                 base_keys: np.ndarray | None = None,
+                 next_key: int | None = None, generation: int = 0):
         from repro.ann.distributed import shard_bounds, shard_devices
 
         n_shards = int(n_shards)
@@ -945,13 +1120,26 @@ class ShardedLiveIndex(_StageTimings):
         self._gid_arrays: list[np.ndarray] | None = None   # search cache
         self._last_remap: np.ndarray | None = None
         self._next_shard = 0
+        if base_keys is None:
+            self._keys = np.arange(self._total_base, dtype=np.int64)
+        else:
+            self._keys = np.asarray(base_keys, dtype=np.int64).copy()
+            if self._keys.shape != (self._total_base,):
+                raise ValueError(
+                    f"base_keys must be [{self._total_base}]; got shape "
+                    f"{self._keys.shape}")
+        self._next_key = int(next_key) if next_key is not None else \
+            (int(self._keys.max()) + 1 if self._total_base else 0)
+        self._key_rows: dict | None = None    # key -> gid, built lazily
+        self._wal = None
+        self._wal_quiet = False               # compaction's internal replay
         self._parallel = bool(parallel) and n_shards > 1
         self._pool = (ThreadPoolExecutor(
             max_workers=n_shards,
             thread_name_prefix=f"live-shard-{self._name}")
             if self._parallel else None)
         self._lock = threading.RLock()
-        self._epoch = 0
+        self._epoch = int(generation)
         self._epoch_readers: dict[int, int] = {}
         self._old_shards: dict[int, list] = {}
         self._feature_fx: FilteredIndex | None = None
@@ -984,6 +1172,15 @@ class ShardedLiveIndex(_StageTimings):
     def n_live(self) -> int:
         with self._lock:
             return sum(s.n_live for s in self.shards)
+
+    @property
+    def base_n(self) -> int:
+        return self._total_base
+
+    @property
+    def n_total(self) -> int:
+        with self._lock:
+            return self._total_base + len(self._delta_loc)
 
     @property
     def feature_index(self) -> FilteredIndex:
@@ -1044,18 +1241,32 @@ class ShardedLiveIndex(_StageTimings):
                 f"ShardedLiveIndex({self._name!r}) is closed")
 
     # ---- write path -----------------------------------------------------
-    def upsert(self, vectors, bitmaps) -> np.ndarray:
+    def upsert(self, vectors, bitmaps, *, keys=None) -> np.ndarray:
         """Append rows, round-robin across shards. Returns [R] global
-        ids (current generation)."""
+        ids (current generation); `keys=` as in
+        `LiveFilteredIndex.upsert` (stable global keys, auto-assigned
+        when omitted)."""
         vectors = np.asarray(vectors, dtype=np.float32)
         bitmaps = np.asarray(bitmaps, dtype=np.uint32)
         if vectors.ndim == 1:
             vectors = vectors[None]
         if bitmaps.ndim == 1:
             bitmaps = bitmaps[None]
+        if vectors.ndim != 2 or vectors.shape[1] != self._dim:
+            raise ValueError(
+                f"upsert vectors must be [R, {self._dim}]; got "
+                f"{vectors.shape}")
+        width = lb.n_words(self._universe)
+        if bitmaps.shape != (vectors.shape[0], width):
+            raise ValueError(
+                f"upsert bitmaps must be [{vectors.shape[0]}, {width}]; "
+                f"got {bitmaps.shape}")
         with self._lock:
             self._check_open()
             n = vectors.shape[0]
+            ks = self._claim_keys(keys, n)
+            if self._wal is not None and not self._wal_quiet:
+                self._wal.log_upsert(self._epoch, ks, vectors, bitmaps)
             nsh = self.n_shards
             shard_of = (self._next_shard + np.arange(n)) % nsh
             gid0 = self._total_base + len(self._delta_loc)
@@ -1070,9 +1281,55 @@ class ShardedLiveIndex(_StageTimings):
                 for off, j in enumerate(rows):
                     self._delta_loc[d0 + int(j)] = (s, start_local + off)
                     self._shard_gids[s].append(gid0 + int(j))
+            self._keys = np.concatenate([self._keys, ks])
+            if self._key_rows is not None:
+                self._key_rows.update(zip(ks.tolist(),
+                                          range(gid0, gid0 + n)))
             self._gid_arrays = None           # searches rebuild lazily
             self._next_shard = (self._next_shard + n) % nsh
             return np.arange(gid0, gid0 + n, dtype=np.int64)
+
+    def _claim_keys(self, keys, n: int) -> np.ndarray:
+        """Validate/assign [n] global external keys (lock held)."""
+        if keys is None:
+            ks = np.arange(self._next_key, self._next_key + n,
+                           dtype=np.int64)
+        else:
+            ks = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+            if ks.shape != (n,):
+                raise ValueError(
+                    f"upsert keys must be [{n}]; got shape {ks.shape}")
+            if np.unique(ks).size != n:
+                raise ValueError("upsert keys must be unique per batch")
+            key_rows = self._key_index()
+            for k in ks.tolist():
+                gid = key_rows.get(k)
+                if gid is not None and self._gid_live(gid):
+                    raise ValueError(
+                        f"key {k} already names a live row (id {gid}); "
+                        f"delete it first to re-point the key")
+        if n:
+            self._next_key = max(self._next_key, int(ks.max()) + 1)
+        return ks
+
+    def _key_index(self) -> dict:
+        if self._key_rows is None:
+            n_tot = self._total_base + len(self._delta_loc)
+            self._key_rows = dict(zip(self._keys[:n_tot].tolist(),
+                                      range(n_tot)))
+        return self._key_rows
+
+    def _shard_local(self, gid: int) -> tuple[int, int]:
+        """(shard, shard-local id) for a current-generation global id."""
+        if gid < self._total_base:
+            s = int(np.searchsorted(self.bounds, gid, side="right")) - 1
+            return s, gid - int(self.bounds[s])
+        s, row = self._delta_loc[gid - self._total_base]
+        return s, self.shards[s].base_n + row
+
+    def _gid_live(self, gid: int) -> bool:
+        s, lid = self._shard_local(int(gid))
+        return not self.shards[s]._tomb[lid]
 
     def delete(self, ids) -> int:
         """Tombstone global ids; returns the number newly deleted."""
@@ -1084,18 +1341,59 @@ class ShardedLiveIndex(_StageTimings):
                 raise IndexError(
                     f"delete ids must be in [0, {n_tot}); got range "
                     f"[{ids.min()}, {ids.max()}]")
+            if self._wal is not None and not self._wal_quiet:
+                self._wal.log_delete(self._epoch, ids)
             per: dict[int, list] = {}
             for gid in ids.tolist():
-                if gid < self._total_base:
-                    s = int(np.searchsorted(self.bounds, gid,
-                                            side="right")) - 1
-                    per.setdefault(s, []).append(gid - int(self.bounds[s]))
-                else:
-                    s, row = self._delta_loc[gid - self._total_base]
-                    per.setdefault(s, []).append(
-                        self.shards[s].base_n + row)
+                s, lid = self._shard_local(gid)
+                per.setdefault(s, []).append(lid)
             return sum(self.shards[s].delete(lids)
                        for s, lids in per.items())
+
+    # ---- stable external keys -------------------------------------------
+    def keys_of(self, ids, snapshot: "ShardedLiveSnapshot | None" = None
+                ) -> np.ndarray:
+        """Stable external keys for global ids (−1 stays −1); semantics
+        as in `LiveFilteredIndex.keys_of`."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if snapshot is not None:
+            keys = snapshot.keys
+        else:
+            with self._lock:
+                keys = self._keys[: self._total_base
+                                  + len(self._delta_loc)]
+        out = np.full(ids.shape, -1, dtype=np.int64)
+        valid = ids >= 0
+        if valid.any():
+            out[valid] = keys[ids[valid]]
+        return out
+
+    def rows_of(self, keys) -> np.ndarray:
+        """Current-generation global ids for external keys (−1 if never
+        assigned)."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            key_rows = self._key_index()
+            return np.array([key_rows.get(int(k), -1) for k in keys],
+                            dtype=np.int64)
+
+    def delete_keys(self, keys) -> int:
+        """Tombstone rows by stable key; unknown keys raise KeyError."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            rows = self.rows_of(keys)
+            if (rows < 0).any():
+                missing = keys[rows < 0].tolist()
+                raise KeyError(f"unknown external keys: {missing}")
+            return self.delete(rows)
+
+    # ---- durability hook (repro.ann.store) -------------------------------
+    def attach_wal(self, wal) -> None:
+        """Attach a write-ahead log at the sharded level (global ids and
+        keys; per-shard handles stay WAL-less). See
+        `LiveFilteredIndex.attach_wal`."""
+        with self._lock:
+            self._wal = wal
 
     # ---- read path -------------------------------------------------------
     def _map_shards(self, fn, items):
@@ -1116,10 +1414,17 @@ class ShardedLiveIndex(_StageTimings):
                 self._gid_arrays = [np.asarray(g, dtype=np.int64)
                                     for g in self._shard_gids]
             gmaps = self._gid_arrays
+            n_tot = self._total_base + len(self._delta_loc)
             self._epoch_readers[epoch] = \
                 self._epoch_readers.get(epoch, 0) + 1
+            # keys slice is a view: _keys is reassigned, never mutated
+            # in place (see LiveFilteredIndex.snapshot)
             return ShardedLiveSnapshot(self, epoch, shards, bounds,
-                                       snaps, gmaps)
+                                       snaps, gmaps,
+                                       self._keys[:n_tot],
+                                       self._next_key,
+                                       list(self._delta_loc),
+                                       self._base_ds)
 
     def run_method(self, method, setting: ParamSetting, batch: QueryBatch,
                    *, snapshot: ShardedLiveSnapshot | None = None
@@ -1191,13 +1496,19 @@ class ShardedLiveIndex(_StageTimings):
             setting = resolve_setting(method, setting)
         self.pop_stage_timings()
         t0 = time.perf_counter()
-        ids, raw = self.run_method(method, setting, batch)
+        snap = self.snapshot()
+        try:
+            ids, raw = self.run_method(method, setting, batch,
+                                       snapshot=snap)
+            keys = self.keys_of(ids, snapshot=snap)
+        finally:
+            snap.release()
         dt = time.perf_counter() - t0
         timings = {"search_s": dt, "total_s": dt}
         timings.update(self.pop_stage_timings())
         return SearchResult(
             ids=ids, distances=exact_distances(raw, ids, batch.vectors),
-            decisions=None, timings=timings)
+            decisions=None, timings=timings, keys=keys)
 
     # ---- routing-feature freshness ---------------------------------------
     def live_stats(self) -> LiveStats:
@@ -1289,6 +1600,9 @@ class ShardedLiveIndex(_StageTimings):
                 snaps = [s.snapshot() for s in self.shards]
                 locs = list(self._delta_loc)
                 old_total = self._total_base + len(locs)
+                old_keys = self._keys[:old_total].copy()
+                if self._wal is not None:
+                    self._wal.log_compact(self._epoch)
             vectors, bitmaps, kept = self._gather(snaps, locs)
             new_ds, order = ANNDataset.from_packed(
                 self._name, vectors, bitmaps, self._universe,
@@ -1297,6 +1611,8 @@ class ShardedLiveIndex(_StageTimings):
             inv[order] = np.arange(order.size)
             remap = np.full(old_total, -1, np.int64)
             remap[kept] = inv
+            new_keys = np.empty(new_ds.n, np.int64)
+            new_keys[remap[kept]] = old_keys[kept]
             nsh = self.n_shards
             built = []
             for s in self.shards:
@@ -1361,6 +1677,7 @@ class ShardedLiveIndex(_StageTimings):
                     bm = shard._delta._bm[row]
                     dead = bool(shard._tomb[shard.base_n + row])
                     tail_rows.append((vec, bm, dead))
+                tail_keys = self._keys[old_total: old_total + len(tail)]
                 old_epoch = self._epoch
                 self.shards = new_shards
                 self.bounds = new_bounds
@@ -1370,6 +1687,9 @@ class ShardedLiveIndex(_StageTimings):
                 self._shard_gids = [[] for _ in new_shards]
                 self._gid_arrays = None
                 self._next_shard = 0
+                self._keys = (new_keys if new_base is not None
+                              else np.zeros(0, np.int64))
+                self._key_rows = None
                 self._epoch = old_epoch + 1
                 self._last_remap = remap
                 self._features = None
@@ -1377,25 +1697,33 @@ class ShardedLiveIndex(_StageTimings):
                     self._feature_fx.close()
                     self._feature_fx = None
                 # replay: rows that didn't make the snapshot (and every
-                # row when the base fell below the shard count)
+                # row when the base fell below the shard count), carrying
+                # their stable keys; the WAL stays quiet — these rows'
+                # original upsert/delete records already cover them
                 replay = []
                 if new_base is None and new_ds.n:
-                    replay.append((new_ds.vectors, new_ds.bitmaps, None))
+                    replay.append((new_ds.vectors, new_ds.bitmaps, None,
+                                   new_keys))
                 if tail_rows:
                     replay.append((
                         np.stack([t[0] for t in tail_rows]),
                         np.stack([t[1] for t in tail_rows]),
-                        np.array([t[2] for t in tail_rows], bool)))
-                for vecs, bms, dead in replay:
-                    gids = self.upsert(vecs, bms)
-                    if dead is not None and dead.any():
-                        self.delete(gids[dead])
-                if late_tomb:
-                    ng = remap[np.asarray(late_tomb, np.int64)]
-                    ng = ng[(ng >= 0) & (ng < self._total_base
-                                         + len(self._delta_loc))]
-                    if ng.size:
-                        self.delete(ng)
+                        np.array([t[2] for t in tail_rows], bool),
+                        tail_keys))
+                self._wal_quiet = True
+                try:
+                    for vecs, bms, dead, ks in replay:
+                        gids = self.upsert(vecs, bms, keys=ks)
+                        if dead is not None and dead.any():
+                            self.delete(gids[dead])
+                    if late_tomb:
+                        ng = remap[np.asarray(late_tomb, np.int64)]
+                        ng = ng[(ng >= 0) & (ng < self._total_base
+                                             + len(self._delta_loc))]
+                        if ng.size:
+                            self.delete(ng)
+                finally:
+                    self._wal_quiet = False
                 if self._epoch_readers.get(old_epoch):
                     self._old_shards[old_epoch] = old_shards
                 else:
@@ -1410,6 +1738,44 @@ class ShardedLiveIndex(_StageTimings):
                 self._compacting = None
 
     # ---- maintenance -----------------------------------------------------
+    def export_state(self, snap: ShardedLiveSnapshot) -> dict:
+        """Full logical state of a pinned cross-shard epoch, in *global*
+        id order — the same contract as `LiveFilteredIndex.export_state`
+        (what a `repro.ann.store` checkpoint persists)."""
+        base_n = int(snap.bounds[-1])
+        n_delta = len(snap.locs)
+        width = lb.n_words(self._universe)
+        dvec = np.zeros((n_delta, self._dim), np.float32)
+        dbm = np.zeros((n_delta, width), np.uint32)
+        delta_dead = np.zeros(n_delta, bool)
+        if n_delta:
+            loc_shard = np.array([l[0] for l in snap.locs], np.int64)
+            loc_row = np.array([l[1] for l in snap.locs], np.int64)
+            for s, ssnap in enumerate(snap.snaps):
+                mine = loc_shard == s
+                if not mine.any():
+                    continue
+                sv, sb, _ = ssnap.delta.host_view(ssnap.delta_rows)
+                rows = loc_row[mine]
+                dvec[mine] = sv[rows]
+                dbm[mine] = sb[rows]
+                delta_dead[mine] = ssnap.tombstones[ssnap.base_n + rows]
+        dead = [base_n + np.nonzero(delta_dead)[0]]
+        for s, ssnap in enumerate(snap.snaps):
+            lids = np.nonzero(ssnap.tombstones[: ssnap.base_n])[0]
+            if lids.size:
+                dead.append(int(snap.bounds[s]) + lids)
+        return {
+            "generation": snap.epoch,
+            "base_ds": snap.base_ds,
+            "base_keys": snap.keys[:base_n],
+            "delta_vectors": dvec,
+            "delta_bitmaps": dbm,
+            "delta_keys": snap.keys[base_n:],
+            "dead_ids": np.sort(np.concatenate(dead)).astype(np.int64),
+            "next_key": snap.next_key,
+        }
+
     def last_remap(self) -> np.ndarray | None:
         """Global-id translation of the most recent `compact()` (see
         `LiveFilteredIndex.last_remap`)."""
@@ -1424,6 +1790,8 @@ class ShardedLiveIndex(_StageTimings):
                 "base_n": self._total_base,
                 "delta_rows": len(self._delta_loc),
                 "n_live": sum(s.n_live for s in self.shards),
+                "next_key": self._next_key,
+                "wal_attached": self._wal is not None,
                 "compacting": (self._compacting is not None
                                and not self._compacting.done()),
                 "closed": self._closed,

@@ -38,6 +38,17 @@ class FVamana(engine.Method):
         return graph.build_graph(ds.vectors, ds.bitmaps, ds.universe,
                                  r=int(build_params.get("r", 32)), seed=17)
 
+    def index_arrays(self, index: graph.VamanaGraph) -> dict:
+        return {"neighbors": index.neighbors,
+                "medoid": np.asarray(index.medoid, dtype=np.int64),
+                "label_entry": index.label_entry}
+
+    def index_from_arrays(self, ds: ANNDataset, build_params: dict,
+                          arrays: dict) -> graph.VamanaGraph:
+        return graph.VamanaGraph(neighbors=arrays["neighbors"],
+                                 medoid=int(arrays["medoid"]),
+                                 label_entry=arrays["label_entry"])
+
     def search(self, fx, index: graph.VamanaGraph, qvecs, qbms,
                pred: Predicate, k: int, search_params: dict):
         dev = fx.device

@@ -79,6 +79,13 @@ class LabelNav(engine.Method):
     def build(self, ds: ANNDataset, build_params: dict):
         return {"maxg": int(ds.group_size.max())}
 
+    def index_arrays(self, index) -> dict:
+        return {"maxg": np.asarray(index["maxg"], dtype=np.int64)}
+
+    def index_from_arrays(self, ds: ANNDataset, build_params: dict,
+                          arrays: dict):
+        return {"maxg": int(arrays["maxg"])}
+
     def search(self, fx, index, qvecs, qbms, pred: Predicate, k: int,
                search_params: dict):
         ds = fx.ds

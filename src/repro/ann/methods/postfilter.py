@@ -59,6 +59,18 @@ class PostFilter(engine.Method):
         return build_ivf(ds.vectors, int(build_params.get("nlist", 128)),
                          seed=13)
 
+    def index_arrays(self, index: IVFIndex) -> dict:
+        return {"centroids": index.centroids,
+                "centroid_norms": index.centroid_norms,
+                "lists": index.lists, "list_len": index.list_len}
+
+    def index_from_arrays(self, ds: ANNDataset, build_params: dict,
+                          arrays: dict) -> IVFIndex:
+        return IVFIndex(centroids=arrays["centroids"],
+                        centroid_norms=arrays["centroid_norms"],
+                        lists=arrays["lists"],
+                        list_len=arrays["list_len"])
+
     def search(self, fx, index: IVFIndex, qvecs, qbms, pred: Predicate,
                k: int, search_params: dict):
         dev = fx.device

@@ -43,6 +43,13 @@ class PreFilter(engine.Method):
     def build(self, ds: ANNDataset, build_params: dict):
         return None
 
+    def index_arrays(self, index) -> dict:
+        return {}          # stateless build: persists as nothing
+
+    def index_from_arrays(self, ds: ANNDataset, build_params: dict,
+                          arrays: dict):
+        return None
+
     def search(self, fx, index, qvecs, qbms, pred: Predicate, k: int,
                search_params: dict):
         dev = fx.device

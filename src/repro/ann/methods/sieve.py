@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.ann import engine, topk
 from repro.ann.dataset import ANNDataset
-from repro.ann.ivf import build_ivf
+from repro.ann.ivf import IVFIndex, build_ivf
 from repro.ann.methods.postfilter import _search as _post_search
 from repro.ann.predicates import Predicate
 
@@ -87,6 +87,30 @@ class Sieve(engine.Method):
         return {"rows": rows, "row_of": row_of, "row_len":
                 np.array([len(members[l]) for l in mat_labels] or [0]),
                 "ivf": ivf, "cap": cap}
+
+    def index_arrays(self, index) -> dict:
+        labels = np.array(sorted(index["row_of"]), dtype=np.int64)
+        ivf = index["ivf"]
+        return {"rows": index["rows"], "row_len": index["row_len"],
+                "cap": np.asarray(index["cap"], dtype=np.int64),
+                "row_of_labels": labels,
+                "row_of_rows": np.array(
+                    [index["row_of"][int(l)] for l in labels],
+                    dtype=np.int64),
+                "ivf_centroids": ivf.centroids,
+                "ivf_centroid_norms": ivf.centroid_norms,
+                "ivf_lists": ivf.lists, "ivf_list_len": ivf.list_len}
+
+    def index_from_arrays(self, ds, build_params: dict, arrays: dict):
+        row_of = {int(l): int(r) for l, r in zip(arrays["row_of_labels"],
+                                                 arrays["row_of_rows"])}
+        ivf = IVFIndex(centroids=arrays["ivf_centroids"],
+                       centroid_norms=arrays["ivf_centroid_norms"],
+                       lists=arrays["ivf_lists"],
+                       list_len=arrays["ivf_list_len"])
+        return {"rows": arrays["rows"], "row_of": row_of,
+                "row_len": arrays["row_len"], "ivf": ivf,
+                "cap": int(arrays["cap"])}
 
     def search(self, fx, index, qvecs, qbms, pred: Predicate, k: int,
                search_params: dict):

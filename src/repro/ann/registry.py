@@ -144,6 +144,25 @@ def get_method(name: str):
     return default_registry().get(name)
 
 
+def serialize_index(method, index) -> dict | None:
+    """Persistable array form of a built index, resolving method names
+    through the default registry. Returns a dict of numpy arrays when
+    the method supports (de)serialization (`Method.index_arrays`), else
+    None — the caller records the build key and rebuilds from the
+    dataset on load."""
+    if isinstance(method, str):
+        method = get_method(method)
+    return method.index_arrays(index)
+
+
+def deserialize_index(method, ds, build_params: dict, arrays: dict):
+    """Restore a built index from `serialize_index` output (method name
+    or instance; `build_params` as passed to `Method.build`)."""
+    if isinstance(method, str):
+        method = get_method(method)
+    return method.index_from_arrays(ds, dict(build_params), dict(arrays))
+
+
 def candidate_methods() -> RegistryView:
     """Live view of the router's candidate pool."""
     return default_registry().view(candidates_only=True)

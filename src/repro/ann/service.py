@@ -143,6 +143,13 @@ class RouterService:
                     else self.index.run_method(method, setting, sub))
                 ids[idxs] = g_ids
                 raw[idxs] = g_raw
+            # stable external keys resolve inside the batch snapshot, so
+            # a compaction can't remap rows between search and key lookup
+            kf = getattr(self.index, "keys_of", None)
+            keys = None
+            if callable(kf):
+                keys = (kf(ids, snapshot=snap) if snap is not None
+                        else kf(ids))
         finally:
             if snap is not None:
                 snap.release()
@@ -154,7 +161,7 @@ class RouterService:
             ids=ids,
             distances=exact_distances(raw, ids, batch.vectors),
             decisions=list(decisions),
-            timings=timings)
+            timings=timings, keys=keys)
 
     def search(self, batch: QueryBatch, *,
                t: float | None = None) -> SearchResult:
@@ -202,12 +209,15 @@ class RouterService:
                 timings[key] = timings.get(key, 0.0) + val
             dec = np.empty(len(res.decisions), dtype=object)
             dec[:] = res.decisions
-            return res.ids, res.distances, dec
+            keys = (res.keys if res.keys is not None
+                    else np.full(res.ids.shape, -1, np.int64))
+            return res.ids, res.distances, dec, keys
 
-        ids, dists, dec = engine.run_chunked(
+        ids, dists, dec, keys = engine.run_chunked(
             fn, batch.q, batch.vectors, batch.bitmaps, chunk=chunk)
         return SearchResult(ids=ids, distances=dists,
-                            decisions=list(dec), timings=timings)
+                            decisions=list(dec), timings=timings,
+                            keys=keys)
 
     # ---- transparency -----------------------------------------------------
     def explain(self, batch: QueryBatch, *,
@@ -276,11 +286,15 @@ class QueryResult(NamedTuple):
     * `ids` — [k] int32 base ids, −1 padded;
     * `distances` — [k] float32 exact squared-L2 (NaN at −1 pad);
     * `decision` — the query's `RoutingDecision` (None when the queue
-      serves a fixed method instead of a routed service).
+      serves a fixed method instead of a routed service);
+    * `keys` — [k] int64 stable external keys (−1 pad; None when the
+      backend has no key layer). Hold these across compactions and
+      restarts instead of `ids`.
     """
     ids: np.ndarray
     distances: np.ndarray
     decision: RoutingDecision | None
+    keys: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -577,7 +591,9 @@ class AsyncBatchQueue:
                         if not req.future.done():   # caller may have cancelled
                             req.future.set_result(QueryResult(
                                 ids=res.ids[j], distances=res.distances[j],
-                                decision=dec))
+                                decision=dec,
+                                keys=(res.keys[j] if res.keys is not None
+                                      else None)))
                 except BaseException as e:   # propagate to exactly this group
                     for req in reqs:
                         if not req.future.done():

@@ -235,7 +235,16 @@ class ShardedFilteredIndex:
         dt = time.perf_counter() - t0
         return SearchResult(
             ids=ids, distances=exact_distances(raw, ids, batch.vectors),
-            decisions=None, timings={"search_s": dt, "total_s": dt})
+            decisions=None, timings={"search_s": dt, "total_s": dt},
+            keys=self.keys_of(ids))
+
+    # ---- stable external keys -------------------------------------------
+    def keys_of(self, ids) -> np.ndarray:
+        """Stable external keys for global result ids: identity on a
+        sealed sharded index (rows never remap), −1 stays −1 — same
+        surface as the live handles."""
+        ids = np.asarray(ids, dtype=np.int64)
+        return np.where(ids >= 0, ids, np.int64(-1))
 
     # ---- maintenance -----------------------------------------------------
     def evict(self, method_name: str | None = None) -> int:

@@ -43,6 +43,54 @@ _WEIGHTS = "weights.npz"
 _TABLE = "table.json"
 
 
+def artifact_versions(path: str) -> dict:
+    """Version + content stamps of a router artifact directory, without
+    loading it: ``{"router_version": int, "table_version": int,
+    "content_sha1": str}``.
+
+    The format versions catch an artifact written by a different code
+    era; the content digest (sha1 over the manifest, weights and table
+    bytes) catches an artifact that was re-trained or swapped in place
+    — same format, different router. `repro.ann.store.IndexStore`
+    records all three at link time and re-validates the triple on every
+    `open()`, so an index can never silently serve through a router or
+    benchmark table that changed under it. Raises ValueError if `path`
+    is not a router artifact directory.
+    """
+    import hashlib
+
+    from repro.ann.dataset import sha1_file
+    from repro.core.table import table_file_version
+
+    manifest_path = os.path.join(path, _MANIFEST)
+    if not os.path.isdir(path) or not os.path.exists(manifest_path):
+        raise ValueError(
+            f"{path!r} is not a router artifact directory (no {_MANIFEST})")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != ARTIFACT_FORMAT:
+        raise ValueError(
+            f"{path!r} is not a {ARTIFACT_FORMAT} artifact "
+            f"(format={manifest.get('format')!r})")
+    table_path = os.path.join(path, manifest.get("table", _TABLE))
+    if not os.path.exists(table_path):
+        raise ValueError(
+            f"router artifact {path!r} is missing its benchmark table "
+            f"file {os.path.basename(table_path)!r}")
+    # combined digest of per-file chunked hashes (constant memory)
+    h = hashlib.sha1()
+    for fname in (_MANIFEST, manifest.get("weights", _WEIGHTS),
+                  manifest.get("table", _TABLE)):
+        fpath = os.path.join(path, fname)
+        if os.path.exists(fpath):
+            h.update(sha1_file(fpath).encode())
+    return {
+        "router_version": int(manifest.get("version", -1)),
+        "table_version": table_file_version(table_path),
+        "content_sha1": h.hexdigest(),
+    }
+
+
 @dataclasses.dataclass
 class MLRouter:
     feature_names: list            # e.g. F.MINIMAL_FEATURES

@@ -11,6 +11,24 @@ from __future__ import annotations
 import dataclasses
 import json
 
+# version-stamped table file (legacy bare-list files read as version 0);
+# `repro.ann.store` validates this stamp against the one recorded at
+# link time so a store never routes with a silently-swapped table.
+TABLE_FORMAT = "repro.benchmark-table"
+TABLE_VERSION = 1
+
+
+def table_file_version(path: str) -> int:
+    """Version stamp of a saved table file (0 for the legacy bare-list
+    format). Raises ValueError if the file is not a benchmark table."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):
+        return 0
+    if isinstance(data, dict) and data.get("format") == TABLE_FORMAT:
+        return int(data.get("version", -1))
+    raise ValueError(f"{path!r} is not a benchmark table file")
+
 
 @dataclasses.dataclass
 class BenchmarkTable:
@@ -75,15 +93,32 @@ class BenchmarkTable:
 
     # ---- persistence ----
     def save(self, path: str) -> None:
+        """Write the version-stamped table file (format, version, rows)."""
         rows = [{"ds": k[0], "pt": k[1], "method": k[2], "ps": k[3], **v}
                 for k, v in self.entries.items()]
         with open(path, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump({"format": TABLE_FORMAT, "version": TABLE_VERSION,
+                       "rows": rows}, f, indent=1)
 
     @staticmethod
     def load(path: str) -> "BenchmarkTable":
+        """Read a saved table: the stamped format, or the legacy bare
+        list (version 0). Raises ValueError for a newer-than-supported
+        version."""
         with open(path) as f:
-            rows = json.load(f)
+            data = json.load(f)
+        if isinstance(data, dict):
+            if data.get("format") != TABLE_FORMAT:
+                raise ValueError(
+                    f"{path!r} is not a {TABLE_FORMAT} file "
+                    f"(format={data.get('format')!r})")
+            if int(data.get("version", -1)) > TABLE_VERSION:
+                raise ValueError(
+                    f"table file version {data['version']} is newer than "
+                    f"supported version {TABLE_VERSION}")
+            rows = data["rows"]
+        else:
+            rows = data            # legacy pre-stamp list
         t = BenchmarkTable.new()
         for r in rows:
             t.add(r["ds"], r["pt"], r["method"], r["ps"], r["recall"], r["qps"])

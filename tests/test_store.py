@@ -1,0 +1,541 @@
+"""The durable storage subsystem: segment files, the write-ahead log,
+manifest-committed generations, stable external keys, and crash
+recovery (torn WAL tails, kill-mid-checkpoint, replay-vs-clean-save
+equivalence)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ann.dataset import ANNDataset
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.live import LiveFilteredIndex, ShardedLiveIndex
+from repro.ann.predicates import Predicate, eval_predicate_np
+from repro.ann.service import RouterService
+from repro.ann.store import IndexStore, WriteAheadLog
+
+ALL_PREDS = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+
+
+def _assert_same_result(res, want):
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_allclose(res.distances, want.distances,
+                               rtol=1e-5, atol=1e-5, equal_nan=True)
+    np.testing.assert_array_equal(res.keys, want.keys)
+
+
+def _mixed_ops(live, ds, rng):
+    """A deterministic upsert/delete mix (returns the new ids)."""
+    new_v = ds.vectors[:90] + np.float32(0.01)
+    ids_a = live.upsert(new_v[:50], ds.bitmaps[:50])
+    live.delete(ids_a[::7])
+    live.delete(np.arange(0, 30, 5))          # base tombstones
+    ids_b = live.upsert(new_v[50:], ds.bitmaps[50:90])
+    live.delete(ids_b[:3])
+    return np.concatenate([ids_a, ids_b])
+
+
+def _live_oracle(vectors, bitmaps, tomb, qv, qb, pred, k):
+    """Exact masked top-k ids over an explicit (rows, tombstones) state."""
+    norms = np.sum(vectors.astype(np.float64) ** 2, axis=1)
+    out = np.full((qv.shape[0], k), -1, np.int32)
+    for qi in range(qv.shape[0]):
+        ok = eval_predicate_np(bitmaps, qb[qi][None], pred) & ~tomb
+        idx = np.nonzero(ok)[0]
+        if not idx.size:
+            continue
+        d = norms[idx] - 2.0 * vectors[idx] @ qv[qi].astype(np.float64)
+        o = np.argsort(d, kind="stable")[:k]
+        out[qi, : o.size] = idx[o]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# segment files
+# ---------------------------------------------------------------------------
+
+def test_segment_roundtrip_memmap(tmp_path, tiny_ds):
+    seg = str(tmp_path / "seg")
+    meta = tiny_ds.save_segment(seg)
+    assert meta["n"] == tiny_ds.n and meta["files"]["vectors"]["sha1"]
+    ds2 = ANNDataset.load_segment(seg)                  # memmap'd
+    assert isinstance(ds2.vectors, np.memmap)
+    np.testing.assert_array_equal(ds2.vectors, tiny_ds.vectors)
+    np.testing.assert_array_equal(ds2.bitmaps, tiny_ds.bitmaps)
+    np.testing.assert_array_equal(ds2.group_start, tiny_ds.group_start)
+    assert ds2.group_lookup == tiny_ds.group_lookup
+    # verify=True passes on an intact segment
+    ANNDataset.load_segment(seg, verify=True)
+
+
+def test_segment_detects_corruption(tmp_path, tiny_ds):
+    seg = str(tmp_path / "seg")
+    tiny_ds.save_segment(seg)
+    vec = os.path.join(seg, "vectors.npy")
+    with open(vec, "r+b") as f:                         # size-preserving flip
+        f.seek(os.path.getsize(vec) - 4)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(ValueError, match="sha1"):
+        ANNDataset.load_segment(seg, verify=True)
+    with open(vec, "ab") as f:                          # size change
+        f.write(b"x")
+    with pytest.raises(ValueError, match="bytes"):
+        ANNDataset.load_segment(seg)
+
+
+# ---------------------------------------------------------------------------
+# write-ahead log
+# ---------------------------------------------------------------------------
+
+def test_wal_record_roundtrip(tmp_path, rng):
+    p = str(tmp_path / "w.log")
+    wal = WriteAheadLog.create(p, dim=4, width=2, generation=3)
+    vec = rng.normal(size=(5, 4)).astype(np.float32)
+    bm = rng.integers(0, 2 ** 16, size=(5, 2)).astype(np.uint32)
+    keys = np.arange(100, 105, dtype=np.int64)
+    wal.log_upsert(3, keys, vec, bm)
+    wal.log_delete(3, np.array([7, 9], np.int64))
+    wal.log_compact(3)
+    wal.close()
+    recs = WriteAheadLog.replay(p, dim=4, width=2)
+    assert [r.kind for r in recs] == ["upsert", "delete", "compact"]
+    np.testing.assert_array_equal(recs[0].keys, keys)
+    np.testing.assert_array_equal(recs[0].vectors, vec)
+    np.testing.assert_array_equal(recs[0].bitmaps, bm)
+    np.testing.assert_array_equal(recs[1].ids, [7, 9])
+    assert recs[2].gen == 3
+    # dim/width mismatch refuses to replay
+    with pytest.raises(ValueError, match="dim"):
+        WriteAheadLog.replay(p, dim=8, width=2)
+
+
+@pytest.mark.parametrize("cut", [1, 10, 20])
+def test_wal_torn_tail_truncates_to_last_good_record(tmp_path, rng, cut):
+    p = str(tmp_path / "w.log")
+    wal = WriteAheadLog.create(p, dim=4, width=1, generation=0)
+    for i in range(3):
+        wal.log_upsert(0, np.array([i], np.int64),
+                       rng.normal(size=(1, 4)).astype(np.float32),
+                       np.ones((1, 1), np.uint32))
+    wal.close()
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.truncate(size - cut)                         # tear mid-record
+    recs = WriteAheadLog.replay(p, dim=4, width=1)
+    assert len(recs) == 2                              # last record dropped
+    # truncation repaired the file: appends after recovery stay readable
+    wal = WriteAheadLog.open_append(p, dim=4, width=1)
+    wal.log_delete(0, np.array([0], np.int64))
+    wal.close()
+    recs = WriteAheadLog.replay(p, dim=4, width=1)
+    assert [r.kind for r in recs] == ["upsert", "upsert", "delete"]
+
+
+def test_wal_sync_every_batches_fsync(tmp_path):
+    wal = WriteAheadLog.create(str(tmp_path / "w.log"), dim=2, width=1,
+                               generation=0, sync_every=8)
+    for _ in range(5):
+        wal.log_delete(0, np.array([0], np.int64))
+    assert wal._since_sync == 5                        # still batched
+    wal.sync()
+    assert wal._since_sync == 0
+    wal.close()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: save → reopen is bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_roundtrip_bit_identical_to_never_persisted(tmp_path, tiny_ds,
+                                                    tiny_queries, rng,
+                                                    pred):
+    """build → upsert/delete mix → save → reopen equals the
+    never-persisted index exactly: ids, distances and keys, for every
+    predicate."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    with LiveFilteredIndex(tiny_ds) as ref:
+        _mixed_ops(ref, tiny_ds, rng)
+        want = ref.search(batch, "prefilter")
+        with IndexStore.create(str(tmp_path / "s"),
+                               LiveFilteredIndex(tiny_ds)) as st:
+            _mixed_ops(st.index, tiny_ds, rng)
+            _assert_same_result(st.index.search(batch, "prefilter"), want)
+        with IndexStore.open(str(tmp_path / "s")) as st2:
+            _assert_same_result(st2.index.search(batch, "prefilter"), want)
+
+
+def test_wal_replayed_equals_clean_checkpoint(tmp_path, tiny_ds,
+                                              tiny_queries, rng):
+    """A store recovered purely from WAL replay equals one that
+    checkpointed cleanly after the same operations."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    for name, clean in (("dirty", False), ("clean", True)):
+        with IndexStore.create(str(tmp_path / name),
+                               LiveFilteredIndex(tiny_ds)) as st:
+            _mixed_ops(st.index, tiny_ds, rng)
+            if clean:
+                st.checkpoint()
+    with IndexStore.open(str(tmp_path / "dirty")) as a, \
+            IndexStore.open(str(tmp_path / "clean")) as b:
+        assert a.stats()["replayed_records"] > 0
+        # the clean store's WAL holds only the checkpoint-seeded residual
+        # delta, fewer records than the dirty store's full op history
+        assert 0 < b.stats()["replayed_records"] \
+            < a.stats()["replayed_records"]
+        _assert_same_result(a.index.search(batch, "prefilter"),
+                            b.index.search(batch, "prefilter"))
+        np.testing.assert_array_equal(a.index._keys, b.index._keys)
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_recover_then_search_equals_live_oracle(tmp_path, tiny_ds,
+                                               tiny_queries, rng, pred):
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    with IndexStore.create(str(tmp_path / "s"),
+                           LiveFilteredIndex(tiny_ds)) as st:
+        new_ids = _mixed_ops(st.index, tiny_ds, rng)
+        snap = st.index.snapshot()
+        rows_v = np.concatenate([tiny_ds.vectors,
+                                 tiny_ds.vectors[:90] + np.float32(0.01)])
+        rows_b = np.concatenate([tiny_ds.bitmaps, tiny_ds.bitmaps[:90]])
+        tomb = snap.tombstones.copy()
+        snap.release()
+    with IndexStore.open(str(tmp_path / "s")) as st2:
+        res = st2.index.search(batch, "prefilter")
+        want = _live_oracle(rows_v, rows_b, tomb, qs.vectors, qs.bitmaps,
+                            pred, 10)
+        np.testing.assert_array_equal(res.ids, want)
+        assert new_ids.size                            # ops really ran
+
+
+def test_stable_keys_across_upsert_compact_reopen(tmp_path, tiny_ds,
+                                                  tiny_queries, rng):
+    """The PR-4 follow-up: client-visible keys survive compaction AND
+    restart, while row ids get remapped underneath."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with IndexStore.create(str(tmp_path / "s"),
+                           LiveFilteredIndex(tiny_ds)) as st:
+        _mixed_ops(st.index, tiny_ds, rng)
+        before = st.index.search(batch, "prefilter")
+        vec_of_key = {}                    # what each key pointed at
+        for key, rid in zip(before.keys.ravel(), before.ids.ravel()):
+            if rid >= 0:
+                vec_of_key[int(key)] = st.index.fetch([rid])[0].copy()
+        st.index.compact()
+        after = st.index.search(batch, "prefilter")
+        np.testing.assert_array_equal(after.keys, before.keys)
+        assert not np.array_equal(after.ids, before.ids)   # ids remapped
+    with IndexStore.open(str(tmp_path / "s")) as st2:
+        again = st2.index.search(batch, "prefilter")
+        np.testing.assert_array_equal(again.keys, before.keys)
+        # and every key still resolves to the same vector
+        for key, vec in vec_of_key.items():
+            row = st2.index.rows_of([key])[0]
+            assert row >= 0
+            np.testing.assert_allclose(st2.index.fetch([row])[0], vec,
+                                       rtol=1e-6)
+
+
+def test_kill_mid_compaction_recovers_old_generation(tmp_path, tiny_ds,
+                                                     tiny_queries, rng,
+                                                     monkeypatch):
+    """A crash after the new segment is written but before the manifest
+    rename must leave the store serving the old generation (plus WAL),
+    and `open()` sweeps the orphaned segment directory."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    # never-persisted reference that compacts the same state
+    with LiveFilteredIndex(tiny_ds) as ref:
+        _mixed_ops(ref, tiny_ds, rng)
+        ref.compact()
+        want = ref.search(batch, "prefilter")
+    st = IndexStore.create(str(tmp_path / "s"), LiveFilteredIndex(tiny_ds))
+    _mixed_ops(st.index, tiny_ds, rng)
+    pre_crash = st.index.search(batch, "prefilter")
+
+    class Boom(Exception):
+        pass
+
+    def crash(self, manifest):
+        raise Boom()
+
+    monkeypatch.setattr(IndexStore, "_commit_manifest", crash)
+    with pytest.raises(Boom):
+        st.compact()                       # live compact ok, commit "dies"
+    monkeypatch.undo()
+    seg_root = str(tmp_path / "s" / "segments")
+    # an in-process failure cleans its own half-written files (no leak,
+    # and the pinned snapshot was released)...
+    assert len(os.listdir(seg_root)) == 1
+    assert st._index.stats()["retired_generations"] == []
+    st._wal.close()
+    st._index.close()
+    # ...while a hard kill leaves debris on disk — plant it and check
+    # open() sweeps everything the manifest does not reference
+    import shutil as _sh
+    _sh.copytree(os.path.join(seg_root, os.listdir(seg_root)[0]),
+                 os.path.join(seg_root, "gen-000099"))
+    with open(str(tmp_path / "s" / "wal" / "wal-000099.log"), "wb") as f:
+        f.write(b"debris")
+    with IndexStore.open(str(tmp_path / "s")) as st2:
+        assert len(os.listdir(seg_root)) == 1          # orphan swept
+        assert os.listdir(str(tmp_path / "s" / "wal")) == \
+            [os.path.basename(st2.manifest["wal"])]
+        with open(str(tmp_path / "s" / "MANIFEST.json")) as f:
+            assert json.load(f)["store_generation"] == 0
+        # the WAL's compact barrier replays the compaction, so recovered
+        # state is bit-identical to the reference that compacted the
+        # same ops — and the stable keys match what clients saw before
+        # the crash
+        res = st2.index.search(batch, "prefilter")
+        _assert_same_result(res, want)
+        np.testing.assert_array_equal(res.keys, pre_crash.keys)
+        assert st2.index.generation == 1
+
+
+def test_replay_translates_deletes_of_rows_upserted_during_compaction(
+        tmp_path, tiny_ds, tiny_queries):
+    """Ops that raced a compaction: an upsert after the barrier's
+    snapshot and a delete of that very row, both logged at the old
+    generation. Replay must translate the delete to the row's new-delta
+    id (it is past the remap's range), not crash or drop it."""
+    from repro.ann.store import WriteAheadLog
+
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    p = str(tmp_path / "s")
+    st = IndexStore.create(p, LiveFilteredIndex(tiny_ds))
+    n0 = st.index.n_total
+    next_key = st.index.stats()["next_key"]
+    wal_path = os.path.join(p, st.manifest["wal"])
+    st.close()
+    # splice the race into the log by hand (deterministic interleaving):
+    # barrier, then a tail upsert and its delete, all at generation 0
+    wal = WriteAheadLog.open_append(wal_path, dim=tiny_ds.dim,
+                                    width=tiny_ds.bitmaps.shape[1])
+    wal.log_compact(0)
+    wal.log_upsert(0, np.array([next_key], np.int64),
+                   tiny_ds.vectors[:1] + np.float32(0.5),
+                   tiny_ds.bitmaps[:1])
+    wal.log_delete(0, np.array([n0], np.int64))     # the tail row's id
+    wal.close()
+    with IndexStore.open(p) as st2:
+        assert st2.index.generation == 1
+        assert st2.index.n_live == tiny_ds.n        # tail row is dead
+        res = st2.index.search(batch, "prefilter")
+        want = FilteredIndex(tiny_ds).search(batch, "prefilter")
+        np.testing.assert_array_equal(res.ids, want.ids)
+
+
+def test_replay_tail_delete_when_compaction_collapses_below_shards(
+        tmp_path, tiny_ds):
+    """Degenerate sharded compaction: survivors < shard count, so the
+    replayed compact puts them back as delta (base_n = 0). A raced
+    delete of a tail row must still land on the tail row — not on a
+    survivor (which would silently vanish a live vector)."""
+    from repro.ann.store import WriteAheadLog
+
+    p = str(tmp_path / "s")
+    st = IndexStore.create(p, ShardedLiveIndex(tiny_ds, 2))
+    st.index.delete(np.arange(tiny_ds.n - 1))     # one survivor: last row
+    survivor_key = tiny_ds.n - 1
+    next_key = st.index.stats()["next_key"]
+    wal_path = os.path.join(p, st.manifest["wal"])
+    st.close()
+    wal = WriteAheadLog.open_append(wal_path, dim=tiny_ds.dim,
+                                    width=tiny_ds.bitmaps.shape[1])
+    wal.log_compact(0)                            # barrier at gen 0
+    wal.log_upsert(0, np.array([next_key], np.int64),
+                   tiny_ds.vectors[:1] + np.float32(0.5),
+                   tiny_ds.bitmaps[:1])           # tail row, old-gen id n
+    wal.log_delete(0, np.array([tiny_ds.n], np.int64))
+    wal.close()
+    with IndexStore.open(p) as st2:
+        assert st2.index.generation == 1
+        assert st2.index.n_live == 1              # survivor, not the tail
+        assert st2.index.rows_of([survivor_key])[0] >= 0
+        # the one live row must still be the survivor's vector
+        probe = QueryBatch(tiny_ds.vectors[-1:], tiny_ds.bitmaps[-1:],
+                           Predicate.AND, 1)
+        res = st2.index.search(probe, "prefilter")
+        assert res.keys[0, 0] == survivor_key
+        np.testing.assert_allclose(res.distances[0, 0], 0.0, atol=1e-3)
+
+
+def test_wal_midlog_corruption_refuses_truncation(tmp_path):
+    p = str(tmp_path / "w.log")
+    wal = WriteAheadLog.create(p, dim=2, width=1, generation=0)
+    for i in range(3):
+        wal.log_delete(0, np.array([i], np.int64))
+    wal.close()
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:                     # flip a byte mid-log
+        f.seek(24 + 21 + 4)                       # inside record 0 payload
+        b = f.read(1)
+        f.seek(24 + 21 + 4)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ValueError, match="mid-log corruption"):
+        WriteAheadLog.replay(p, dim=2, width=1)
+    assert os.path.getsize(p) == size             # nothing was truncated
+
+
+def test_router_content_swap_detected(tmp_path, tiny_ds, toy_router):
+    """Same format versions but re-saved content (a re-trained router /
+    swapped table) must also fail validation, naming the digests."""
+    rdir = str(tmp_path / "router")
+    toy_router.save(rdir)
+    store_dir = str(tmp_path / "s")
+    IndexStore.create(store_dir, LiveFilteredIndex(tiny_ds),
+                      router_dir=rdir).close()
+    # re-train: same artifact format, different weights/table content
+    toy_router.table.add(tiny_ds.name, 0, toy_router.methods[0],
+                         "swapped", recall=0.5, qps=1.0)
+    toy_router.save(rdir)
+    with pytest.raises(ValueError, match="content changed"):
+        IndexStore.open(store_dir)
+    with IndexStore.open(store_dir, router_dir=rdir) as st:   # re-link
+        assert st.load_router() is not None
+
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_roundtrip_and_compact(tmp_path, tiny_ds, tiny_queries,
+                                       rng, n_shards):
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.OR, 10)
+    with ShardedLiveIndex(tiny_ds, n_shards) as ref:
+        _mixed_ops(ref, tiny_ds, rng)
+        want = ref.search(batch, "prefilter")
+        with IndexStore.create(str(tmp_path / "s"),
+                               ShardedLiveIndex(tiny_ds, n_shards)) as st:
+            _mixed_ops(st.index, tiny_ds, rng)
+        with IndexStore.open(str(tmp_path / "s")) as st2:
+            assert st2.index.n_shards == n_shards
+            _assert_same_result(st2.index.search(batch, "prefilter"), want)
+            ref.compact()
+            st2.compact()
+            want2 = ref.search(batch, "prefilter")
+            _assert_same_result(st2.index.search(batch, "prefilter"),
+                                want2)
+        # reopen the compacted generation
+        with IndexStore.open(str(tmp_path / "s")) as st3:
+            _assert_same_result(st3.index.search(batch, "prefilter"),
+                                want2)
+
+
+# ---------------------------------------------------------------------------
+# built indexes, router stamps, keys surface
+# ---------------------------------------------------------------------------
+
+def test_built_indexes_rebuilt_on_load(tmp_path, tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with IndexStore.create(str(tmp_path / "s"),
+                           LiveFilteredIndex(tiny_ds)) as st:
+        want = st.index.search(batch, "ivf_gamma")
+        st.index.search(batch, "labelnav")
+        st.checkpoint()
+        built = {b[0]: b[2] for b in st.manifest["built"]}
+        assert built["ivf_gamma"] is not None          # persisted as npz
+    with IndexStore.open(str(tmp_path / "s")) as st2:
+        assert sorted(k[0] for k in st2.index.built_keys()) == \
+            ["ivf_gamma", "labelnav"]
+        _assert_same_result(st2.index.search(batch, "ivf_gamma"), want)
+
+
+def test_router_version_stamp_validated(tmp_path, tiny_ds, toy_router):
+    rdir = str(tmp_path / "router")
+    toy_router.save(rdir)
+    store_dir = str(tmp_path / "s")
+    with IndexStore.create(store_dir, LiveFilteredIndex(tiny_ds),
+                           router_dir=rdir) as st:
+        assert st.manifest["router"]["router_version"] == 1
+        assert st.manifest["router"]["table_version"] == 1
+        assert st.load_router().methods == toy_router.methods
+    IndexStore.open(store_dir).close()                 # stamps validate
+    # re-stamp the artifact underneath the store -> open names both pairs
+    rj = os.path.join(rdir, "router.json")
+    with open(rj) as f:
+        man = json.load(f)
+    man["version"] = 0
+    with open(rj, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match=r"router v0.*router v1"):
+        IndexStore.open(store_dir)
+    # explicit relink is the sanctioned migration path
+    with IndexStore.open(store_dir, router_dir=rdir) as st:
+        assert st.manifest["router"]["router_version"] == 0
+    # a deleted artifact directory also fails with the migration hint
+    for f_ in os.listdir(rdir):
+        os.remove(os.path.join(rdir, f_))
+    os.rmdir(rdir)
+    with pytest.raises(ValueError, match="link_router"):
+        IndexStore.open(store_dir)
+
+
+def test_search_results_carry_stable_keys(tmp_path, tiny_ds, tiny_index,
+                                          tiny_queries, toy_router):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    # sealed index: keys are the row ids
+    res = tiny_index.search(batch, "prefilter")
+    np.testing.assert_array_equal(res.keys, res.ids.astype(np.int64))
+    # routed serving surfaces keys end to end (live handle)
+    with LiveFilteredIndex(tiny_ds) as live:
+        svc = RouterService(live, toy_router, t=0.9)
+        routed = svc.search(batch)
+        np.testing.assert_array_equal(
+            routed.keys, live.keys_of(routed.ids))
+        assert routed.keys.dtype == np.int64
+
+
+def test_key_api_rejects_duplicates_and_resolves(tiny_ds):
+    with LiveFilteredIndex(tiny_ds) as live:
+        ids = live.upsert(tiny_ds.vectors[:2], tiny_ds.bitmaps[:2],
+                          keys=[1000, 1001])
+        np.testing.assert_array_equal(live.rows_of([1000, 1001, 42]),
+                                      [ids[0], ids[1], 42])
+        with pytest.raises(ValueError, match="already names a live row"):
+            live.upsert(tiny_ds.vectors[:1], tiny_ds.bitmaps[:1],
+                        keys=[1000])
+        assert live.delete_keys([1000]) == 1
+        # a dead key may be re-pointed
+        nid = live.upsert(tiny_ds.vectors[:1], tiny_ds.bitmaps[:1],
+                          keys=[1000])
+        assert live.rows_of([1000])[0] == nid[0]
+        with pytest.raises(KeyError):
+            live.delete_keys([999999])
+
+
+def test_create_refuses_existing_store_and_open_refuses_nonstore(tmp_path,
+                                                                 tiny_ds):
+    p = str(tmp_path / "s")
+    IndexStore.create(p, LiveFilteredIndex(tiny_ds)).close()
+    with pytest.raises(ValueError, match="already an index store"):
+        IndexStore.create(p, LiveFilteredIndex(tiny_ds))
+    with pytest.raises(ValueError, match="not an index store"):
+        IndexStore.open(str(tmp_path / "nope"))
+
+
+def test_empty_store_grows_and_recovers(tmp_path, tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    p = str(tmp_path / "s")
+    with IndexStore.create(p, name=tiny_ds.name, dim=tiny_ds.dim,
+                           universe=tiny_ds.universe) as st:
+        st.index.upsert(tiny_ds.vectors, tiny_ds.bitmaps)
+    with IndexStore.open(p) as st2:
+        assert st2.index.n_live == tiny_ds.n
+        st2.index.compact()                # seals the delta into a base
+        st2.checkpoint()
+        want = st2.index.search(batch, "prefilter")
+    with IndexStore.open(p) as st3:
+        assert st3.index.base_n == tiny_ds.n
+        assert st3.stats()["replayed_records"] == 0
+        _assert_same_result(st3.index.search(batch, "prefilter"), want)
