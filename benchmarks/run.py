@@ -27,6 +27,12 @@ import traceback
 
 # allowed slowdown of latest vs previous recorded run before --check fails
 CHECK_TOLERANCE = 1.25
+# absolute gates (history-independent): fused live search at 50% delta
+# fill vs the same corpus compacted into a sealed base (pure liveness
+# overhead — both sides serve identical rows), and graft-compaction
+# wall-clock growth relative to linear-in-base-size
+LIVE_SEALED_MAX = 1.5
+COMPACT_SCALING_MAX = 0.9
 
 
 def _repo_root() -> str:
@@ -76,6 +82,7 @@ def _keep_best(old: dict, new: dict) -> dict:
             ("routing_latency", ("dataset", "pred", "q"), "batched_us"),
             ("sharded_service", ("shards", "n", "q"), "batch_us"),
             ("live_index", ("n", "q"), "search_live_us"),
+            ("live_compaction", ("n_base",), "compact_ms"),
             ("store", ("n", "rows"), "cold_open_ms")]:
         old_rows = {tuple(r[c] for c in key_cols): r
                     for r in old.get(section, [])}
@@ -99,6 +106,15 @@ def _keep_best(old: dict, new: dict) -> dict:
     if rl:
         merged["routing_speedup_median"] = float(
             sorted(r["speedup"] for r in rl)[len(rl) // 2])
+    # scaling is defined within one run; recompute it from the merged
+    # per-size minima so mixed-run rows stay coherent
+    lc = merged.get("live_compaction", [])
+    if len(lc) >= 2:
+        t0, n0 = lc[0]["compact_ms"], lc[0]["n_base"]
+        for row in lc[1:]:
+            row["scaling_vs_linear"] = round(
+                (row["compact_ms"] / max(t0, 1e-9)) / (row["n_base"] / n0),
+                3)
     return merged
 
 
@@ -118,6 +134,8 @@ def run_smoke() -> None:
     print("# == smoke: live index (upserts + search under writes) ==",
           flush=True)
     rows_v, _ = bench_live.run(verbose=True, smoke=True)
+    print("# == smoke: graft compaction (2 base sizes) ==", flush=True)
+    rows_c, _ = bench_live.run_compaction(verbose=True, smoke=True)
     print("# == smoke: store (snapshot write / cold open / WAL replay) ==",
           flush=True)
     rows_t, _ = bench_store.run(verbose=True, smoke=True)
@@ -128,6 +146,7 @@ def run_smoke() -> None:
         "routing_latency": rows_l,
         "sharded_service": rows_s,
         "live_index": rows_v,
+        "live_compaction": rows_c,
         "store": rows_t,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
@@ -170,7 +189,8 @@ def run_check() -> None:
          ("batched_us", "per_query_us")),
         ("sharded_service", ("shards", "n", "q"), ("batch_us",)),
         ("live_index", ("n", "q"),
-         ("upsert_us_per_row", "search_sealed_us", "search_live_us")),
+         ("upsert_us_per_row", "search_compacted_us", "search_live_us")),
+        ("live_compaction", ("n_base",), ("compact_ms",)),
         ("store", ("n", "rows"),
          ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
     ]
@@ -204,6 +224,34 @@ def run_check() -> None:
                 print(f"  {section}{list(key)} {metric}: "
                       f"{base} -> {row[metric]} "
                       f"({ratio:.2f}x) {flag}", flush=True)
+    # absolute acceptance gates, independent of trajectory history: the
+    # fused live read path must hold <=1.5x sealed at 50% delta fill,
+    # and graft compaction must scale sublinearly in base size
+    for row in last.get("live_index", []):
+        ratio = row.get("live_sealed_ratio")
+        if ratio is None:
+            continue
+        key = [row.get("n"), row.get("q")]
+        bad = ratio > LIVE_SEALED_MAX
+        if bad:
+            failures.append(
+                f"live_index{key} live_sealed_ratio: {ratio} > "
+                f"{LIVE_SEALED_MAX} (absolute gate)")
+        print(f"  live_index{key} live_sealed_ratio: {ratio} "
+              f"(gate <= {LIVE_SEALED_MAX}) "
+              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+    comp = [r for r in last.get("live_compaction", [])
+            if "scaling_vs_linear" in r]
+    for row in comp[1:]:            # first row is its own baseline (1.0)
+        s = row["scaling_vs_linear"]
+        bad = s > COMPACT_SCALING_MAX
+        if bad:
+            failures.append(
+                f"live_compaction[{row['n_base']}] scaling_vs_linear: "
+                f"{s} > {COMPACT_SCALING_MAX} (absolute gate)")
+        print(f"  live_compaction[{row['n_base']}] scaling_vs_linear: "
+              f"{s} (gate <= {COMPACT_SCALING_MAX}) "
+              f"{'REGRESSION' if bad else 'ok'}", flush=True)
     if failures:
         print(f"check: {len(failures)} regression(s) beyond "
               f"{CHECK_TOLERANCE}x:", flush=True)

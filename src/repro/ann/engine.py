@@ -14,6 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,41 @@ from repro.ann.dataset import ANNDataset
 from repro.ann.predicates import Predicate
 
 DEFAULT_QCHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# per-call stage timing plumbing (shared by live/sharded search paths)
+# ---------------------------------------------------------------------------
+
+class StageTimings(threading.local):
+    """Thread-local per-search stage timing accumulator.
+
+    Search internals call `add(stage, seconds)`; the outermost caller
+    drains with `pop()`. Thread-local so concurrent searches (the service
+    executor, sharded fan-out threads) never cross-contaminate."""
+
+    def __init__(self):
+        self.stages: dict[str, float] = {}
+
+    def add(self, stage: str, seconds: float) -> None:
+        self.stages[stage] = self.stages.get(stage, 0.0) + seconds
+
+    def pop(self) -> dict[str, float]:
+        out = dict(self.stages)
+        self.stages.clear()
+        return out
+
+
+STAGE_TIMINGS = StageTimings()
+
+
+def stage_add(stage: str, seconds: float) -> None:
+    STAGE_TIMINGS.add(stage, seconds)
+
+
+def pop_stage_timings() -> dict[str, float]:
+    """Drain the calling thread's accumulated per-stage timings."""
+    return STAGE_TIMINGS.pop()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,3 +257,18 @@ class Method:
         ([Q, k] int32 ids with −1 pad, [Q, k] float32 ranking scores
         ‖v‖² − 2·q·v, +inf where the id is −1)."""
         raise NotImplementedError
+
+    def graft_index(self, new_ds: ANNDataset, old_index, old_ds: ANNDataset,
+                    old_to_new: np.ndarray, new_rows: np.ndarray,
+                    build_params: dict):
+        """Incremental rebuild for compaction: splice the rows of
+        `new_ds` into `old_index` via the id remap instead of building
+        from scratch.
+
+        `old_to_new` maps old row ids to new ids (−1 = deleted);
+        `new_rows` lists the new ids that did not exist in `old_ds`
+        (compacted delta rows). Returns the grafted index, or None
+        (the default) to signal the caller to fall back to a full
+        `build` — correct for every method, just linear in base size.
+        """
+        return None

@@ -37,6 +37,34 @@ class VamanaGraph:
     label_entry: np.ndarray   # [U] int32 entry point per label (−1 if unused)
 
 
+def occlusion_prune(cid: np.ndarray, cdist: np.ndarray, vectors: np.ndarray,
+                    norms: np.ndarray, alpha: float, keep_n: int) -> np.ndarray:
+    """Vectorised α-occlusion prune over candidate pools.
+
+    `cid`/`cdist` are [B, C] pools in *ascending-distance order* (−1/inf
+    pad); returns [B, keep_n] selected edge targets (−1 pad): candidate j
+    is dropped iff some closer candidate u occludes it (α·d(u,j) < d(q,j)).
+    Shared by the offline build and `graft_graph`.
+    """
+    b, c = cid.shape
+    cv = vectors[np.maximum(cid, 0)]                              # [B, C, d]
+    cn = norms[np.maximum(cid, 0)]
+    # pairwise distances among candidates
+    gram = np.einsum("bud,bjd->buj", cv, cv, optimize=True)
+    d2 = cn[:, :, None] + cn[:, None, :] - 2.0 * gram             # [B, C, C]
+    tri = np.tril(np.ones((c, c), dtype=bool), k=-1)[None]        # u < j
+    occl = tri & (alpha * d2 < cdist[:, None, :]) \
+        & (cid[:, :, None] >= 0) & (cid[:, None, :] >= 0)
+    dominated = occl.any(axis=1)                                  # [B, C]
+    keep = (~dominated) & (cid >= 0) & np.isfinite(cdist)
+    # first keep_n kept per row, in ascending-distance order
+    rank = np.where(keep, np.arange(c)[None, :], c + 1)
+    order = np.argsort(rank, axis=1, kind="stable")[:, :keep_n]
+    sel = np.take_along_axis(cid, order, axis=1)
+    selkeep = np.take_along_axis(keep, order, axis=1)
+    return np.where(selkeep, sel, -1)
+
+
 def build_graph(vectors: np.ndarray, bitmaps: np.ndarray, universe: int,
                 r: int = 32, alpha: float = 1.2, seed: int = 0,
                 n_cand: int = 64, block: int = 256,
@@ -71,22 +99,8 @@ def build_graph(vectors: np.ndarray, bitmaps: np.ndarray, universe: int,
         top = np.argsort(dq, axis=1, kind="stable")[:, :c]            # [B, C]
         cid = np.take_along_axis(pool, top, axis=1)                   # [B, C]
         cdist = np.take_along_axis(dq, top, axis=1)                   # [B, C]
-        cv = vectors[np.maximum(cid, 0)]                              # [B, C, d]
-        cn = norms[np.maximum(cid, 0)]
-        # pairwise distances among candidates
-        gram = np.einsum("bud,bjd->buj", cv, cv, optimize=True)
-        d2 = cn[:, :, None] + cn[:, None, :] - 2.0 * gram             # [B, C, C]
-        tri = np.tril(np.ones((c, c), dtype=bool), k=-1)[None]        # u < j
-        occl = tri & (alpha * d2 < cdist[:, None, :]) \
-            & (cid[:, :, None] >= 0) & (cid[:, None, :] >= 0)
-        dominated = occl.any(axis=1)                                  # [B, C]
-        keep = (~dominated) & (cid >= 0) & np.isfinite(cdist)
-        # first r kept per row, in ascending-distance order
-        rank = np.where(keep, np.arange(c)[None, :], c + 1)
-        order = np.argsort(rank, axis=1, kind="stable")[:, :max(r - n_random_edges, 1)]
-        sel = np.take_along_axis(cid, order, axis=1)
-        selkeep = np.take_along_axis(keep, order, axis=1)
-        sel = np.where(selkeep, sel, -1)
+        sel = occlusion_prune(cid, cdist, vectors, norms, alpha,
+                              max(r - n_random_edges, 1))
         neighbors[s:e, :sel.shape[1]] = sel
         # random long-range edges for connectivity
         if n_random_edges > 0:
@@ -171,3 +185,127 @@ def beam_search(qvecs, seeds, neighbors, vectors, norms, *,
     pool_ids, pool_d, expanded = jax.lax.fori_loop(
         0, iters, body, (pool_ids, pool_d, expanded))
     return pool_ids, pool_d
+
+
+def graft_graph(old: VamanaGraph, vectors: np.ndarray, bitmaps: np.ndarray,
+                universe: int, old_to_new: np.ndarray, new_rows: np.ndarray,
+                r: int = 32, alpha: float = 1.2, seed: int = 0,
+                n_cand: int = 64, n_random_edges: int = 2) -> VamanaGraph:
+    """Graft a compacted dataset onto an existing graph (FreshDiskANN-style
+    StreamingMerge) instead of rebuilding it.
+
+    Surviving rows keep their pruned edge lists with targets remapped
+    through `old_to_new`; rows that lost a target compact their
+    remaining edges leftward in order, while untouched rows keep their
+    slot layout bit-for-bit (so an identity remap reproduces the old
+    graph exactly). Each new row (`new_rows`, ids in the *new*
+    dataset) finds its edge pool by beam-searching the surviving graph
+    from the medoid — O(L·R·d) per row, independent of base size — plus
+    its nearest other new rows, then runs the same α-occlusion prune as
+    the offline build; its selected edges are back-inserted into the
+    targets' free (or farthest, if closer) slots so the new rows are
+    reachable. Label entry points recompute only for labels whose old
+    entry died; surviving entries are kept as-is (entry points only need
+    to be good seeds, not optimal ones). Deterministic for fixed inputs.
+    """
+    n = vectors.shape[0]
+    rng = np.random.default_rng(seed)
+    norms = (vectors ** 2).sum(1).astype(np.float32)
+    new_rows = np.asarray(new_rows, dtype=np.int64)
+    rr = old.neighbors.shape[1]
+
+    # 1. survivors: remap edge targets, compact dropped slots leftward
+    neighbors = np.full((n, rr), -1, dtype=np.int32)
+    surv_old = np.nonzero(old_to_new >= 0)[0]
+    if surv_old.size:
+        dst = old_to_new[surv_old]
+        nb = old.neighbors[surv_old].astype(np.int64)
+        nb_new = np.where(nb >= 0, old_to_new[np.maximum(nb, 0)],
+                          -1).astype(np.int32)
+        # compact only rows that actually lost a target: untouched rows
+        # keep their slot layout bit-for-bit (an identity remap must
+        # reproduce the old graph exactly, interior padding included)
+        died = (nb >= 0) & (nb_new < 0)
+        need = died.any(axis=1)
+        if need.any():
+            order = np.argsort(nb_new[need] < 0, axis=1, kind="stable")
+            nb_new[need] = np.take_along_axis(nb_new[need], order, axis=1)
+        neighbors[dst] = nb_new
+
+    # 2. medoid: keep if it survived, else recompute (one matvec)
+    if 0 <= old.medoid < old_to_new.shape[0] and old_to_new[old.medoid] >= 0:
+        medoid = int(old_to_new[old.medoid])
+    else:
+        medoid = int(np.argmin(norms - 2.0 * vectors @ vectors.mean(0)))
+
+    # 3. new rows: pool = beam search over the survivor graph + nearest
+    #    other new rows, then the shared occlusion prune
+    if new_rows.size:
+        b = len(new_rows)
+        nv = vectors[new_rows]
+        seeds = np.full((b, 4), -1, dtype=np.int32)
+        seeds[:, 0] = medoid
+        if surv_old.size:
+            seeds[:, 1:] = old_to_new[surv_old][
+                rng.integers(0, surv_old.size, size=(b, 3))]
+        L = max(n_cand, rr + 1)
+        pool_ids, pool_d = beam_search(
+            jnp.asarray(nv), jnp.asarray(seeds), jnp.asarray(neighbors),
+            jnp.asarray(vectors), jnp.asarray(norms),
+            l_search=L, iters=L // 2)
+        pool_ids = np.asarray(pool_ids)
+        pool_d = np.asarray(pool_d).astype(np.float32)
+        if b > 1:
+            dn = norms[new_rows][None, :] - 2.0 * (nv @ nv.T)
+            np.fill_diagonal(dn, np.inf)
+            t = min(16, b - 1)
+            nn_idx = np.argsort(dn, axis=1, kind="stable")[:, :t]
+            pool_ids = np.concatenate(
+                [pool_ids, new_rows[nn_idx].astype(np.int32)], axis=1)
+            pool_d = np.concatenate(
+                [pool_d, np.take_along_axis(dn, nn_idx, axis=1)
+                 .astype(np.float32)], axis=1)
+        merge = np.argsort(pool_d, axis=1, kind="stable")[:, :n_cand]
+        cid = np.take_along_axis(pool_ids, merge, axis=1)
+        cdist = np.take_along_axis(pool_d, merge, axis=1)
+        cid = np.where(cid == new_rows[:, None], -1, cid)
+        cdist = np.where(cid < 0, np.inf, cdist)
+        sel = occlusion_prune(cid, cdist, vectors, norms, alpha,
+                              max(rr - n_random_edges, 1))
+        neighbors[new_rows, :sel.shape[1]] = sel
+        if n_random_edges > 0:
+            neighbors[new_rows, rr - n_random_edges:] = rng.integers(
+                0, n, size=(b, n_random_edges))
+
+        # reverse edges: make new rows reachable from their targets
+        for i, u in enumerate(new_rows):
+            for v in sel[i]:
+                if v < 0 or v == u:
+                    continue
+                row = neighbors[v]
+                if (row == u).any():
+                    continue
+                free = np.nonzero(row < 0)[0]
+                if free.size:
+                    row[free[0]] = u
+                else:
+                    dv = norms[row] - 2.0 * vectors[v] @ vectors[row].T
+                    w = int(np.argmax(dv))
+                    if float(norms[u] - 2.0 * vectors[v] @ vectors[u]) < dv[w]:
+                        row[w] = u
+
+    # 4. label entries: carry survivors, recompute orphaned labels only
+    carried = np.where(old.label_entry >= 0,
+                       old_to_new[np.maximum(old.label_entry, 0)], -1)
+    label_entry = carried.astype(np.int32).copy()
+    for l in range(universe):
+        if carried[l] >= 0:
+            continue
+        word, bit = l >> 5, np.uint32(1) << np.uint32(l & 31)
+        idx = np.nonzero((bitmaps[:, word] & bit) != 0)[0]
+        if idx.size:
+            sub_mean = vectors[idx].mean(0)
+            label_entry[l] = int(idx[np.argmin(
+                norms[idx] - 2.0 * vectors[idx] @ sub_mean)])
+    return VamanaGraph(neighbors=neighbors, medoid=medoid,
+                       label_entry=label_entry)

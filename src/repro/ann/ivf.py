@@ -50,22 +50,65 @@ def assign_to_centroids(x: np.ndarray, cent: np.ndarray, block: int = 8192) -> n
     return out
 
 
-def build_ivf(vectors: np.ndarray, nlist: int, *, seed: int = 0,
-              max_list_cap: int | None = None) -> IVFIndex:
-    cent = kmeans(vectors, nlist, seed=seed)
-    nlist = cent.shape[0]
-    assign = assign_to_centroids(vectors, cent)
+def pack_lists(assign: np.ndarray, nlist: int,
+               max_list_cap: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Cluster assignments -> (`[nlist, max_list]` padded lists, fill counts).
+
+    Each list fills in ascending row-id order and overflowing lists drop
+    their highest row ids — the vectorised form of the original
+    one-row-at-a-time fill loop, shared by `build_ivf` and `graft_ivf`
+    so both produce the same layout by construction.
+    """
+    n = assign.shape[0]
     lens = np.bincount(assign, minlength=nlist)
     max_list = int(lens.max()) if lens.size else 1
     if max_list_cap is not None:
         max_list = min(max_list, max_list_cap)
     lists = np.full((nlist, max_list), -1, dtype=np.int32)
-    fill = np.zeros(nlist, dtype=np.int64)
-    for i, a in enumerate(assign):
-        f = fill[a]
-        if f < max_list:
-            lists[a, f] = i
-            fill[a] = f + 1
+    order = np.argsort(assign, kind="stable")
+    starts = np.zeros(nlist + 1, dtype=np.int64)
+    np.cumsum(lens, out=starts[1:])
+    pos = np.arange(n, dtype=np.int64) - starts[assign[order]]
+    ok = pos < max_list
+    lists[assign[order][ok], pos[ok]] = order[ok].astype(np.int32)
+    return lists, np.minimum(lens, max_list).astype(np.int32)
+
+
+def build_ivf(vectors: np.ndarray, nlist: int, *, seed: int = 0,
+              max_list_cap: int | None = None) -> IVFIndex:
+    cent = kmeans(vectors, nlist, seed=seed)
+    nlist = cent.shape[0]
+    assign = assign_to_centroids(vectors, cent)
+    lists, fill = pack_lists(assign, nlist, max_list_cap)
     return IVFIndex(centroids=cent,
                     centroid_norms=(cent ** 2).sum(1).astype(np.float32),
-                    lists=lists, list_len=fill.astype(np.int32))
+                    lists=lists, list_len=fill)
+
+
+def graft_ivf(old: IVFIndex, new_vectors: np.ndarray, old_to_new: np.ndarray,
+              *, max_list_cap: int | None = None) -> IVFIndex:
+    """Splice a compacted dataset into an existing IVF without re-running
+    k-means.
+
+    Centroids stay frozen; surviving rows keep their old cluster (their
+    vector didn't change, so re-running `assign_to_centroids` would give
+    the same argmin), carried through the id remap `old_to_new`
+    (old row -> new row, −1 = deleted). Only rows with no carried
+    assignment — compacted delta rows plus any old rows a capped layout
+    had dropped — are assigned fresh. Bit-identical to re-assigning and
+    re-packing every row of `new_vectors` against the frozen centroids,
+    at O(|new rows| · nlist) instead of O(n · nlist) distance work.
+    """
+    nlist = old.centroids.shape[0]
+    n_new = new_vectors.shape[0]
+    assign = np.full(n_new, -1, dtype=np.int64)
+    rows_c, _ = np.nonzero(old.lists >= 0)
+    mapped = old_to_new[old.lists[old.lists >= 0].astype(np.int64)]
+    keep = mapped >= 0
+    assign[mapped[keep]] = rows_c[keep]
+    un = np.nonzero(assign < 0)[0]
+    if un.size:
+        assign[un] = assign_to_centroids(new_vectors[un], old.centroids)
+    lists, fill = pack_lists(assign, nlist, max_list_cap)
+    return IVFIndex(centroids=old.centroids, centroid_norms=old.centroid_norms,
+                    lists=lists, list_len=fill)

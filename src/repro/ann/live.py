@@ -24,13 +24,30 @@ The read path runs the routed method on the base (overfetched by the
 base tombstone count, capped at k — so up to k deletions ranked above a
 query's live matches cannot crowd them out of the top-k; beyond that
 the base segment degrades gracefully until `compact()` folds the
-tombstones away, which is the intended cadence), a brute-force
-`ops.masked_topk` pass on the delta segment (overfetched by the *exact*
-delta tombstone count — the delta stays exact at any deletion load),
-masks tombstones in both candidate sets, and folds them through
-`ops.merge_topk`. Ids are per-generation row ids: base rows keep their
-dataset row id, delta rows take `base_n + insertion_order`; compaction
-remaps both (`stats()["generation"]` tells epochs apart).
+tombstones away, which is the intended cadence), then folds the base
+candidates and the delta segment through **one fused Pallas launch**
+(`ops.fused_live_topk`): the kernel scans the delta mirror block by
+block, applies the packed tombstone bitmap to *both* candidate sets
+in-kernel, and carries the running top-k in VMEM — no per-stage
+overfetch on the delta, no `[S, Q, K]` HBM intermediate, no host merge.
+Once the delta outgrows `delta_prune_min_rows`, sealed chunks' mini-IVF
+indexes (`ChunkIndex`, built once at chunk-seal time) prune clusters
+whose exact ball bound proves they cannot reach any query's top-k, so
+the scan stops being full brute force; the partial tail chunk is always
+scanned. The pre-PR-6 three-stage path (`masked_topk` overfetch + host
+tombstone mask + `merge_topk`) survives as `_run_staged` — a parity
+reference, bit-identical to the fused path. Ids are per-generation row
+ids: base rows keep their dataset row id, delta rows take
+`base_n + insertion_order`; compaction remaps both
+(`stats()["generation"]` tells epochs apart).
+
+Compaction **grafts** instead of rebuilding where it can: each built
+method index of the old base is spliced onto the compacted dataset via
+`Method.graft_index` (IVF posting lists carry surviving rows through
+the id remap with frozen centroids; graph methods remap their edge
+lists and attach the delta rows), falling back to a full build for
+methods that don't implement grafting — making compaction cost
+sublinear in base size for the grafted methods.
 
 `ShardedLiveIndex` scales the same surface across row shards: upserts
 round-robin over per-shard delta segments, per-shard ids globalise
@@ -50,6 +67,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 
+from repro.ann import engine as engine_mod
 from repro.ann import labels as lb
 from repro.ann import registry as registry_mod
 from repro.ann.dataset import ANNDataset
@@ -79,6 +97,164 @@ def _label_counts(bitmaps: np.ndarray, universe: int,
     if weights is not None:
         bits = weights[:, None] * bits
     return bits.sum(0)
+
+
+class KeyTable:
+    """Vectorised open-addressing map: int64 external key -> int64 row.
+
+    Replaces the per-key Python dict in the live key→row table. Lookups
+    and inserts run as numpy linear-probe loops over whole batches, so
+    `rows_of`/`delete_keys` stay flat (a handful of vectorised probe
+    rounds) for multi-million-row deltas instead of one dict op per key.
+    Power-of-two table kept at ≤ 0.5 load; re-inserting an existing key
+    overwrites its row (a re-used key maps to its newest row).
+    """
+
+    __slots__ = ("_keys", "_rows", "_used", "_mask", "_count")
+
+    def __init__(self, capacity_hint: int = 64):
+        size = 1 << max(4, int(2 * max(capacity_hint, 1) - 1).bit_length())
+        self._keys = np.zeros(size, np.int64)
+        self._rows = np.zeros(size, np.int64)
+        self._used = np.zeros(size, bool)
+        self._mask = size - 1
+        self._count = 0
+
+    def __len__(self) -> int:
+        return self._count
+
+    @staticmethod
+    def _hash(keys: np.ndarray, mask: int) -> np.ndarray:
+        """splitmix64 finalizer — avalanche for sequential key ranges."""
+        h = keys.astype(np.uint64)
+        h = (h ^ (h >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        h = (h ^ (h >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        h = h ^ (h >> np.uint64(31))
+        return (h & np.uint64(mask)).astype(np.int64)
+
+    def _grow_to(self, need: int) -> None:
+        if 2 * need <= self._mask + 1:
+            return
+        old_keys = self._keys[self._used]
+        old_rows = self._rows[self._used]
+        size = 1 << int(2 * need - 1).bit_length()
+        self._keys = np.zeros(size, np.int64)
+        self._rows = np.zeros(size, np.int64)
+        self._used = np.zeros(size, bool)
+        self._mask = size - 1
+        self._count = 0
+        if old_keys.size:
+            self.insert(old_keys, old_rows)
+
+    def insert(self, keys, rows) -> None:
+        """Batch upsert. Duplicate keys *within* one batch resolve
+        last-wins (callers pass unique keys; upsert validates)."""
+        keys = np.ascontiguousarray(keys, dtype=np.int64)
+        rows = np.ascontiguousarray(rows, dtype=np.int64)
+        if keys.size == 0:
+            return
+        self._grow_to(self._count + keys.size)
+        idx = self._hash(keys, self._mask)
+        pending = np.arange(keys.size)
+        guard = 0
+        while pending.size:
+            cur = idx[pending]
+            used = self._used[cur]
+            ours = used & (self._keys[cur] == keys[pending])
+            attempt = ~used | ours
+            if attempt.any():
+                a = pending[attempt]
+                c = cur[attempt]
+                was_free = ~used[attempt]
+                self._keys[c] = keys[a]
+                self._rows[c] = rows[a]
+                self._used[c] = True
+                # entries that lost a same-slot race re-probe; numpy
+                # duplicate-index assignment leaves the last writer's key
+                won = self._keys[c] == keys[a]
+                self._rows[c[won]] = rows[a[won]]
+                self._count += int((was_free & won).sum())
+                done = np.zeros(pending.size, bool)
+                done[np.nonzero(attempt)[0][won]] = True
+                pending = pending[~done]
+            idx[pending] = (idx[pending] + 1) & self._mask
+            guard += 1
+            if guard > self._mask + 2:       # load ≤ 0.5 makes this unreachable
+                raise RuntimeError("KeyTable probe loop did not terminate")
+
+    def lookup(self, keys) -> np.ndarray:
+        """[R] rows for keys; −1 where the key was never inserted."""
+        keys = np.ascontiguousarray(keys, dtype=np.int64)
+        out = np.full(keys.shape, -1, np.int64)
+        if keys.size == 0 or self._count == 0:
+            return out
+        idx = self._hash(keys, self._mask)
+        pending = np.arange(keys.size)
+        guard = 0
+        while pending.size:
+            cur = idx[pending]
+            used = self._used[cur]
+            hit = used & (self._keys[cur] == keys[pending])
+            out[pending[hit]] = self._rows[cur[hit]]
+            pending = pending[used & ~hit]    # empty slot ⇒ key absent
+            idx[pending] = (idx[pending] + 1) & self._mask
+            guard += 1
+            if guard > self._mask + 2:
+                raise RuntimeError("KeyTable probe loop did not terminate")
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkIndex:
+    """Mini-IVF over one sealed delta chunk: coarse k-means centroids
+    plus chunk-local posting lists, built once at chunk-seal time.
+
+    `radius[c]` upper-bounds (in f64, rounded up) the L2 distance from
+    `centroids[c]` to every member, so `max(0, ‖q−c‖ − radius)²` is an
+    exact lower bound on any member's squared distance to q — the
+    pruning test the fused read path uses. Chunks are immutable once
+    sealed, so the index never updates."""
+
+    centroids: np.ndarray   # [C, d] f32
+    cnorms: np.ndarray      # [C] f64 squared centroid norms
+    radius: np.ndarray      # [C] f64 cover radii (rounded up)
+    members: np.ndarray     # [chunk] i32 chunk-local rows, cluster-grouped
+    starts: np.ndarray      # [C+1] i32 posting-list offsets into members
+
+    def arrays(self) -> dict:
+        return {"centroids": self.centroids, "cnorms": self.cnorms,
+                "radius": self.radius, "members": self.members,
+                "starts": self.starts}
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "ChunkIndex":
+        return cls(**{f: np.asarray(arrays[f])
+                      for f in ("centroids", "cnorms", "radius",
+                                "members", "starts")})
+
+
+def build_chunk_index(vectors: np.ndarray, *, n_clusters: int = 8,
+                      seed: int = 0) -> ChunkIndex:
+    """Build the mini-IVF for one sealed chunk (deterministic per seed,
+    so a persisted chunk index equals a rebuilt one)."""
+    from repro.ann.ivf import assign_to_centroids, kmeans
+
+    n = vectors.shape[0]
+    c = max(1, min(int(n_clusters), n))
+    cent = kmeans(vectors, c, iters=4, seed=seed)
+    assign = assign_to_centroids(vectors, cent)
+    order = np.argsort(assign, kind="stable").astype(np.int32)
+    lens = np.bincount(assign, minlength=cent.shape[0])
+    starts = np.zeros(cent.shape[0] + 1, np.int32)
+    starts[1:] = np.cumsum(lens)
+    centf = cent.astype(np.float64)
+    diff = vectors.astype(np.float64) - centf[assign]
+    dist = np.sqrt((diff ** 2).sum(axis=1))
+    radius = np.zeros(cent.shape[0], np.float64)
+    np.maximum.at(radius, assign, dist)
+    radius = radius * (1.0 + 1e-9) + 1e-9    # round up: bound must hold
+    return ChunkIndex(cent.astype(np.float32), (centf ** 2).sum(axis=1),
+                      radius, order, starts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +299,8 @@ class DeltaSegment:
         self._dev = None            # (vectors, norms, bitmaps) jax arrays
         self._dev_rows = 0          # rows covered by the mirror
         self._dev_lock = threading.Lock()
+        self._view_cache = None     # (rows, assembled device triple)
+        self._chunk_idx: list[ChunkIndex] = []   # mini-IVF per sealed chunk
 
     @property
     def rows(self) -> int:
@@ -170,6 +348,11 @@ class DeltaSegment:
 
         full = (rows // self.chunk) * self.chunk
         with self._dev_lock:
+            # read-mostly fast path: the assembled triple (including the
+            # padded tail) only depends on the watermark, so repeated
+            # searches between writes skip the tail rebuild + re-upload
+            if self._view_cache is not None and self._view_cache[0] == rows:
+                return self._view_cache[1]
             if full > self._dev_rows:
                 with scope():
                     vec = jnp.asarray(self._vec[self._dev_rows: full])
@@ -200,13 +383,19 @@ class DeltaSegment:
                 parts_n.append(jnp.asarray(tn))
                 parts_b.append(jnp.asarray(tb))
         if not parts_v:
-            return (jnp.zeros((0, self.dim), jnp.float32),
+            view = (jnp.zeros((0, self.dim), jnp.float32),
                     jnp.zeros((0,), jnp.float32),
                     jnp.zeros((0, self.width), jnp.uint32))
-        if len(parts_v) == 1:
-            return parts_v[0], parts_n[0], parts_b[0]
-        return (jnp.concatenate(parts_v), jnp.concatenate(parts_n),
-                jnp.concatenate(parts_b))
+        elif len(parts_v) == 1:
+            view = (parts_v[0], parts_n[0], parts_b[0])
+        else:
+            view = (jnp.concatenate(parts_v), jnp.concatenate(parts_n),
+                    jnp.concatenate(parts_b))
+        with self._dev_lock:
+            # the row prefix below `rows` is immutable, so the view only
+            # depends on the watermark — safe to reuse until it moves
+            self._view_cache = (rows, view)
+        return view
 
     def device_rows(self) -> int:
         return self._dev_rows
@@ -215,27 +404,152 @@ class DeltaSegment:
         with self._dev_lock:
             self._dev = None
             self._dev_rows = 0
+            self._view_cache = None
+
+    # ---- per-chunk mini-IVF ---------------------------------------------
+    def chunk_indexes(self, rows: int) -> list[ChunkIndex]:
+        """ChunkIndex list covering the sealed chunks below `rows`.
+
+        Built lazily on first request after a chunk seals (≈ one tiny
+        k-means per `chunk` appended rows) and cached forever — sealed
+        chunks are immutable. Store restores short-circuit the build via
+        `adopt_chunk_indexes`."""
+        want = int(rows) // self.chunk
+        if want <= 0:
+            return []
+        with self._dev_lock:
+            vec = self._vec        # row prefix is immutable; see host_view
+            while len(self._chunk_idx) < want:
+                i = len(self._chunk_idx)
+                lo = i * self.chunk
+                self._chunk_idx.append(build_chunk_index(
+                    vec[lo: lo + self.chunk], seed=i))
+            return self._chunk_idx[:want]
+
+    def adopt_chunk_indexes(self, indexes: dict[int, ChunkIndex]) -> None:
+        """Install persisted chunk indexes (the store's restore path).
+        Only a contiguous prefix extension of already-built chunks is
+        accepted; anything else is rebuilt lazily instead."""
+        with self._dev_lock:
+            sealed = self._rows // self.chunk
+            for i in sorted(indexes):
+                if i == len(self._chunk_idx) and i < sealed:
+                    self._chunk_idx.append(indexes[i])
+
+    def built_chunk_indexes(self) -> list[ChunkIndex]:
+        """The chunk indexes built so far (no building)."""
+        with self._dev_lock:
+            return list(self._chunk_idx)
 
 
 class _StageTimings:
-    """Thread-local stage-timing accumulator shared by the live handles:
-    `run_method` calls `_stage_add`, the service layer drains with
-    `pop_stage_timings` (per thread, so pipelined queue workers don't
-    cross-contaminate). Subclasses set `self._local = threading.local()`
-    in __init__."""
+    """Instance facade over the engine-level thread-local stage-timing
+    accumulator (`repro.ann.engine.StageTimings`): `run_method` calls
+    `_stage_add`, the service layer drains with `pop_stage_timings`
+    (per thread, so pipelined queue workers don't cross-contaminate).
+    The accumulator itself lives in `engine` so kernel wrappers and
+    other layers can contribute stages without importing this module."""
 
     def _stage_add(self, d: dict) -> None:
-        acc = getattr(self._local, "timings", None)
-        if acc is None:
-            acc = self._local.timings = {}
         for key, val in d.items():
-            acc[key] = acc.get(key, 0.0) + val
+            engine_mod.stage_add(key, val)
 
     def pop_stage_timings(self) -> dict:
         """Return and clear this thread's accumulated stage timings."""
-        acc = getattr(self._local, "timings", None) or {}
-        self._local.timings = {}
-        return acc
+        return engine_mod.pop_stage_timings()
+
+
+class _StableKeyMixin:
+    """Stable external-key plumbing shared by `LiveFilteredIndex` and
+    `ShardedLiveIndex` (it had drifted into two near-identical copies).
+
+    Concrete classes provide `_lock`, `_keys`, `_next_key`, `n_total`,
+    `delete(rows)`, and `_row_live(rows) -> bool[R]`; the mixin owns the
+    `KeyTable` lifecycle (`_key_rows`, built lazily by `_key_index`,
+    extended incrementally via `_note_new_keys` on upsert, dropped to
+    None at the compaction swap) and the public key API."""
+
+    def _key_index(self) -> KeyTable:
+        """key -> current-generation row table (caller holds the lock).
+        Re-used keys map to their newest row."""
+        if self._key_rows is None:
+            n_tot = self.n_total
+            table = KeyTable(max(n_tot, 64))
+            if n_tot:
+                table.insert(self._keys[:n_tot],
+                             np.arange(n_tot, dtype=np.int64))
+            self._key_rows = table
+        return self._key_rows
+
+    def _note_new_keys(self, ks: np.ndarray, start_row: int) -> None:
+        """Extend the key table for freshly appended rows (lock held;
+        no-op while the table hasn't been built)."""
+        if self._key_rows is not None and ks.size:
+            self._key_rows.insert(
+                ks, np.arange(start_row, start_row + ks.size,
+                              dtype=np.int64))
+
+    def _claim_keys(self, keys, n: int) -> np.ndarray:
+        """Validate/assign [n] external keys (caller holds the lock)."""
+        if keys is None:
+            ks = np.arange(self._next_key, self._next_key + n,
+                           dtype=np.int64)
+        else:
+            ks = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+            if ks.shape != (n,):
+                raise ValueError(
+                    f"upsert keys must be [{n}]; got shape {ks.shape}")
+            if np.unique(ks).size != n:
+                raise ValueError("upsert keys must be unique per batch")
+            rows = self._key_index().lookup(ks)
+            known = rows >= 0
+            if known.any():
+                live = self._row_live(rows[known])
+                if live.any():
+                    bad_key = int(ks[known][live][0])
+                    bad_row = int(rows[known][live][0])
+                    raise ValueError(
+                        f"key {bad_key} already names a live row (id "
+                        f"{bad_row}); delete it first to re-point the key")
+        if n:
+            self._next_key = max(self._next_key, int(ks.max()) + 1)
+        return ks
+
+    def keys_of(self, ids, snapshot=None) -> np.ndarray:
+        """Stable external keys for (current-generation or snapshot)
+        ids: int64 array of `ids`' shape, −1 where the id is −1. Keys
+        survive `compact()` and a `repro.ann.store` round trip;
+        per-generation ids do not."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if snapshot is not None:
+            keys = snapshot.keys
+        else:
+            with self._lock:
+                keys = self._keys[: self.n_total]
+        out = np.full(ids.shape, -1, dtype=np.int64)
+        valid = ids >= 0
+        if valid.any():
+            out[valid] = keys[ids[valid]]
+        return out
+
+    def rows_of(self, keys) -> np.ndarray:
+        """Current-generation ids for external keys (−1 for a key that
+        has never been assigned). A re-used key maps to its newest
+        row."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            return self._key_index().lookup(keys)
+
+    def delete_keys(self, keys) -> int:
+        """Tombstone rows by stable external key; unknown keys raise
+        KeyError. Returns the number of newly deleted rows."""
+        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
+        with self._lock:
+            rows = self.rows_of(keys)
+            if (rows < 0).any():
+                missing = keys[rows < 0].tolist()
+                raise KeyError(f"unknown external keys: {missing}")
+            return self.delete(rows)
 
 
 class LiveSnapshot:
@@ -294,7 +608,7 @@ class LiveSnapshot:
                 f"tombstones={int(self.tombstones.sum())})")
 
 
-class LiveFilteredIndex(_StageTimings):
+class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
     """Mutable serving handle: sealed base + delta segment + tombstones.
 
     Args:
@@ -314,6 +628,15 @@ class LiveFilteredIndex(_StageTimings):
             largest base key).
         generation: starting generation counter (restored stores resume
             at the persisted generation instead of 0).
+        fused: serve reads through the single-launch fused kernel
+            (default). False falls back to the three-stage parity path
+            (`_run_staged`) — bit-identical, slower.
+        graft: let `compact()` splice built method indexes through
+            `Method.graft_index` instead of rebuilding (default). False
+            forces the full rebuild.
+        delta_prune_min_rows: delta size above which the sealed-chunk
+            mini-IVF pruner engages (default `4 * delta_chunk`; the
+            ball-bound test isn't worth its host matmul below that).
     """
 
     def __init__(self, ds: ANNDataset | None = None, *, name: str | None = None,
@@ -321,7 +644,9 @@ class LiveFilteredIndex(_StageTimings):
                  registry=None, device=None,
                  delta_chunk: int = DEFAULT_DELTA_CHUNK,
                  base_keys: np.ndarray | None = None,
-                 next_key: int | None = None, generation: int = 0):
+                 next_key: int | None = None, generation: int = 0,
+                 fused: bool = True, graft: bool = True,
+                 delta_prune_min_rows: int | None = None):
         if ds is None:
             if name is None or dim is None or universe is None:
                 raise ValueError(
@@ -361,7 +686,7 @@ class LiveFilteredIndex(_StageTimings):
                     f"{self._keys.shape}")
         self._next_key = int(next_key) if next_key is not None else \
             (int(self._keys.max()) + 1 if self._base_n else 0)
-        self._key_rows: dict | None = None    # key -> row, built lazily
+        self._key_rows: KeyTable | None = None   # built lazily
         self._wal = None                      # attached write-ahead log
         self._lock = threading.RLock()
         self._readers: dict[int, int] = {}      # generation -> pin count
@@ -370,7 +695,13 @@ class LiveFilteredIndex(_StageTimings):
         self._compacting: Future | None = None
         self._last_remap: np.ndarray | None = None
         self._features = None       # repro.core.features cache slot
-        self._local = threading.local()
+        self.fused = bool(fused)
+        self._graft = bool(graft)
+        self._delta_prune_min_rows = (4 * self._delta_chunk
+                                      if delta_prune_min_rows is None
+                                      else int(delta_prune_min_rows))
+        self._tomb_words_cache = None   # ((gen, version, n_pad), device arr)
+        self._prune_stats = {"calls": 0, "clusters": 0, "pruned": 0}
         self._closed = False
 
     @classmethod
@@ -501,52 +832,25 @@ class LiveFilteredIndex(_StageTimings):
         with self._lock:
             self._check_open()
             ks = self._claim_keys(keys, vectors.shape[0])
-            if self._wal is not None:        # durable before applied
-                self._wal.log_upsert(self._generation, ks, vectors, bitmaps)
+            wal = self._wal
+            if wal is not None:              # logged before applied
+                seq = wal.log_upsert(self._generation, ks, vectors, bitmaps)
             start, stop = self._delta.append(vectors, bitmaps)
             self._tomb = np.concatenate(
                 [self._tomb, np.zeros(stop - start, bool)])
             self._keys = np.concatenate([self._keys, ks])
-            if self._key_rows is not None:
-                self._key_rows.update(zip(
-                    ks.tolist(), range(self._base_n + start,
-                                       self._base_n + stop)))
+            self._note_new_keys(ks, self._base_n + start)
             self._live_label_counts = self._live_label_counts + counts
-            return np.arange(self._base_n + start, self._base_n + stop,
-                             dtype=np.int64)
+            out = np.arange(self._base_n + start, self._base_n + stop,
+                            dtype=np.int64)
+        if wal is not None:
+            wal.commit(seq)                  # durable before acked, off-lock
+        return out
 
-    def _claim_keys(self, keys, n: int) -> np.ndarray:
-        """Validate/assign [n] external keys (caller holds the lock)."""
-        if keys is None:
-            ks = np.arange(self._next_key, self._next_key + n,
-                           dtype=np.int64)
-        else:
-            ks = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-            if ks.shape != (n,):
-                raise ValueError(
-                    f"upsert keys must be [{n}]; got shape {ks.shape}")
-            if np.unique(ks).size != n:
-                raise ValueError("upsert keys must be unique per batch")
-            key_rows = self._key_index()
-            for k in ks.tolist():
-                row = key_rows.get(k)
-                if row is not None and not self._tomb[row]:
-                    raise ValueError(
-                        f"key {k} already names a live row (id {row}); "
-                        f"delete it first to re-point the key")
-        self._next_key = max(self._next_key, int(ks.max()) + 1) if n else \
-            self._next_key
-        return ks
-
-    def _key_index(self) -> dict:
-        """key -> current-generation row map (caller holds the lock).
-        Built lazily, then maintained incrementally by `upsert`;
-        compaction invalidates it. Re-used keys map to their newest
-        row."""
-        if self._key_rows is None:
-            self._key_rows = dict(zip(
-                self._keys[: self.n_total].tolist(), range(self.n_total)))
-        return self._key_rows
+    def _row_live(self, rows: np.ndarray) -> np.ndarray:
+        """bool[R]: which current-generation rows are not tombstoned
+        (mixin hook; caller holds the lock)."""
+        return ~self._tomb[rows]
 
     def delete(self, ids) -> int:
         """Tombstone ids (base or delta rows of the current generation).
@@ -560,8 +864,9 @@ class LiveFilteredIndex(_StageTimings):
                 raise IndexError(
                     f"delete ids must be in [0, {n_tot}); got range "
                     f"[{ids.min()}, {ids.max()}]")
-            if self._wal is not None:        # replay is idempotent
-                self._wal.log_delete(self._generation, ids)
+            wal = self._wal
+            if wal is not None:              # replay is idempotent
+                seq = wal.log_delete(self._generation, ids)
             fresh = ids[~self._tomb[ids]]
             fresh = np.unique(fresh)
             if fresh.size:
@@ -570,49 +875,13 @@ class LiveFilteredIndex(_StageTimings):
                 self._live_label_counts = (
                     self._live_label_counts
                     - _label_counts(self._bitmaps_of(fresh), self._universe))
-            return int(fresh.size)
-
-    # ---- stable external keys -------------------------------------------
-    def keys_of(self, ids, snapshot: LiveSnapshot | None = None
-                ) -> np.ndarray:
-        """Stable external keys for (current-generation or snapshot) ids.
-
-        Returns an int64 array of `ids`' shape with −1 where the id is
-        −1. Keys survive `compact()` and a `repro.ann.store` round trip;
-        per-generation ids do not.
-        """
-        ids = np.asarray(ids, dtype=np.int64)
-        if snapshot is not None:
-            keys = snapshot.keys
-        else:
-            with self._lock:
-                keys = self._keys[: self.n_total]
-        out = np.full(ids.shape, -1, dtype=np.int64)
-        valid = ids >= 0
-        if valid.any():
-            out[valid] = keys[ids[valid]]
+            out = int(fresh.size)
+        if wal is not None:
+            wal.commit(seq)                  # durable before acked, off-lock
         return out
 
-    def rows_of(self, keys) -> np.ndarray:
-        """Current-generation ids for external keys (−1 for a key that
-        has never been assigned). A re-used key maps to its newest
-        row."""
-        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-        with self._lock:
-            key_rows = self._key_index()
-            return np.array([key_rows.get(int(k), -1) for k in keys],
-                            dtype=np.int64)
-
-    def delete_keys(self, keys) -> int:
-        """Tombstone rows by stable external key; unknown keys raise
-        KeyError. Returns the number of newly deleted rows."""
-        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-        with self._lock:
-            rows = self.rows_of(keys)
-            if (rows < 0).any():
-                missing = keys[rows < 0].tolist()
-                raise KeyError(f"unknown external keys: {missing}")
-            return self.delete(rows)
+    # stable external keys (`keys_of`/`rows_of`/`delete_keys`/`_claim_keys`)
+    # come from _StableKeyMixin.
 
     # ---- durability hook (repro.ann.store) -------------------------------
     def attach_wal(self, wal) -> None:
@@ -726,6 +995,40 @@ class LiveFilteredIndex(_StageTimings):
                 snap.release()
 
     def _run(self, method, setting, batch: QueryBatch, snap: LiveSnapshot):
+        if self.fused and snap.delta_rows:
+            return self._run_fused(method, setting, batch, snap)
+        return self._run_staged(method, setting, batch, snap)
+
+    def _run_base(self, method, setting, batch: QueryBatch,
+                  snap: LiveSnapshot, base_dead: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Routed base candidates [Q, KB] (numpy), overfetched by the
+        full base tombstone count (bucketed to bound recompiles, clamped
+        to the base size) so deletions can't crowd out live rows: among
+        the top-(k + dead) ranked matches at most `dead` are tombstoned,
+        leaving >= k live ones — any smaller overfetch can miss live
+        rows once the dead outnumber k in a query's neighborhood. [Q, 0]
+        for an empty base."""
+        fx = self._base_for(snap) if snap.base_n else None
+        if fx is None:
+            return (np.zeros((batch.q, 0), np.int32),
+                    np.zeros((batch.q, 0), np.float32))
+        k = batch.k
+        kb = (max(k, min(_bucket(k + base_dead), snap.base_n))
+              if base_dead else k)
+        b_ids, b_raw = fx.run_method(
+            self._resolve(method), setting,
+            QueryBatch(batch.vectors, batch.bitmaps, batch.pred, kb))
+        return (np.asarray(b_ids, dtype=np.int32),
+                np.asarray(b_raw, dtype=np.float32))
+
+    def _run_fused(self, method, setting, batch: QueryBatch,
+                   snap: LiveSnapshot):
+        """Single-launch live read: routed base candidates and the delta
+        scan fold through one `ops.fused_live_topk` call; tombstones are
+        applied to both candidate sets in-kernel (packed-word gather),
+        so there is no host mask, no per-stage delta overfetch, and no
+        separate merge launch. Bit-identical to `_run_staged`."""
         import jax.numpy as jnp
 
         from repro.kernels import ops
@@ -733,19 +1036,54 @@ class LiveFilteredIndex(_StageTimings):
         k = batch.k
         tomb = snap.tombstones
         base_dead = int(tomb[: snap.base_n].sum())
+        t0 = time.perf_counter()
+        b_ids, b_raw = self._run_base(method, setting, batch, snap,
+                                      base_dead)
+        t1 = time.perf_counter()
+        dvec, dnorm, dbm = snap.delta.device_view(
+            snap.delta_rows, self._device_scope)
+        tomb_words = self._tomb_words(snap)
+        sel = self._delta_select(snap, batch, b_ids, b_raw)
+        if sel is not None and sel.size == 0:
+            # every sealed cluster was pruned and there is no tail row.
+            # Re-include one pruned row to keep the kernel operand
+            # non-empty: a pruned row provably cannot displace any
+            # query's top-k, so the result bits are unchanged.
+            sel = np.zeros(1, np.int32)
+        qv = jnp.asarray(batch.vectors)
+        qb = jnp.asarray(batch.bitmaps)
+        if sel is None:
+            ids, raw = ops.fused_live_topk(
+                qv, qb, b_ids, b_raw, dvec, dnorm, dbm,
+                np.int32(snap.base_n), tomb_words,
+                pred=int(batch.pred), k=k)
+        else:
+            ids, raw = ops.fused_live_topk_select(
+                qv, qb, b_ids, b_raw, dvec, dnorm, dbm, sel,
+                np.int32(snap.base_n), tomb_words,
+                pred=int(batch.pred), k=k)
+        ids = np.asarray(ids, dtype=np.int32)
+        raw = np.asarray(raw, dtype=np.float32)
+        t2 = time.perf_counter()
+        self._stage_add({"base_s": t1 - t0, "delta_s": t2 - t1,
+                         "merge_s": 0.0})    # merge happens in-kernel
+        return ids, raw
+
+    def _run_staged(self, method, setting, batch: QueryBatch,
+                    snap: LiveSnapshot):
+        """Pre-PR-6 three-stage live read (base launch → delta
+        `masked_topk` → host tombstone mask → `merge_topk`): the parity
+        reference for the fused path, and the fallback when the delta is
+        empty (nothing to fuse over)."""
+        k = batch.k
+        tomb = snap.tombstones
+        base_dead = int(tomb[: snap.base_n].sum())
         delta_dead = int(tomb[snap.base_n:].sum())
         parts = []
         t0 = time.perf_counter()
-        fx = self._base_for(snap) if snap.base_n else None
-        if fx is not None:
-            # overfetch by the tombstone count (capped at k, bucketed to
-            # bound recompiles) so deletions can't crowd out live rows
-            kb = _bucket(k + min(base_dead, k)) if base_dead else k
-            b_ids, b_raw = fx.run_method(
-                self._resolve(method), setting,
-                QueryBatch(batch.vectors, batch.bitmaps, batch.pred, kb))
-            b_ids = np.asarray(b_ids, dtype=np.int32)
-            b_raw = np.asarray(b_raw, dtype=np.float32)
+        if snap.base_n:
+            b_ids, b_raw = self._run_base(method, setting, batch, snap,
+                                          base_dead)
             if base_dead:
                 valid = b_ids >= 0
                 dead = np.zeros_like(valid)
@@ -755,6 +1093,10 @@ class LiveFilteredIndex(_StageTimings):
             parts.append((b_ids, b_raw))
         t1 = time.perf_counter()
         if snap.delta_rows:
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
             # exact overfetch: top-(k + dead) over the delta always
             # contains the live top-k
             kd = _bucket(k + min(delta_dead, snap.delta_rows))
@@ -784,6 +1126,97 @@ class LiveFilteredIndex(_StageTimings):
         self._stage_add({"base_s": t1 - t0, "delta_s": t2 - t1,
                          "merge_s": t3 - t2})
         return ids, raw
+
+    def _tomb_words(self, snap: LiveSnapshot):
+        """[TW] uint32 packed device tombstones for the fused kernel.
+
+        Cached by (generation, tombstone version, padded length): rows
+        appended after the pack only add zero bits, so the cached words
+        stay valid until a delete bumps the version or the padded length
+        grows past the next 4096-row bucket."""
+        import jax.numpy as jnp
+
+        n_pad = _bucket(max(snap.n_total, 1), 4096)
+        key = (snap.generation, snap.tombstone_version, n_pad)
+        cached = self._tomb_words_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        words = np.zeros(n_pad // 8, np.uint8)
+        packed = np.packbits(snap.tombstones, bitorder="little")
+        words[: packed.size] = packed
+        with self._device_scope():
+            dev = jnp.asarray(words.view(np.uint32))
+        self._tomb_words_cache = (key, dev)
+        return dev
+
+    def _delta_select(self, snap: LiveSnapshot, batch: QueryBatch,
+                      b_ids: np.ndarray, b_raw: np.ndarray
+                      ) -> np.ndarray | None:
+        """Exact ball-bound pruning over the sealed chunks' mini-IVFs.
+
+        Returns None to scan the whole delta mirror, or a sorted [NS]
+        i32 array of delta-local rows that provably contains every
+        query's live top-k among the delta. A cluster is dropped only
+        when, for *every* query, the exact lower bound
+        max(0, ‖q−c‖ − radius)² on any member's distance exceeds the
+        query's k-th best live base-candidate distance (plus a rounding
+        margin) — such rows cannot displace the eventual top-k, so the
+        result stays bit-identical to the full scan. The partial tail
+        chunk is always scanned."""
+        rows = snap.delta_rows
+        if rows < self._delta_prune_min_rows or b_ids.shape[1] < batch.k:
+            return None
+        chunk_idx = snap.delta.chunk_indexes(rows)
+        if not chunk_idx:
+            return None
+        # per-query threshold: k-th smallest live base candidate (raw
+        # score scale ‖v‖² − 2·q·v); +inf disables pruning for queries
+        # with fewer than k live base candidates
+        live = b_ids >= 0
+        live[live] = ~snap.tombstones[b_ids[live]]
+        cand = np.where(live, b_raw, np.inf).astype(np.float64)
+        cand.sort(axis=1)
+        bound = cand[:, batch.k - 1]                       # [Q]
+        if not np.isfinite(bound).all():
+            return None
+        qv = batch.vectors.astype(np.float64)
+        qn = (qv ** 2).sum(axis=1)
+        cent = np.concatenate([c.centroids for c in chunk_idx]
+                              ).astype(np.float64)
+        cn = np.concatenate([c.cnorms for c in chunk_idx])
+        rad = np.concatenate([c.radius for c in chunk_idx])
+        d2 = np.maximum(cn[None, :] - 2.0 * (qv @ cent.T) + qn[:, None],
+                        0.0)
+        lb = np.maximum(np.sqrt(d2) - rad[None, :], 0.0) ** 2   # [Q, C]
+        # margin absorbs the kernel's f32 rounding of candidate scores
+        margin = 1e-3 * (1.0 + np.abs(bound))
+        drop = ((lb - qn[:, None]) > (bound + margin)[:, None]).all(axis=0)
+        with self._lock:
+            self._prune_stats["calls"] += 1
+            self._prune_stats["clusters"] += int(drop.size)
+            self._prune_stats["pruned"] += int(drop.sum())
+        if not drop.any():
+            return None
+        chunk = snap.delta.chunk
+        keep_rows = []
+        ci = 0
+        for i, c in enumerate(chunk_idx):
+            ncl = c.radius.size
+            kept = ~drop[ci: ci + ncl]
+            off = i * chunk
+            if kept.all():
+                keep_rows.append(off + np.arange(chunk, dtype=np.int64))
+            elif kept.any():
+                parts = [c.members[c.starts[j]: c.starts[j + 1]]
+                         for j in np.nonzero(kept)[0]]
+                keep_rows.append(off + np.concatenate(parts
+                                                      ).astype(np.int64))
+            ci += ncl
+        covered = len(chunk_idx) * chunk
+        keep_rows.append(np.arange(covered, rows, dtype=np.int64))
+        sel = np.concatenate(keep_rows)
+        sel.sort()                 # scan order matches the full scan
+        return sel.astype(np.int32)
 
     def search(self, batch: QueryBatch, method,
                setting: ParamSetting | str | None = None, *,
@@ -863,13 +1296,16 @@ class LiveFilteredIndex(_StageTimings):
                     max_workers=1,
                     thread_name_prefix=f"compact-{self._name}")
             snap = self.snapshot()
-            if self._wal is not None:
+            wal = self._wal
+            if wal is not None:
                 # barrier record: replay compacts synchronously at this
                 # point, reproducing the snapshot's fold exactly
-                self._wal.log_compact(self._generation)
+                seq = wal.log_compact(self._generation)
             fut = self._compact_pool.submit(self._compact_job, snap)
             self._compacting = fut
-            return fut
+        if wal is not None:
+            wal.commit(seq)
+        return fut
 
     def _compact_job(self, snap: LiveSnapshot) -> int:
         try:
@@ -904,9 +1340,26 @@ class LiveFilteredIndex(_StageTimings):
                                    device=self._placement)
             old_fx = self._base_for(snap) if snap.base_n else None
             if old_fx is not None:
+                # graft where the method supports it: splice the old
+                # built index through the id remap (sublinear in base
+                # size) instead of rebuilding; fall back to a build
+                base_remap = remap[: snap.base_n]
+                new_from_delta = remap[snap.base_n:]
+                new_from_delta = np.sort(
+                    new_from_delta[new_from_delta >= 0])
                 for m_name, build in old_fx.built_keys():
                     try:
-                        new_fx.get_index(m_name, build)
+                        m = self._resolve(m_name)
+                        grafted = None
+                        old_index = old_fx._indexes.get((m_name, build))
+                        if self._graft and old_index is not None:
+                            grafted = m.graft_index(
+                                new_ds, old_index, old_fx.ds, base_remap,
+                                new_from_delta, dict(build))
+                        if grafted is not None:
+                            new_fx.adopt_index(m, build, grafted)
+                        else:
+                            new_fx.get_index(m_name, build)
                     except KeyError:
                         pass        # method no longer registered
             with self._lock:
@@ -941,6 +1394,7 @@ class LiveFilteredIndex(_StageTimings):
                 self._tomb_version += 1
                 self._generation = old_gen + 1
                 self._features = None       # dataset features went stale
+                self._tomb_words_cache = None
                 self._last_remap = remap
                 if self._readers.get(old_gen):
                     # record the retirement even for an empty base (None)
@@ -1003,6 +1457,10 @@ class LiveFilteredIndex(_StageTimings):
                 "compacting": (self._compacting is not None
                                and not self._compacting.done()),
                 "retired_generations": sorted(self._retired),
+                "fused": self.fused,
+                "graft": self._graft,
+                "delta_chunk_indexes": len(self._delta._chunk_idx),
+                "delta_prune": dict(self._prune_stats),
                 "closed": self._closed,
             }
 
@@ -1052,7 +1510,7 @@ class ShardedLiveSnapshot:
         self.release()
 
 
-class ShardedLiveIndex(_StageTimings):
+class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
     """Row-sharded live handle: one `LiveFilteredIndex` per shard.
 
     Upserts round-robin row-by-row across shards; global delta ids are
@@ -1060,10 +1518,15 @@ class ShardedLiveIndex(_StageTimings):
     (shard, local-row) so `delete()` and result globalisation agree.
     `run_method` snapshots every shard under one lock (a consistent
     cross-shard epoch), fans out, globalises per-shard ids, and reduces
-    through `merge_topk`. `compact()` rebuilds **globally**: all
-    surviving rows merge into one fresh dataset that is re-sharded
-    contiguously, so the result is exactly a `ShardedFilteredIndex`
-    over the compacted data.
+    through `merge_topk`. Each shard serves its own read through the
+    fused single-launch kernel (the `fused`/`delta_prune_min_rows`
+    knobs forward to the per-shard handles), so the sharded handle
+    inherits the fused path wholesale. `compact()` rebuilds
+    **globally**: all surviving rows merge into one fresh dataset that
+    is re-sharded contiguously, so the result is exactly a
+    `ShardedFilteredIndex` over the compacted data (rows migrate across
+    shard boundaries, so per-shard method indexes are rebuilt, not
+    grafted).
 
     Args mirror `ShardedFilteredIndex` (+ the empty-base form of
     `LiveFilteredIndex` via `name`/`dim`/`universe`).
@@ -1075,7 +1538,9 @@ class ShardedLiveIndex(_StageTimings):
                  parallel: bool = True,
                  delta_chunk: int = DEFAULT_DELTA_CHUNK,
                  base_keys: np.ndarray | None = None,
-                 next_key: int | None = None, generation: int = 0):
+                 next_key: int | None = None, generation: int = 0,
+                 fused: bool = True,
+                 delta_prune_min_rows: int | None = None):
         from repro.ann.distributed import shard_bounds, shard_devices
 
         n_shards = int(n_shards)
@@ -1086,6 +1551,15 @@ class ShardedLiveIndex(_StageTimings):
         self._registry = registry
         self._delta_chunk = int(delta_chunk)
         self._devices = devices
+        self._fused = bool(fused)
+        self._delta_prune_min_rows = delta_prune_min_rows
+
+        def _shard_kw():
+            return dict(registry=registry, delta_chunk=delta_chunk,
+                        fused=self._fused,
+                        delta_prune_min_rows=self._delta_prune_min_rows)
+
+        self._shard_kw = _shard_kw
         if ds is None:
             if name is None or dim is None or universe is None:
                 raise ValueError(
@@ -1098,8 +1572,7 @@ class ShardedLiveIndex(_StageTimings):
             self.shards = [
                 LiveFilteredIndex.empty(
                     f"{self._name}/shard{i}", self._dim, self._universe,
-                    registry=registry, device=devices[i],
-                    delta_chunk=delta_chunk)
+                    device=devices[i], **_shard_kw())
                 for i in range(n_shards)]
         else:
             self._name, self._dim = ds.name, ds.dim
@@ -1110,8 +1583,7 @@ class ShardedLiveIndex(_StageTimings):
                 LiveFilteredIndex(
                     ds.row_slice(int(s), int(e),
                                  name=f"{ds.name}/shard{i}"),
-                    registry=registry, device=devices[i],
-                    delta_chunk=delta_chunk)
+                    device=devices[i], **_shard_kw())
                 for i, (s, e) in enumerate(zip(self.bounds[:-1],
                                                self.bounds[1:]))]
         self._total_base = 0 if ds is None else ds.n
@@ -1130,7 +1602,7 @@ class ShardedLiveIndex(_StageTimings):
                     f"{self._keys.shape}")
         self._next_key = int(next_key) if next_key is not None else \
             (int(self._keys.max()) + 1 if self._total_base else 0)
-        self._key_rows: dict | None = None    # key -> gid, built lazily
+        self._key_rows: KeyTable | None = None   # key -> gid, built lazily
         self._wal = None
         self._wal_quiet = False               # compaction's internal replay
         self._parallel = bool(parallel) and n_shards > 1
@@ -1146,10 +1618,22 @@ class ShardedLiveIndex(_StageTimings):
         self._compact_pool: ThreadPoolExecutor | None = None
         self._compacting: Future | None = None
         self._features = None
-        self._local = threading.local()
         self._closed = False
 
     # ---- lifecycle ------------------------------------------------------
+    @property
+    def fused(self) -> bool:
+        """Whether shards serve reads through the fused kernel; setting
+        it propagates to every current shard (and to shards created by
+        later compactions)."""
+        return self._fused
+
+    @fused.setter
+    def fused(self, value: bool) -> None:
+        self._fused = bool(value)
+        for s in self.shards:
+            s.fused = self._fused
+
     @property
     def n_shards(self) -> int:
         return len(self.shards)
@@ -1265,8 +1749,9 @@ class ShardedLiveIndex(_StageTimings):
             self._check_open()
             n = vectors.shape[0]
             ks = self._claim_keys(keys, n)
-            if self._wal is not None and not self._wal_quiet:
-                self._wal.log_upsert(self._epoch, ks, vectors, bitmaps)
+            wal = self._wal if not self._wal_quiet else None
+            if wal is not None:
+                seq = wal.log_upsert(self._epoch, ks, vectors, bitmaps)
             nsh = self.n_shards
             shard_of = (self._next_shard + np.arange(n)) % nsh
             gid0 = self._total_base + len(self._delta_loc)
@@ -1282,42 +1767,18 @@ class ShardedLiveIndex(_StageTimings):
                     self._delta_loc[d0 + int(j)] = (s, start_local + off)
                     self._shard_gids[s].append(gid0 + int(j))
             self._keys = np.concatenate([self._keys, ks])
-            if self._key_rows is not None:
-                self._key_rows.update(zip(ks.tolist(),
-                                          range(gid0, gid0 + n)))
+            self._note_new_keys(ks, gid0)
             self._gid_arrays = None           # searches rebuild lazily
             self._next_shard = (self._next_shard + n) % nsh
-            return np.arange(gid0, gid0 + n, dtype=np.int64)
+            out = np.arange(gid0, gid0 + n, dtype=np.int64)
+        if wal is not None:
+            wal.commit(seq)                  # durable before acked, off-lock
+        return out
 
-    def _claim_keys(self, keys, n: int) -> np.ndarray:
-        """Validate/assign [n] global external keys (lock held)."""
-        if keys is None:
-            ks = np.arange(self._next_key, self._next_key + n,
-                           dtype=np.int64)
-        else:
-            ks = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-            if ks.shape != (n,):
-                raise ValueError(
-                    f"upsert keys must be [{n}]; got shape {ks.shape}")
-            if np.unique(ks).size != n:
-                raise ValueError("upsert keys must be unique per batch")
-            key_rows = self._key_index()
-            for k in ks.tolist():
-                gid = key_rows.get(k)
-                if gid is not None and self._gid_live(gid):
-                    raise ValueError(
-                        f"key {k} already names a live row (id {gid}); "
-                        f"delete it first to re-point the key")
-        if n:
-            self._next_key = max(self._next_key, int(ks.max()) + 1)
-        return ks
-
-    def _key_index(self) -> dict:
-        if self._key_rows is None:
-            n_tot = self._total_base + len(self._delta_loc)
-            self._key_rows = dict(zip(self._keys[:n_tot].tolist(),
-                                      range(n_tot)))
-        return self._key_rows
+    def _row_live(self, rows: np.ndarray) -> np.ndarray:
+        """bool[R]: which current-generation global ids are live (mixin
+        hook; caller holds the lock)."""
+        return np.array([self._gid_live(int(g)) for g in rows], bool)
 
     def _shard_local(self, gid: int) -> tuple[int, int]:
         """(shard, shard-local id) for a current-generation global id."""
@@ -1341,51 +1802,21 @@ class ShardedLiveIndex(_StageTimings):
                 raise IndexError(
                     f"delete ids must be in [0, {n_tot}); got range "
                     f"[{ids.min()}, {ids.max()}]")
-            if self._wal is not None and not self._wal_quiet:
-                self._wal.log_delete(self._epoch, ids)
+            wal = self._wal if not self._wal_quiet else None
+            if wal is not None:
+                seq = wal.log_delete(self._epoch, ids)
             per: dict[int, list] = {}
             for gid in ids.tolist():
                 s, lid = self._shard_local(gid)
                 per.setdefault(s, []).append(lid)
-            return sum(self.shards[s].delete(lids)
-                       for s, lids in per.items())
-
-    # ---- stable external keys -------------------------------------------
-    def keys_of(self, ids, snapshot: "ShardedLiveSnapshot | None" = None
-                ) -> np.ndarray:
-        """Stable external keys for global ids (−1 stays −1); semantics
-        as in `LiveFilteredIndex.keys_of`."""
-        ids = np.asarray(ids, dtype=np.int64)
-        if snapshot is not None:
-            keys = snapshot.keys
-        else:
-            with self._lock:
-                keys = self._keys[: self._total_base
-                                  + len(self._delta_loc)]
-        out = np.full(ids.shape, -1, dtype=np.int64)
-        valid = ids >= 0
-        if valid.any():
-            out[valid] = keys[ids[valid]]
+            out = sum(self.shards[s].delete(lids)
+                      for s, lids in per.items())
+        if wal is not None:
+            wal.commit(seq)                  # durable before acked, off-lock
         return out
 
-    def rows_of(self, keys) -> np.ndarray:
-        """Current-generation global ids for external keys (−1 if never
-        assigned)."""
-        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-        with self._lock:
-            key_rows = self._key_index()
-            return np.array([key_rows.get(int(k), -1) for k in keys],
-                            dtype=np.int64)
-
-    def delete_keys(self, keys) -> int:
-        """Tombstone rows by stable key; unknown keys raise KeyError."""
-        keys = np.atleast_1d(np.asarray(keys, dtype=np.int64))
-        with self._lock:
-            rows = self.rows_of(keys)
-            if (rows < 0).any():
-                missing = keys[rows < 0].tolist()
-                raise KeyError(f"unknown external keys: {missing}")
-            return self.delete(rows)
+    # stable external keys (`keys_of`/`rows_of`/`delete_keys`/`_claim_keys`)
+    # come from _StableKeyMixin (global ids / global keys).
 
     # ---- durability hook (repro.ann.store) -------------------------------
     def attach_wal(self, wal) -> None:
@@ -1601,8 +2032,11 @@ class ShardedLiveIndex(_StageTimings):
                 locs = list(self._delta_loc)
                 old_total = self._total_base + len(locs)
                 old_keys = self._keys[:old_total].copy()
-                if self._wal is not None:
-                    self._wal.log_compact(self._epoch)
+                wal = self._wal
+                if wal is not None:
+                    seq = wal.log_compact(self._epoch)
+            if wal is not None:
+                wal.commit(seq)
             vectors, bitmaps, kept = self._gather(snaps, locs)
             new_ds, order = ANNDataset.from_packed(
                 self._name, vectors, bitmaps, self._universe,
@@ -1623,8 +2057,7 @@ class ShardedLiveIndex(_StageTimings):
                     LiveFilteredIndex(
                         new_ds.row_slice(int(a), int(b),
                                          name=f"{self._name}/shard{i}"),
-                        registry=self._registry, device=self._devices[i],
-                        delta_chunk=self._delta_chunk)
+                        device=self._devices[i], **self._shard_kw())
                     for i, (a, b) in enumerate(zip(new_bounds[:-1],
                                                    new_bounds[1:]))]
                 new_base: ANNDataset | None = new_ds
@@ -1635,9 +2068,8 @@ class ShardedLiveIndex(_StageTimings):
                 new_shards = [
                     LiveFilteredIndex.empty(
                         f"{self._name}/shard{i}", self._dim,
-                        self._universe, registry=self._registry,
-                        device=self._devices[i],
-                        delta_chunk=self._delta_chunk)
+                        self._universe, device=self._devices[i],
+                        **self._shard_kw())
                     for i in range(nsh)]
                 new_base = None
             for shard in new_shards:

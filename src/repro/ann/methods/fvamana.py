@@ -49,6 +49,17 @@ class FVamana(engine.Method):
                                  medoid=int(arrays["medoid"]),
                                  label_entry=arrays["label_entry"])
 
+    def graft_index(self, new_ds: ANNDataset, old_index: graph.VamanaGraph,
+                    old_ds: ANNDataset, old_to_new, new_rows, build_params):
+        n_surv = int((old_to_new >= 0).sum())
+        # grafting pays off only while the surviving graph dominates; a
+        # mostly-new dataset searches better on a fresh build
+        if n_surv == 0 or new_ds.n == 0 or len(new_rows) > n_surv:
+            return None
+        return graph.graft_graph(old_index, new_ds.vectors, new_ds.bitmaps,
+                                 new_ds.universe, old_to_new, new_rows,
+                                 r=int(build_params.get("r", 32)), seed=17)
+
     def search(self, fx, index: graph.VamanaGraph, qvecs, qbms,
                pred: Predicate, k: int, search_params: dict):
         dev = fx.device

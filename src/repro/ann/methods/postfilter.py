@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.ann import engine, topk
 from repro.ann.dataset import ANNDataset
-from repro.ann.ivf import IVFIndex, build_ivf
+from repro.ann.ivf import IVFIndex, build_ivf, graft_ivf
 from repro.ann.predicates import Predicate
 
 
@@ -70,6 +70,12 @@ class PostFilter(engine.Method):
                         centroid_norms=arrays["centroid_norms"],
                         lists=arrays["lists"],
                         list_len=arrays["list_len"])
+
+    def graft_index(self, new_ds: ANNDataset, old_index: IVFIndex,
+                    old_ds: ANNDataset, old_to_new, new_rows, build_params):
+        if old_index.centroids.shape[0] == 0 or new_ds.n == 0:
+            return None
+        return graft_ivf(old_index, new_ds.vectors, old_to_new)
 
     def search(self, fx, index: IVFIndex, qvecs, qbms, pred: Predicate,
                k: int, search_params: dict):

@@ -40,6 +40,7 @@ import json
 import os
 import shutil
 import struct
+import threading
 import time
 import zlib
 
@@ -48,8 +49,8 @@ import numpy as np
 from repro.ann import labels as lb
 from repro.ann import registry as registry_mod
 from repro.ann.dataset import ANNDataset, fsync_path
-from repro.ann.live import (DEFAULT_DELTA_CHUNK, LiveFilteredIndex,
-                            ShardedLiveIndex)
+from repro.ann.live import (DEFAULT_DELTA_CHUNK, ChunkIndex,
+                            LiveFilteredIndex, ShardedLiveIndex)
 
 STORE_FORMAT = "repro.index-store"
 STORE_VERSION = 1
@@ -58,6 +59,7 @@ _SEGMENTS_DIR = "segments"
 _WAL_DIR = "wal"
 _KEYS_FILE = "keys.npy"
 _INDEX_DIR = "indexes"
+_CHUNK_DIR = "delta_chunks"
 
 # ---------------------------------------------------------------------------
 # write-ahead log
@@ -86,14 +88,23 @@ class WalRecord:
 
 
 class WriteAheadLog:
-    """Append-only CRC-framed operation log with batched fsync.
+    """Append-only CRC-framed operation log with group-commit fsync.
 
     Record frame: ``<IBQII`` header (magic, type, generation,
-    payload_len, crc32(payload)) + payload. Appends always reach the OS
-    (`flush`); `os.fsync` runs every ``sync_every`` records (1 = every
-    record is durable before the write call returns; larger values
-    trade the crash-loss window for ingest throughput). The file starts
-    with a 24-byte header (magic, dim, width, creation generation).
+    payload_len, crc32(payload)) + payload. The file starts with a
+    24-byte header (magic, dim, width, creation generation).
+
+    Durability is split from appending so callers can log under their
+    own write lock but fsync *off* it: `log_*` writes the record to the
+    OS (`flush`) and returns its sequence number; `commit(seq)` then
+    makes it durable before the operation is acknowledged. With
+    ``sync_every == 1`` every commit waits for an fsync, but concurrent
+    committers share one: the first caller into `wait_durable` becomes
+    the fsync leader and its single fsync covers every record appended
+    so far, so followers return without touching the disk
+    (group commit). Larger ``sync_every`` values skip the wait until
+    that many records accumulate — the same crash-loss window as
+    before, minus the inline fsync.
     """
 
     def __init__(self, path: str, file, *, dim: int, width: int,
@@ -103,7 +114,10 @@ class WriteAheadLog:
         self.width = int(width)
         self.sync_every = max(1, int(sync_every))
         self._f = file
-        self._since_sync = 0
+        self._mu = threading.Lock()        # serializes appends
+        self._fsync_mu = threading.Lock()  # serializes fsync leaders
+        self._seq = 0                      # records appended (and flushed)
+        self._durable_seq = 0              # records covered by an fsync
         self._closed = False
 
     # ---- lifecycle ------------------------------------------------------
@@ -125,48 +139,68 @@ class WriteAheadLog:
         return cls(path, f, dim=dim, width=width, sync_every=sync_every)
 
     def sync(self) -> None:
-        """Force buffered records to durable storage."""
-        if not self._closed:
-            self._f.flush()
+        """Force every appended record to durable storage."""
+        self.wait_durable(self._seq)
+
+    def wait_durable(self, seq: int) -> None:
+        """Block until record `seq` is fsynced. One concurrent caller
+        becomes the leader whose single fsync covers every record
+        flushed so far; the rest find `_durable_seq` already past their
+        seq and return without an fsync of their own."""
+        if self._durable_seq >= seq:
+            return
+        with self._fsync_mu:
+            if self._durable_seq >= seq or self._closed:
+                return
+            with self._mu:
+                target = self._seq        # all appended records are flushed
             os.fsync(self._f.fileno())
-            self._since_sync = 0
+            self._durable_seq = max(self._durable_seq, target)
+
+    def commit(self, seq: int) -> None:
+        """The ack point for record `seq`: durable before returning when
+        ``sync_every == 1``, otherwise fsync only once a batch of
+        ``sync_every`` records has accumulated. Call *outside* any lock
+        readers contend on — that is the point of the split."""
+        if self.sync_every == 1 or seq - self._durable_seq >= self.sync_every:
+            self.wait_durable(seq)
 
     def close(self) -> None:
         if not self._closed:
             self.sync()
-            self._f.close()
-            self._closed = True
+            with self._fsync_mu, self._mu:
+                self._f.close()
+                self._closed = True
 
     # ---- append ---------------------------------------------------------
-    def _append(self, rtype: int, gen: int, payload: bytes) -> None:
-        if self._closed:
-            raise RuntimeError(f"WAL {self.path!r} is closed")
+    def _append(self, rtype: int, gen: int, payload: bytes) -> int:
         crc = zlib.crc32(payload) & 0xFFFFFFFF
-        self._f.write(_REC_HEADER.pack(_REC_MAGIC, rtype, int(gen),
-                                       len(payload), crc))
-        self._f.write(payload)
-        self._f.flush()
-        self._since_sync += 1
-        if self._since_sync >= self.sync_every:
-            os.fsync(self._f.fileno())
-            self._since_sync = 0
+        with self._mu:
+            if self._closed:
+                raise RuntimeError(f"WAL {self.path!r} is closed")
+            self._f.write(_REC_HEADER.pack(_REC_MAGIC, rtype, int(gen),
+                                           len(payload), crc))
+            self._f.write(payload)
+            self._f.flush()
+            self._seq += 1
+            return self._seq
 
     def log_upsert(self, gen: int, keys: np.ndarray, vectors: np.ndarray,
-                   bitmaps: np.ndarray) -> None:
+                   bitmaps: np.ndarray) -> int:
         n = int(vectors.shape[0])
         payload = (struct.pack("<I", n)
                    + np.ascontiguousarray(keys, np.int64).tobytes()
                    + np.ascontiguousarray(vectors, np.float32).tobytes()
                    + np.ascontiguousarray(bitmaps, np.uint32).tobytes())
-        self._append(REC_UPSERT, gen, payload)
+        return self._append(REC_UPSERT, gen, payload)
 
-    def log_delete(self, gen: int, ids: np.ndarray) -> None:
+    def log_delete(self, gen: int, ids: np.ndarray) -> int:
         ids = np.ascontiguousarray(ids, np.int64)
         payload = struct.pack("<I", ids.size) + ids.tobytes()
-        self._append(REC_DELETE, gen, payload)
+        return self._append(REC_DELETE, gen, payload)
 
-    def log_compact(self, gen: int) -> None:
-        self._append(REC_COMPACT, gen, b"")
+    def log_compact(self, gen: int) -> int:
+        return self._append(REC_COMPACT, gen, b"")
 
     # ---- replay ---------------------------------------------------------
     @staticmethod
@@ -469,6 +503,7 @@ class IndexStore:
         records = WriteAheadLog.replay(wal_path, dim=int(manifest["dim"]),
                                        width=width, truncate=True)
         store._apply_records(index, records)
+        store._adopt_chunk_indexes(index, seg_dir, manifest, records)
         wal = WriteAheadLog.open_append(wal_path, dim=int(manifest["dim"]),
                                         width=width, sync_every=sync_every)
         store._wal = wal
@@ -500,13 +535,22 @@ class IndexStore:
 
     def _restore_built(self, index, seg_dir: str, built: list) -> None:
         """Rebuild `built_keys()` on load: adopt the persisted index
-        files, re-run the offline build for the rest."""
+        files (single or per-shard), re-run the offline build for the
+        rest."""
         reg = self._registry or registry_mod.default_registry()
         if isinstance(index, ShardedLiveIndex):
-            targets = [s._base_fx for s in index.shards]
+            all_fx = [s._base_fx for s in index.shards]
         else:
-            targets = [index._base_fx]
-        targets = [fx for fx in targets if fx is not None]
+            all_fx = [index._base_fx]
+
+        def adopt(fx, fname, method, bp_t):
+            with np.load(os.path.join(seg_dir, fname)) as z:
+                arrays = {k: z[k] for k in z.files}
+            fx.adopt_index(
+                method, bp_t,
+                registry_mod.deserialize_index(
+                    method, fx.ds, dict(bp_t), arrays))
+
         for entry in built:
             m_name, bp, fname = entry
             bp_t = tuple((k, v) for k, v in bp)
@@ -514,16 +558,44 @@ class IndexStore:
                 method = reg.get(m_name)
             except KeyError:
                 continue                      # method no longer registered
-            for fx in targets:
-                if fname is not None and len(targets) == 1:
-                    with np.load(os.path.join(seg_dir, fname)) as z:
-                        arrays = {k: z[k] for k in z.files}
-                    fx.adopt_index(
-                        method, bp_t,
-                        registry_mod.deserialize_index(
-                            method, fx.ds, dict(bp_t), arrays))
+            if isinstance(fname, list):       # per-shard persisted files
+                files = (fname if len(fname) == len(all_fx)
+                         else [None] * len(all_fx))
+                for fx, fn in zip(all_fx, files):
+                    if fx is None:
+                        continue
+                    if fn is not None:
+                        adopt(fx, fn, method, bp_t)
+                    else:
+                        fx.get_index(method, bp_t)
+                continue
+            for fx in all_fx:
+                if fx is None:
+                    continue
+                if fname is not None and len(all_fx) == 1:
+                    adopt(fx, fname, method, bp_t)
                 else:
                     fx.get_index(method, bp_t)
+
+    def _adopt_chunk_indexes(self, index, seg_dir: str, manifest: dict,
+                             records: list[WalRecord]) -> None:
+        """Install the checkpointed sealed-chunk mini-IVF structures on
+        the recovered handle. WAL replay reproduces the delta rows in
+        their original insertion order, so chunk i covers the same rows
+        it did at checkpoint time — unless a compact barrier replayed
+        (the delta was rebuilt) or the handle was opened with a
+        different `delta_chunk` (the boundaries moved); both cases skip
+        adoption and fall back to the lazy rebuild."""
+        entry = manifest.get("delta_chunks")
+        if (not entry or not isinstance(index, LiveFilteredIndex)
+                or int(entry.get("chunk", -1)) != index._delta_chunk
+                or any(r.kind == "compact" for r in records)):
+            return
+        adopt: dict[int, ChunkIndex] = {}
+        for i, fn in enumerate(entry["files"]):
+            with np.load(os.path.join(seg_dir, fn)) as z:
+                adopt[i] = ChunkIndex.from_arrays({k: z[k] for k in z.files})
+        index._delta.adopt_chunk_indexes(adopt)
 
     def _apply_records(self, index, records: list[WalRecord]) -> None:
         """Replay WAL operations onto the freshly loaded handle.
@@ -722,7 +794,12 @@ class IndexStore:
                 np.save(os.path.join(seg_dir, _KEYS_FILE),
                         np.ascontiguousarray(state["base_keys"], np.int64))
                 built = self._persist_indexes(index, seg_dir)
-                for extra in [_KEYS_FILE] + [b[2] for b in built if b[2]]:
+                chunk_files = self._persist_chunk_indexes(index, seg_dir)
+                extras = [_KEYS_FILE] + list(chunk_files)
+                for b in built:
+                    fs = b[2] if isinstance(b[2], list) else [b[2]]
+                    extras.extend(f for f in fs if f)
+                for extra in extras:
                     fsync_path(os.path.join(seg_dir, extra))
                 fsync_path(seg_dir)
                 with index._lock:
@@ -740,7 +817,8 @@ class IndexStore:
                         wal.sync()
                         manifest = self._manifest_dict(
                             index, store_gen, seg_rel, wal_rel, gen,
-                            state2["next_key"], base_ds.n, built)
+                            state2["next_key"], base_ds.n, built,
+                            chunk_files)
                         self._commit_manifest(manifest)
                         old_wal, self._wal = self._wal, wal
                         index.attach_wal(wal)
@@ -792,23 +870,46 @@ class IndexStore:
             wal.log_delete(gen, state["dead_ids"])
 
     def _persist_indexes(self, index, seg_dir: str) -> list:
-        """Serialize the built method indexes that support it (single
-        index only — per-shard bases differ, so sharded stores record
-        the build keys and rebuild on open). Returns the manifest's
-        `built` list: [method, build_params, file-or-null]."""
+        """Serialize the built method indexes that support it. Returns
+        the manifest's `built` list: [method, build_params, file-spec]
+        where file-spec is a filename (single index), a per-shard list
+        of filenames/nulls (sharded), or null (rebuild on open)."""
         built: list = []
         reg = self._registry or registry_mod.default_registry()
+        idx_dir = os.path.join(seg_dir, _INDEX_DIR)
         if isinstance(index, ShardedLiveIndex):
-            seen = []
-            for s in index.shards:
+            shards = list(index.shards)
+            seen: list = []
+            for s in shards:
                 for key in s.built_keys():
                     if key not in seen:
                         seen.append(key)
-            return [[m, [list(kv) for kv in bp], None] for m, bp in seen]
+            for i, (m_name, bp) in enumerate(seen):
+                try:
+                    method = reg.get(m_name)
+                except KeyError:
+                    continue
+                files: list = []
+                for j, s in enumerate(shards):
+                    fx = s._base_fx
+                    arrays = None
+                    if fx is not None and (m_name, bp) in fx._indexes:
+                        arrays = registry_mod.serialize_index(
+                            method, fx._indexes[(m_name, bp)])
+                    if arrays is None:
+                        files.append(None)
+                        continue
+                    os.makedirs(idx_dir, exist_ok=True)
+                    fname = os.path.join(_INDEX_DIR,
+                                         f"{m_name}-{i}-s{j}.npz")
+                    np.savez(os.path.join(seg_dir, fname), **arrays)
+                    files.append(fname)
+                built.append([m_name, [list(kv) for kv in bp],
+                              files if any(files) else None])
+            return built
         fx = index._base_fx
         if fx is None:
             return built
-        idx_dir = os.path.join(seg_dir, _INDEX_DIR)
         for i, (m_name, bp) in enumerate(fx.built_keys()):
             fname = None
             try:
@@ -824,8 +925,27 @@ class IndexStore:
             built.append([m_name, [list(kv) for kv in bp], fname])
         return built
 
+    def _persist_chunk_indexes(self, index, seg_dir: str) -> list:
+        """Write the already-built sealed-chunk mini-IVF structures
+        (`live.ChunkIndex`) next to the segment so `open()` adopts them
+        instead of re-clustering the replayed delta. Single handles
+        only — a sharded delta re-derives per shard lazily."""
+        if not isinstance(index, LiveFilteredIndex):
+            return []
+        chunks = index._delta.built_chunk_indexes()
+        if not chunks:
+            return []
+        cdir = os.path.join(seg_dir, _CHUNK_DIR)
+        os.makedirs(cdir, exist_ok=True)
+        files = []
+        for i, ci in enumerate(chunks):
+            fname = os.path.join(_CHUNK_DIR, f"chunk-{i:04d}.npz")
+            np.savez(os.path.join(seg_dir, fname), **ci.arrays())
+            files.append(fname)
+        return files
+
     def _manifest_dict(self, index, store_gen, seg_rel, wal_rel, live_gen,
-                       next_key, n_base, built) -> dict:
+                       next_key, n_base, built, chunk_files=()) -> dict:
         return {
             "format": STORE_FORMAT,
             "version": STORE_VERSION,
@@ -845,6 +965,9 @@ class IndexStore:
             "n_base": int(n_base),
             "router": self._manifest.get("router"),
             "built": built,
+            "delta_chunks": ({"chunk": int(index._delta_chunk),
+                              "files": list(chunk_files)}
+                             if chunk_files else None),
             "updated": time.strftime("%Y-%m-%dT%H:%M:%S"),
         }
 

@@ -230,6 +230,122 @@ def merge_topk_accum(dists, ids, *, k: int, bq: int = DEFAULT_BQ,
 
 
 # ---------------------------------------------------------------------------
+# fused live search — base candidates + delta scan + tombstones, one launch
+# ---------------------------------------------------------------------------
+
+def _tombstone_bits(tomb_ref, ids):
+    """Packed-tombstone lookup: ids [...] i32 global row ids -> bool dead.
+
+    `tomb_ref` is [TW] uint32 with bit ``r & 31`` of word ``r >> 5`` set for
+    dead row r (numpy ``packbits(bitorder='little')`` layout). Ids are
+    clipped into range before the gather: out-of-range ids (−1 pads,
+    sentinel rows past the watermark) read an arbitrary bit, which is
+    harmless because their score is already PAD_SCORE."""
+    tw = tomb_ref.shape[0]
+    safe = jnp.clip(ids, 0, tw * 32 - 1)
+    words = jnp.take(tomb_ref[...], safe >> 5, axis=0)
+    bit = jnp.right_shift(words, (safe & 31).astype(jnp.uint32))
+    return (bit & jnp.uint32(1)) != 0
+
+
+def _fused_live_kernel(q_ref, qbm_ref, candd_ref, candi_ref, dvec_ref,
+                       dnorm_ref, dbm_ref, did_ref, tomb_ref,
+                       outd_ref, outi_ref, accd_ref, acci_ref, *,
+                       pred: int, k: int):
+    """Single-launch live read: fold the routed base candidates and the
+    brute-force delta scan into one VMEM-carried running top-k.
+
+    Grid = (query tiles, delta blocks). On the first delta block the base
+    candidate set [BQ, KB] is tombstone-masked in-kernel (packed-word
+    gather — no host mask) and folded into the freshly initialised carry;
+    every step then scores one [BN, D] delta block, masks it by predicate
+    AND tombstone, and folds it through the same `_fold_topk` accumulator.
+    The final [Q, k] is written once on the last block — no [S, Q, K] HBM
+    intermediate, no host merge. Because the base carry is folded before
+    any delta block, score ties resolve to base rows, matching the
+    staged path's merge order exactly."""
+    pid_n = pl.program_id(1)
+
+    @pl.when(pid_n == 0)
+    def _init():
+        accd_ref[...] = jnp.full_like(accd_ref, PAD_SCORE)
+        acci_ref[...] = jnp.full_like(acci_ref, -1)
+        cd = candd_ref[...]
+        ci = candi_ref[...]
+        bad = (ci < 0) | _tombstone_bits(tomb_ref, ci) | (cd >= PAD_SCORE)
+        _fold_topk(accd_ref, acci_ref,
+                   jnp.where(bad, PAD_SCORE, cd),
+                   jnp.where(bad, -1, ci), k)
+
+    s = _masked_scores(q_ref, qbm_ref, dvec_ref, dnorm_ref, dbm_ref, pred)
+    ids_row = did_ref[...]                       # [BN] i32 global ids, −1 pad
+    dead = _tombstone_bits(tomb_ref, ids_row[None, :]) | (ids_row[None, :] < 0)
+    s = jnp.where(dead, PAD_SCORE, s)
+    ids_blk = jnp.where(s >= PAD_SCORE, -1,
+                        jnp.broadcast_to(ids_row[None, :], s.shape))
+    _fold_topk(accd_ref, acci_ref, s, ids_blk, k)
+
+    @pl.when(pid_n == pl.num_programs(1) - 1)
+    def _write():
+        outd_ref[...] = accd_ref[...]
+        outi_ref[...] = acci_ref[...]
+
+
+def fused_live_accum(qvecs, qbms, cand_dists, cand_ids, dvec, dnorms, dbm,
+                     delta_ids, tomb_words, *, pred: int, k: int,
+                     bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
+                     interpret: bool = False):
+    """Raw pallas_call for the fused live read.
+
+    qvecs [Q, D] (Q % bq == 0), cand_dists/cand_ids [Q, KB] routed base
+    candidates (global ids, −1/PAD at invalid slots), dvec [ND, D]
+    (ND % bn == 0) delta mirror with dnorms [ND] (PAD_SCORE at sentinel
+    rows), dbm [ND, W], delta_ids [ND] i32 global ids (−1 at pads),
+    tomb_words [TW] uint32 packed tombstones covering base + delta rows.
+    Output: dists [Q, k] f32, ids [Q, k] i32 — final merged live top-k.
+    """
+    q, d = qvecs.shape
+    nd, w = dbm.shape
+    kb = cand_ids.shape[1]
+    tw = tomb_words.shape[0]
+    assert q % bq == 0 and nd % bn == 0, (q, bq, nd, bn)
+    grid = (q // bq, nd // bn)
+    kernel = functools.partial(_fused_live_kernel, pred=pred, k=k)
+    outd, outi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, w), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, kb), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, kb), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bn, d), lambda qt, nb: (nb, 0)),
+            pl.BlockSpec((bn,), lambda qt, nb: (nb,)),
+            pl.BlockSpec((bn, w), lambda qt, nb: (nb, 0)),
+            pl.BlockSpec((bn,), lambda qt, nb: (nb,)),
+            pl.BlockSpec((tw,), lambda qt, nb: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qt, nb: (qt, 0)),
+            pl.BlockSpec((bq, k), lambda qt, nb: (qt, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qvecs, qbms, cand_dists, cand_ids, dvec, dnorms, dbm, delta_ids,
+      tomb_words)
+    return outd, outi
+
+
+# ---------------------------------------------------------------------------
 # legacy per-block variant — kept as the parity reference for tests
 # ---------------------------------------------------------------------------
 

@@ -1,10 +1,24 @@
 """Jitted wrappers around the Pallas kernels: padding to block multiples,
-sentinel cleanup, CPU interpret-mode fallback.
+sentinel cleanup, backend dispatch.
 
 `masked_topk` calls the VMEM-accumulating kernel, which emits final [Q, k]
 dists/ids directly — there is no [n_blocks, Q, k] HBM intermediate and no
 cross-block merge here. The legacy per-block kernel + merge survives as
-`masked_topk_multiblock` purely as a parity reference for tests."""
+`masked_topk_multiblock` purely as a parity reference for tests.
+
+Off TPU (``interpret=None``, the default) the top-k ops run a
+**fold-identical XLA formulation** instead of the interpret-mode kernel:
+the VMEM fold is a stable selection — smallest score first, ties to the
+earliest-folded candidate — which is exactly `jax.lax.top_k`'s
+lowest-index tie rule over the candidates laid out in fold order (base
+carry first, then blocks by ascending id). The score expression is the
+kernel's, so on inputs where the matmul bits agree the results are
+bit-identical (the parity tests pin this on an exactly-representable
+grid); on arbitrary floats the backends may differ in the last ulp of a
+distance, exactly as two matmul shapes already can. Interpret mode
+emulates the kernel's insertion loop per grid step at Python speed, fine
+for parity tests but ~6× slower than XLA on the live read path; passing
+an explicit ``interpret=True/False`` still forces the Pallas kernel."""
 
 from __future__ import annotations
 
@@ -30,6 +44,36 @@ def _pad_rows(x, mult, fill=0):
         [x, jnp.full((pad,) + x.shape[1:], fill, dtype=x.dtype)], axis=0)
 
 
+def _stable_topk(all_d, all_i, k):
+    """k smallest of (dists, ids) laid out in kernel fold order; ties go
+    to the lowest index — `jax.lax.top_k`'s documented tie rule — which
+    is exactly `_fold_topk`'s first-match argmin. Invalid slots (score >=
+    PAD_SCORE or id < 0) come back as −1 ids with +inf dists, trailing."""
+    q, c = all_d.shape
+    if k > c:
+        all_d = jnp.concatenate(
+            [all_d, jnp.full((q, k - c), mk.PAD_SCORE, all_d.dtype)], axis=1)
+        all_i = jnp.concatenate(
+            [all_i, jnp.full((q, k - c), -1, all_i.dtype)], axis=1)
+    neg, sel = jax.lax.top_k(-all_d, k)
+    out_i = jnp.take_along_axis(all_i, sel, axis=1)
+    bad = (out_i < 0) | (-neg >= mk.PAD_SCORE)
+    return jnp.where(bad, -1, out_i), jnp.where(bad, jnp.inf, -neg)
+
+
+def _masked_topk_xla(qvecs, qbms, base, norms, bitmaps, *, pred, k):
+    """XLA formulation of the masked scan: same score expression and
+    predicate word-loop as the kernel, one stable top_k over the rows in
+    ascending-id order (= the kernel's block fold order)."""
+    scores = norms[None, :].astype(jnp.float32) - 2.0 * jnp.dot(
+        qvecs, base.T, preferred_element_type=jnp.float32)
+    mask = mk._predicate_mask_block(bitmaps, qbms, pred)
+    s = jnp.where(mask, scores, mk.PAD_SCORE)
+    ids = jnp.broadcast_to(
+        jnp.arange(base.shape[0], dtype=jnp.int32)[None, :], s.shape)
+    return _stable_topk(s, ids, k)
+
+
 def _pad_case(qvecs, qbms, base, norms, bitmaps, bq, bn):
     """Pad all operands to block multiples; padded base rows get sentinel
     norms (never selected: zero vectors + PAD norm give exactly PAD score)."""
@@ -48,9 +92,14 @@ def masked_topk(qvecs, qbms, base, norms, bitmaps, *, pred: int, k: int,
 
     Handles arbitrary Q/N by padding to block multiples; the kernel carries
     the running top-k across base blocks in VMEM and returns [Q, k] directly.
+    Off TPU the default is the bit-identical XLA formulation; pass an
+    explicit `interpret` to force the Pallas kernel.
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return _masked_topk_xla(qvecs, qbms, base, norms, bitmaps,
+                                    pred=pred, k=k)
+        interpret = False
     q = qvecs.shape[0]
     n = base.shape[0]
     qv, qb, bs, nm, bm, bq_eff = _pad_case(qvecs, qbms, base, norms, bitmaps,
@@ -113,10 +162,12 @@ def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
     The kernel carries the running [Q, k] result across the shard axis in
     VMEM scratch (same accumulation as `masked_topk`), so the merge makes
     one pass over the [S, Q, K] candidates with no [Q, S*K] reshuffle.
-    S=1 skips the Pallas launch entirely: a single segment only needs the
-    re-sort that pushes its invalid slots to the tail, which one XLA
-    `top_k` does. Invalid outputs come back as id −1 with dist +inf.
+    S=1 — and any S off TPU (`interpret=None`) — skips the Pallas launch
+    entirely: the shard-major flatten is the kernel's fold order, so one
+    stable XLA `top_k` reproduces the VMEM fold bit for bit. Invalid
+    outputs come back as id −1 with dist +inf.
     """
+    use_xla = interpret is None and not _on_tpu()
     if interpret is None:
         interpret = not _on_tpu()
     s, q, kk = ids.shape
@@ -130,12 +181,9 @@ def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
         ids = jnp.concatenate(
             [ids, jnp.full((s, q, k - kk), -1, ids.dtype)], axis=2)
         kk = k
-    if s == 1:                      # single-segment pass-through
-        neg, sel = jax.lax.top_k(-d[0], k)
-        out_i = jnp.take_along_axis(ids[0], sel, axis=1)
-        bad = (out_i < 0) | (-neg >= mk.PAD_SCORE)
-        return (jnp.where(bad, -1, out_i),
-                jnp.where(bad, jnp.inf, -neg))
+    if s == 1 or use_xla:           # shard-major flatten = fold order
+        return _stable_topk(jnp.moveaxis(d, 0, 1).reshape(q, s * kk),
+                            jnp.moveaxis(ids, 0, 1).reshape(q, s * kk), k)
     bq_eff = min(bq, max(8, q))
     pad = (-q) % bq_eff
     if pad:
@@ -148,6 +196,119 @@ def merge_topk(ids, dists, *, k: int | None = None, bq: int = mk.DEFAULT_BQ,
     outd, outi = outd[:q], outi[:q]
     bad = (outi < 0) | (outd >= mk.PAD_SCORE)
     return jnp.where(bad, -1, outi), jnp.where(bad, jnp.inf, outd)
+
+
+def _fused_live_xla(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms, dbm,
+                    delta_ids, tomb_words, *, pred, k):
+    """XLA formulation of the fused live read: same candidate cleanup,
+    packed-word tombstone gather, score expression and predicate loop as
+    `mk.fused_live_accum`; candidates laid out base-first then delta rows
+    in mirror order (= the kernel's fold order) under one stable top_k."""
+    q = qvecs.shape[0]
+    ci = cand_ids.astype(jnp.int32)
+    cd = jnp.where((ci < 0) | ~jnp.isfinite(cand_dists)
+                   | (cand_dists >= mk.PAD_SCORE)
+                   | mk._tombstone_bits(tomb_words, ci),
+                   mk.PAD_SCORE, cand_dists.astype(jnp.float32))
+    ci = jnp.where(cd >= mk.PAD_SCORE, -1, ci)
+    scores = dnorms[None, :].astype(jnp.float32) - 2.0 * jnp.dot(
+        qvecs, dvec.T, preferred_element_type=jnp.float32)
+    mask = mk._predicate_mask_block(dbm, qbms, pred)
+    dead = mk._tombstone_bits(tomb_words, delta_ids) | (delta_ids < 0)
+    s = jnp.where(mask & ~dead[None, :], scores, mk.PAD_SCORE)
+    di = jnp.broadcast_to(delta_ids[None, :], s.shape)
+    return _stable_topk(jnp.concatenate([cd, s], axis=1),
+                        jnp.concatenate([ci, di], axis=1), k)
+
+
+def _fused_core(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms, dbm,
+                delta_ids, tomb_words, *, pred, k, bq, bn, interpret):
+    """Shared padding/cleanup around `mk.fused_live_accum`; `interpret is
+    None` (the off-TPU default) takes the XLA formulation instead."""
+    if interpret is None:
+        return _fused_live_xla(qvecs, qbms, cand_ids, cand_dists, dvec,
+                               dnorms, dbm, delta_ids, tomb_words,
+                               pred=pred, k=k)
+    q = qvecs.shape[0]
+    bq_eff = min(bq, max(8, q))
+    qv = _pad_rows(qvecs, bq_eff)
+    qb = _pad_rows(qbms, bq_eff)
+    if cand_ids.shape[1] == 0:       # no base candidates: one dummy slot
+        cand_ids = jnp.full((q, 1), -1, jnp.int32)
+        cand_dists = jnp.full((q, 1), mk.PAD_SCORE, jnp.float32)
+    cd = jnp.where((cand_ids < 0) | ~jnp.isfinite(cand_dists)
+                   | (cand_dists >= mk.PAD_SCORE),
+                   mk.PAD_SCORE, cand_dists.astype(jnp.float32))
+    ci = jnp.where(cd >= mk.PAD_SCORE, -1, cand_ids.astype(jnp.int32))
+    cd = _pad_rows(cd, bq_eff, fill=mk.PAD_SCORE)
+    ci = _pad_rows(ci, bq_eff, fill=-1)
+    dv = _pad_rows(dvec, bn)
+    dn = _pad_rows(dnorms, bn, fill=mk.PAD_SCORE)
+    db = _pad_rows(dbm, bn)
+    di = _pad_rows(delta_ids, bn, fill=-1)
+    tw = _pad_rows(tomb_words, 128)
+    outd, outi = mk.fused_live_accum(qv, qb, cd, ci, dv, dn, db, di, tw,
+                                     pred=pred, k=k, bq=bq_eff, bn=bn,
+                                     interpret=interpret)
+    ids, dists = outi[:q], outd[:q]
+    bad = (ids < 0) | (dists >= mk.PAD_SCORE)
+    return jnp.where(bad, -1, ids), jnp.where(bad, jnp.inf, dists)
+
+
+@partial(jax.jit, static_argnames=("pred", "k", "bq", "bn", "interpret"))
+def fused_live_topk(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms, dbm,
+                    base_n, tomb_words, *, pred: int, k: int,
+                    bq: int = mk.DEFAULT_BQ, bn: int = mk.DEFAULT_BN,
+                    interpret: bool | None = None):
+    """Fused live top-k: one launch folding routed base candidates with a
+    full brute-force scan of the delta mirror, tombstones applied to both
+    candidate sets in-kernel.
+
+    Args:
+        cand_ids/cand_dists: [Q, KB] routed base candidates (global ids,
+            −1 / +inf at invalid slots). KB may be 0.
+        dvec/dnorms/dbm: delta device mirror (sentinel rows carry
+            PAD_SCORE norms and never surface).
+        base_n: i32 scalar — delta row r has global id base_n + r. Traced,
+            so generation changes don't recompile.
+        tomb_words: [TW] uint32 packed tombstones over base + delta rows
+            (little-endian bit order).
+
+    Returns (ids [Q, k] i32 with −1 pads, dists [Q, k] f32 with +inf pads);
+    bit-identical to the staged base→masked_topk→merge_topk path.
+    """
+    if interpret is None and _on_tpu():
+        interpret = False
+    nd = dvec.shape[0]
+    di = jnp.arange(nd, dtype=jnp.int32) + jnp.int32(base_n)
+    return _fused_core(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms, dbm,
+                       di, tomb_words, pred=pred, k=k, bq=bq, bn=bn,
+                       interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("pred", "k", "bq", "bn", "interpret"))
+def fused_live_topk_select(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms,
+                           dbm, sel, base_n, tomb_words, *, pred: int,
+                           k: int, bq: int = mk.DEFAULT_BQ,
+                           bn: int = mk.DEFAULT_BN,
+                           interpret: bool | None = None):
+    """Fused live top-k over a *selected subset* of delta rows.
+
+    `sel` is [NS] i32 delta-local row indices (−1 pads) chosen by the
+    per-chunk mini-IVF pruner; the kernel scans only the gathered rows.
+    Semantically identical to `fused_live_topk` whenever the pruner's
+    exact ball bound holds (rows it drops cannot enter any query's top-k).
+    """
+    if interpret is None and _on_tpu():
+        interpret = False
+    safe = jnp.maximum(sel, 0)
+    dv = jnp.take(dvec, safe, axis=0)
+    dn = jnp.where(sel < 0, mk.PAD_SCORE, jnp.take(dnorms, safe))
+    db = jnp.take(dbm, safe, axis=0)
+    di = jnp.where(sel < 0, -1, sel + jnp.int32(base_n))
+    return _fused_core(qvecs, qbms, cand_ids, cand_dists, dv, dn, db,
+                       di, tomb_words, pred=pred, k=k, bq=bq, bn=bn,
+                       interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("pred", "bq", "bn", "interpret"))

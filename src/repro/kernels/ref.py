@@ -42,6 +42,41 @@ def selectivity_ref(qbms, bitmaps, *, pred: int):
                    axis=1).astype(jnp.int32)
 
 
+def fused_live_topk_ref(qvecs, qbms, cand_ids, cand_dists, dvec, dnorms,
+                        dbm, base_n, tomb, *, pred: int, k: int):
+    """Oracle for the fused live read: tombstone-mask the routed base
+    candidates, brute-force the delta rows (global id = base_n + row),
+    concatenate base-first (ties resolve to base, matching the kernel's
+    fold order) and extract the k smallest. `tomb` is bool [n_total]."""
+    nd = dvec.shape[0]
+    d_ids = base_n + jnp.arange(nd, dtype=jnp.int32)
+    scores = dnorms[None, :].astype(jnp.float32) - 2.0 * jnp.dot(
+        qvecs, dvec.T, preferred_element_type=jnp.float32)
+    mask = predicate_mask_ref(dbm, qbms, pred)
+    live = ~tomb[jnp.clip(d_ids, 0, tomb.shape[0] - 1)]
+    s = jnp.where(mask & live[None, :], scores, jnp.inf)
+
+    ci = cand_ids.astype(jnp.int32)
+    dead = tomb[jnp.clip(ci, 0, tomb.shape[0] - 1)] | (ci < 0)
+    cd = jnp.where(dead | ~jnp.isfinite(cand_dists), jnp.inf, cand_dists)
+
+    q = qvecs.shape[0]
+    all_d = jnp.concatenate([cd, s], axis=1)
+    all_i = jnp.concatenate(
+        [jnp.where(jnp.isinf(cd), -1, ci),
+         jnp.broadcast_to(d_ids[None, :], (q, nd))], axis=1)
+    if k > all_d.shape[1]:
+        pad = k - all_d.shape[1]
+        all_d = jnp.concatenate(
+            [all_d, jnp.full((q, pad), jnp.inf, all_d.dtype)], axis=1)
+        all_i = jnp.concatenate(
+            [all_i, jnp.full((q, pad), -1, all_i.dtype)], axis=1)
+    neg, sel = jax.lax.top_k(-all_d, k)
+    out_i = jnp.take_along_axis(all_i, sel, axis=1)
+    out_i = jnp.where(jnp.isinf(neg), -1, out_i).astype(jnp.int32)
+    return out_i, -neg
+
+
 def merge_topk_ref(ids, dists, *, k: int | None = None):
     """Cross-shard merge oracle: flatten [S, Q, K] candidates to
     [Q, S*K] and re-extract the k smallest. Invalid slots (id −1 or

@@ -282,3 +282,84 @@ def test_masked_topk_k_exceeds_rows(rng):
     valid = np.asarray(ids) >= 0
     np.testing.assert_allclose(np.asarray(d)[valid],
                                np.asarray(rd)[valid], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# XLA fast path vs Pallas kernel (bit-identity)
+# ---------------------------------------------------------------------------
+#
+# Off TPU the ops dispatch to a pure-XLA formulation of the same fold
+# (stable top_k over candidates in kernel fold order). These tests force
+# score ties (duplicated rows, a coarse value grid) and assert the two
+# paths agree bit for bit — ids, distances and fill pattern — so the
+# dispatch can never change a result depending on backend.
+#
+# Vectors live on an integer grid (multiples of 1/4) so every product
+# and partial sum in the score matmul is exactly representable: the two
+# backends may reduce in different orders (gemm edge kernels differ per
+# shape) but must land on the same bits, making the comparison test the
+# fold semantics rather than matmul rounding.
+
+def _tie_case(rng, q, n, d=24, w=2):
+    qv = (rng.integers(-6, 7, (q, d)) / 4.0).astype(np.float32)
+    base = (rng.integers(-6, 7, (n, d)) / 4.0).astype(np.float32)
+    base[n // 2: n // 2 + n // 4] = base[: n // 4]   # exact duplicates
+    norms = (base.astype(np.float64) ** 2).sum(1).astype(np.float32)
+    qb = (rng.integers(0, 2, (q, w)) * rng.integers(1, 8, (q, w))
+          ).astype(np.uint32)
+    bm = (rng.integers(0, 2, (n, w)) * rng.integers(1, 8, (n, w))
+          ).astype(np.uint32)
+    return (jnp.asarray(qv), jnp.asarray(qb), jnp.asarray(base),
+            jnp.asarray(norms), jnp.asarray(bm))
+
+
+def _assert_bitwise(a, b):
+    ai, ad = np.asarray(a[0]), np.asarray(a[1])
+    bi, bd = np.asarray(b[0]), np.asarray(b[1])
+    np.testing.assert_array_equal(ai, bi)
+    np.testing.assert_array_equal(np.isfinite(ad), np.isfinite(bd))
+    np.testing.assert_array_equal(ad[np.isfinite(ad)], bd[np.isfinite(bd)])
+
+
+@pytest.mark.parametrize("pred", [0, 1, 2])
+@pytest.mark.parametrize("q,n,k", [(1, 64, 5), (7, 256, 41), (25, 1024, 10)])
+def test_masked_topk_xla_matches_kernel(pred, q, n, k, rng):
+    case = _tie_case(rng, q, n)
+    _assert_bitwise(ops.masked_topk(*case, pred=pred, k=k),
+                    ops.masked_topk(*case, pred=pred, k=k, interpret=True))
+
+
+@pytest.mark.parametrize("s,q,kk,k", [(2, 8, 10, 10), (3, 25, 41, 10),
+                                      (5, 64, 10, 41)])
+def test_merge_topk_xla_matches_kernel(s, q, kk, k, rng):
+    d = np.round(rng.normal(size=(s, q, kk)).astype(np.float32) ** 2, 1)
+    ids = rng.integers(0, 10, (s, q, kk)).astype(np.int32)  # heavy id ties
+    ids[d > 2.0] = -1
+    args = (jnp.asarray(ids), jnp.asarray(d))
+    _assert_bitwise(ops.merge_topk(*args, k=k),
+                    ops.merge_topk(*args, k=k, interpret=True))
+
+
+@pytest.mark.parametrize("pred", [0, 1, 2])
+@pytest.mark.parametrize("q,nd,kb,k", [(1, 64, 5, 5), (7, 192, 41, 41),
+                                       (25, 512, 10, 10)])
+def test_fused_live_xla_matches_kernel(pred, q, nd, kb, k, rng):
+    qv, qb, dvec, dn, db = _tie_case(rng, q, nd)
+    ci = rng.integers(0, 4096, (q, kb)).astype(np.int32)
+    ci[rng.random((q, kb)) < 0.2] = -1
+    cd = np.round(rng.normal(size=(q, kb)).astype(np.float32) ** 2, 1)
+    n_pad = (4096 + nd + 4095) // 4096 * 4096
+    tomb = rng.random(n_pad) < 0.3
+    tw = jnp.asarray(np.packbits(tomb, bitorder="little").view(np.uint32))
+    args = (qv, qb, jnp.asarray(ci), jnp.asarray(cd), dvec, dn, db,
+            jnp.int32(4096), tw)
+    _assert_bitwise(ops.fused_live_topk(*args, pred=pred, k=k),
+                    ops.fused_live_topk(*args, pred=pred, k=k,
+                                        interpret=True))
+    sel = jnp.asarray(np.unique(
+        rng.integers(0, nd, nd // 2)).astype(np.int32))
+    argsel = (qv, qb, jnp.asarray(ci), jnp.asarray(cd), dvec, dn, db,
+              sel, jnp.int32(4096), tw)
+    _assert_bitwise(ops.fused_live_topk_select(*argsel, pred=pred, k=k),
+                    ops.fused_live_topk_select(*argsel, pred=pred, k=k,
+                                               interpret=True))

@@ -1,0 +1,343 @@
+"""PR-6 live read path: fused single-launch kernel parity (vs the staged
+three-launch path and the brute-force oracle), delta mini-IVF pruning
+exactness, graft compaction bit-identity, and the open-addressing key
+table."""
+
+import numpy as np
+import pytest
+
+from repro.ann import ivf as ivf_mod
+from repro.ann import registry as registry_mod
+from repro.ann.index import QueryBatch
+from repro.ann.live import (ChunkIndex, KeyTable, LiveFilteredIndex,
+                            ShardedLiveIndex, build_chunk_index)
+from repro.ann.predicates import Predicate, eval_predicate_np
+
+ALL_PREDS = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+DENSITIES = (0.0, 0.5, 1.0)
+
+
+def _oracle_ids(vectors, bitmaps, tomb, qv, qb, pred, k):
+    """Exact masked top-k ids over an explicit (rows, tombstones) state."""
+    norms = np.sum(vectors.astype(np.float64) ** 2, axis=1)
+    out = np.full((qv.shape[0], k), -1, np.int32)
+    for qi in range(qv.shape[0]):
+        ok = eval_predicate_np(bitmaps, qb[qi][None], pred) & ~tomb
+        idx = np.nonzero(ok)[0]
+        if not idx.size:
+            continue
+        d = norms[idx] - 2.0 * vectors[idx] @ qv[qi].astype(np.float64)
+        o = np.argsort(d, kind="stable")[:k]
+        out[qi, : o.size] = idx[o]
+    return out
+
+
+def _gid_state(live):
+    """(vectors, bitmaps, tombstones) in global-id order, for any live
+    handle kind."""
+    if isinstance(live, LiveFilteredIndex):
+        dvec, dbm, _ = live._delta.host_view(live._delta.rows)
+        if live._base_fx is not None:
+            vec = np.concatenate([live.ds.vectors, dvec])
+            bm = np.concatenate([live.ds.bitmaps, dbm])
+        else:
+            vec, bm = dvec, dbm
+        return vec, bm, live._tomb.copy()
+    n = live.n_total
+    vec = np.zeros((n, live._dim), np.float32)
+    bm = np.zeros((n, live.shards[0]._width), np.uint32)
+    tomb = np.zeros(n, bool)
+    host = {}
+    for s, sh in enumerate(live.shards):
+        host[s] = sh._delta.host_view(sh._delta.rows)
+    for gid in range(n):
+        s, lid = live._shard_local(gid)
+        sh = live.shards[s]
+        if lid < sh.base_n:
+            vec[gid] = sh.ds.vectors[lid]
+            bm[gid] = sh.ds.bitmaps[lid]
+        else:
+            vec[gid] = host[s][0][lid - sh.base_n]
+            bm[gid] = host[s][1][lid - sh.base_n]
+        tomb[gid] = sh._tomb[lid]
+    return vec, bm, tomb
+
+
+def _both_paths(live, batch):
+    """(fused result, staged result) from the same handle state."""
+    live.fused = True
+    fused = live.search(batch, "prefilter")
+    live.fused = False
+    staged = live.search(batch, "prefilter")
+    live.fused = True
+    return fused, staged
+
+
+def _assert_matches_oracle(ids, want, vec, bm, tomb, qv, qb, pred):
+    """ids must equal the f64 brute-force oracle except where the
+    competing rows' true distances agree to f32 resolution: the kernel
+    ranks in f32, so near-ties may legitimately swap order. Every
+    swapped-in id must still be a live predicate match at essentially
+    the same distance."""
+    if np.array_equal(ids, want):
+        return
+    norms = np.sum(vec.astype(np.float64) ** 2, axis=1)
+    for qi in range(ids.shape[0]):
+        a, b = ids[qi], want[qi]
+        d = a != b
+        if not d.any():
+            continue
+        # same fill count (how many matches exist is unambiguous)
+        np.testing.assert_array_equal(a >= 0, b >= 0)
+        d &= a >= 0
+        ok = eval_predicate_np(bm, qb[qi][None], pred) & ~tomb
+        assert ok[a[d]].all(), "swapped-in id is not a live match"
+        assert np.unique(a[a >= 0]).size == (a >= 0).sum()
+        q = qv[qi].astype(np.float64)
+        da = norms[a[d]] - 2.0 * vec[a[d]] @ q
+        db = norms[b[d]] - 2.0 * vec[b[d]] @ q
+        np.testing.assert_allclose(da, db, rtol=1e-5, atol=1e-3)
+
+
+def _check_parity(live, qs, pred, density, rng):
+    vec, bm, tomb = _gid_state(live)
+    for q_take, k in ((1, 5), (7, 41), (25, 10)):
+        batch = QueryBatch(qs.vectors[:q_take], qs.bitmaps[:q_take], pred, k)
+        fused, staged = _both_paths(live, batch)
+        # the acceptance bar: fused is bit-identical to staged —
+        # ids, distances AND keys
+        np.testing.assert_array_equal(fused.ids, staged.ids)
+        np.testing.assert_array_equal(fused.distances, staged.distances)
+        np.testing.assert_array_equal(fused.keys, staged.keys)
+        want = _oracle_ids(vec, bm, tomb, batch.vectors, batch.bitmaps,
+                           pred, k)
+        _assert_matches_oracle(fused.ids, want, vec, bm, tomb,
+                               batch.vectors, batch.bitmaps, pred)
+        if density >= 1.0:
+            assert (fused.ids == -1).all()
+
+
+@pytest.mark.parametrize("density", DENSITIES)
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_fused_parity_single(tiny_ds, tiny_queries, pred, density, rng):
+    """Fused vs staged vs oracle over base + delta + tombstones, ragged
+    Q × k>matches × tombstone density, single handle."""
+    qs = tiny_queries[pred]
+    extra_v = tiny_ds.vectors[:150] + np.float32(0.01)
+    extra_b = tiny_ds.bitmaps[:150]
+    with LiveFilteredIndex(tiny_ds, delta_chunk=64) as live:
+        live.upsert(extra_v, extra_b)
+        n_tot = live.n_total
+        if density > 0:
+            take = int(round(n_tot * density))
+            dead = rng.choice(n_tot, size=take, replace=False)
+            live.delete(dead)
+        _check_parity(live, qs, pred, density, rng)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_fused_parity_sharded(tiny_ds, tiny_queries, pred, n_shards, rng):
+    """ShardedLiveIndex inherits the fused path: parity across shard
+    counts with a compacted base plus fresh delta and 50% tombstones."""
+    qs = tiny_queries[pred]
+    with ShardedLiveIndex(None, n_shards, name="tiny", dim=tiny_ds.dim,
+                          universe=tiny_ds.universe,
+                          delta_chunk=64) as live:
+        live.upsert(tiny_ds.vectors[:400], tiny_ds.bitmaps[:400])
+        live.compact()
+        live.upsert(tiny_ds.vectors[400:], tiny_ds.bitmaps[400:])
+        dead = rng.choice(live.n_total, size=live.n_total // 2,
+                          replace=False)
+        live.delete(dead)
+        _check_parity(live, qs, pred, 0.5, rng)
+
+
+# ---------------------------------------------------------------------------
+# delta mini-IVF pruning
+# ---------------------------------------------------------------------------
+
+def test_delta_prune_engages_and_stays_exact(tiny_ds, tiny_queries):
+    """Sealed-chunk mini-IVF pruning must fire (far-away delta clusters
+    are provably outside every query's bound) without changing a single
+    result bit."""
+    pred = Predicate.AND
+    k = 10
+    qs = tiny_queries[pred]
+    # pruning is provably impossible for a query with fewer than k live
+    # base matches (every matching delta row belongs in its top-k), and
+    # one such query disables the batch-wide cluster drop — so the
+    # engagement check runs on queries with enough base matches
+    n_match = np.array([eval_predicate_np(tiny_ds.bitmaps, qb[None],
+                                          pred).sum()
+                        for qb in qs.bitmaps])
+    keep = n_match >= k
+    assert keep.sum() >= 5, "tiny spec should give dense AND queries"
+    batch = QueryBatch(qs.vectors[keep], qs.bitmaps[keep], pred, k)
+    far_v = tiny_ds.vectors[:192] + np.float32(50.0)   # 3 sealed chunks
+    far_b = tiny_ds.bitmaps[:192]
+    with LiveFilteredIndex(tiny_ds, delta_chunk=64,
+                           delta_prune_min_rows=0) as pruned, \
+            LiveFilteredIndex(tiny_ds, delta_chunk=64) as plain:
+        for live in (pruned, plain):
+            live.upsert(far_v, far_b)
+        res_p = pruned.search(batch, "prefilter")
+        res_f = plain.search(batch, "prefilter")
+        plain.fused = False
+        res_s = plain.search(batch, "prefilter")
+        np.testing.assert_array_equal(res_p.ids, res_f.ids)
+        np.testing.assert_array_equal(res_p.distances, res_f.distances)
+        np.testing.assert_array_equal(res_p.ids, res_s.ids)
+        np.testing.assert_array_equal(res_p.distances, res_s.distances)
+        stats = pruned.stats()
+        assert stats["delta_chunk_indexes"] == 3
+        assert stats["delta_prune"]["pruned"] > 0
+
+
+def test_chunk_index_deterministic_and_covers_chunk(rng):
+    v = rng.normal(size=(64, 8)).astype(np.float32)
+    a = build_chunk_index(v, seed=3)
+    b = build_chunk_index(v, seed=3)
+    for f in ("centroids", "cnorms", "radius", "members", "starts"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    assert sorted(a.members.tolist()) == list(range(64))
+    # every member sits inside its cluster's claimed radius
+    for c in range(a.centroids.shape[0]):
+        rows = a.members[a.starts[c]: a.starts[c + 1]]
+        d = np.linalg.norm(v[rows].astype(np.float64)
+                           - a.centroids[c].astype(np.float64), axis=1)
+        assert (d <= a.radius[c]).all()
+    rt = ChunkIndex.from_arrays(a.arrays())
+    np.testing.assert_array_equal(rt.members, a.members)
+
+
+# ---------------------------------------------------------------------------
+# graft compaction
+# ---------------------------------------------------------------------------
+
+def test_graft_ivf_bit_identical_to_frozen_rebuild(rng):
+    n, d = 2000, 16
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    old = ivf_mod.build_ivf(v, 24, seed=13)
+    dead = rng.choice(n, 200, replace=False)
+    keep = np.setdiff1d(np.arange(n), dead)
+    nv = np.concatenate([v[keep],
+                         rng.normal(size=(300, d)).astype(np.float32)])
+    o2n = np.full(n, -1, np.int64)
+    o2n[keep] = np.arange(keep.size)
+    grafted = ivf_mod.graft_ivf(old, nv, o2n)
+    assign = ivf_mod.assign_to_centroids(nv, old.centroids)
+    lists, fill = ivf_mod.pack_lists(assign, old.centroids.shape[0])
+    np.testing.assert_array_equal(grafted.lists, lists)
+    np.testing.assert_array_equal(grafted.list_len, fill)
+    np.testing.assert_array_equal(grafted.centroids, old.centroids)
+
+
+def test_identity_graft_compaction_bit_identical_to_fresh_build(tiny_ds,
+                                                                tiny_queries):
+    """Compacting with no deletes and no delta is an identity remap, so
+    the grafted indexes must equal a fresh offline build bit for bit."""
+    reg = registry_mod.default_registry()
+    pred = Predicate.AND
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        for m_name in ("ivf_gamma", "fvamana"):
+            live.search(batch, m_name)        # forces the offline build
+        before = dict(live._base_fx._indexes)
+        assert before
+        live.compact()
+        after = dict(live._base_fx._indexes)
+        assert set(after) == set(before)
+        for (m_name, bp), idx in after.items():
+            fresh = reg.get(m_name).build(live.ds, dict(bp))
+            if isinstance(idx, ivf_mod.IVFIndex):
+                np.testing.assert_array_equal(idx.centroids, fresh.centroids)
+                np.testing.assert_array_equal(idx.lists, fresh.lists)
+            else:                              # VamanaGraph
+                np.testing.assert_array_equal(idx.neighbors, fresh.neighbors)
+                assert idx.medoid == fresh.medoid
+                np.testing.assert_array_equal(idx.label_entry,
+                                              fresh.label_entry)
+
+
+def test_graft_compaction_reuses_frozen_centroids(tiny_ds, tiny_queries,
+                                                  rng):
+    """With deletes + delta the graft must keep the old IVF centroids
+    (proof the splice ran, not a rebuild) and repack exactly as a
+    frozen-centroid reassignment of the compacted dataset; prefilter
+    results stay bit-identical to the oracle afterwards."""
+    pred = Predicate.AND
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        live.search(batch, "ivf_gamma")
+        (key, old_idx), = [(k, v) for k, v in live._base_fx._indexes.items()]
+        old_cent = old_idx.centroids.copy()
+        live.upsert(tiny_ds.vectors[:100] + np.float32(0.02),
+                    tiny_ds.bitmaps[:100])
+        live.delete(rng.choice(tiny_ds.n, 60, replace=False))
+        live.compact()
+        new_idx = live._base_fx._indexes[key]
+        np.testing.assert_array_equal(new_idx.centroids, old_cent)
+        assign = ivf_mod.assign_to_centroids(live.ds.vectors, old_cent)
+        lists, fill = ivf_mod.pack_lists(assign, old_cent.shape[0])
+        np.testing.assert_array_equal(new_idx.lists, lists)
+        np.testing.assert_array_equal(new_idx.list_len, fill)
+        vec, bm, tomb = _gid_state(live)
+        res = live.search(batch, "prefilter")
+        want = _oracle_ids(vec, bm, tomb, batch.vectors, batch.bitmaps,
+                           pred, 10)
+        np.testing.assert_array_equal(res.ids, want)
+
+
+def test_graft_disabled_falls_back_to_rebuild(tiny_ds, tiny_queries, rng):
+    pred = Predicate.AND
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, pred, 10)
+    with LiveFilteredIndex(tiny_ds, graft=False) as live:
+        live.search(batch, "ivf_gamma")
+        live.delete(rng.choice(tiny_ds.n, 60, replace=False))
+        live.compact()
+        (key, new_idx), = [(k, v)
+                           for k, v in live._base_fx._indexes.items()]
+        fresh = registry_mod.default_registry().get(key[0]).build(
+            live.ds, dict(key[1]))
+        np.testing.assert_array_equal(new_idx.centroids, fresh.centroids)
+        np.testing.assert_array_equal(new_idx.lists, fresh.lists)
+
+
+# ---------------------------------------------------------------------------
+# open-addressing key table
+# ---------------------------------------------------------------------------
+
+def test_key_table_insert_lookup_missing(rng):
+    t = KeyTable()
+    keys = rng.choice(10 ** 12, size=5000, replace=False).astype(np.int64)
+    rows = np.arange(5000, dtype=np.int64) * 3
+    t.insert(keys, rows)
+    np.testing.assert_array_equal(t.lookup(keys), rows)
+    missing = keys + 1
+    missing = missing[~np.isin(missing, keys)]
+    assert (t.lookup(missing) == -1).all()
+    assert t.lookup(np.zeros(0, np.int64)).size == 0
+
+
+def test_key_table_last_wins_and_overwrite(rng):
+    t = KeyTable()
+    keys = np.array([7, 7, 9, 7], np.int64)
+    rows = np.array([1, 2, 3, 4], np.int64)
+    t.insert(keys, rows)                       # duplicate in one batch
+    assert t.lookup(np.array([7], np.int64))[0] == 4
+    assert t.lookup(np.array([9], np.int64))[0] == 3
+    t.insert(np.array([9], np.int64), np.array([99], np.int64))
+    assert t.lookup(np.array([9], np.int64))[0] == 99
+
+
+def test_key_table_growth_keeps_all_entries(rng):
+    t = KeyTable()
+    for s in range(0, 40000, 1000):            # force several rehashes
+        ks = np.arange(s, s + 1000, dtype=np.int64) * 7 + 1
+        t.insert(ks, ks * 2)
+    all_ks = np.arange(0, 40000, dtype=np.int64) * 7 + 1
+    np.testing.assert_array_equal(t.lookup(all_ks), all_ks * 2)

@@ -137,10 +137,29 @@ def test_wal_sync_every_batches_fsync(tmp_path):
     wal = WriteAheadLog.create(str(tmp_path / "w.log"), dim=2, width=1,
                                generation=0, sync_every=8)
     for _ in range(5):
-        wal.log_delete(0, np.array([0], np.int64))
-    assert wal._since_sync == 5                        # still batched
+        seq = wal.log_delete(0, np.array([0], np.int64))
+        wal.commit(seq)
+    assert wal._durable_seq == 0                       # still batched
+    for _ in range(3):
+        seq = wal.log_delete(0, np.array([0], np.int64))
+        wal.commit(seq)
+    assert wal._durable_seq == 8                       # batch flushed
     wal.sync()
-    assert wal._since_sync == 0
+    assert wal._durable_seq == wal._seq == 8
+    wal.close()
+
+
+def test_wal_group_commit_ack_after_fsync(tmp_path):
+    """sync_every=1: commit() makes the record durable before returning,
+    and a single leader fsync covers every record appended before it."""
+    wal = WriteAheadLog.create(str(tmp_path / "w.log"), dim=2, width=1,
+                               generation=0, sync_every=1)
+    seqs = [wal.log_delete(0, np.array([i], np.int64)) for i in range(4)]
+    wal.commit(seqs[-1])                               # leader covers all
+    assert wal._durable_seq == 4
+    for s in seqs:                                     # followers: no fsync
+        wal.commit(s)
+    assert wal._durable_seq == 4
     wal.close()
 
 
@@ -447,6 +466,70 @@ def test_built_indexes_rebuilt_on_load(tmp_path, tiny_ds, tiny_queries):
         assert sorted(k[0] for k in st2.index.built_keys()) == \
             ["ivf_gamma", "labelnav"]
         _assert_same_result(st2.index.search(batch, "ivf_gamma"), want)
+
+
+def test_sharded_built_indexes_restored_without_rebuild(tmp_path, tiny_ds,
+                                                        tiny_queries,
+                                                        monkeypatch):
+    """PR-6: per-shard method indexes persist as one npz per shard and
+    come back through `index_from_arrays` on open — zero offline builds
+    — with search results identical to the pre-restart handle."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    with IndexStore.create(str(tmp_path / "s"),
+                           ShardedLiveIndex(tiny_ds, 2)) as st:
+        want = st.index.search(batch, "ivf_gamma")
+        st.checkpoint()
+        built = {b[0]: b[2] for b in st.manifest["built"]}
+        files = built["ivf_gamma"]
+        assert isinstance(files, list) and len(files) == 2
+        assert all(files)                          # one npz per shard
+    from repro.ann.methods.ivf_gamma import IVFGamma
+    calls = []
+    orig = IVFGamma.build
+    monkeypatch.setattr(
+        IVFGamma, "build",
+        lambda self, ds, bp: (calls.append(1), orig(self, ds, bp))[1])
+    with IndexStore.open(str(tmp_path / "s")) as st2:
+        res = st2.index.search(batch, "ivf_gamma")
+        assert not calls                           # restored, not rebuilt
+        _assert_same_result(res, want)
+
+
+def test_delta_chunk_indexes_persist_and_adopt(tmp_path, tiny_ds):
+    """PR-6: sealed-chunk mini-IVFs are checkpointed and adopted on open
+    (same `delta_chunk`, no compact barrier in the WAL); stale files are
+    skipped when either condition breaks."""
+    p = str(tmp_path / "s")
+    with IndexStore.create(p, LiveFilteredIndex(tiny_ds, delta_chunk=64),
+                           delta_chunk=64) as st:
+        st.index.upsert(tiny_ds.vectors[:160] + np.float32(0.01),
+                        tiny_ds.bitmaps[:160])
+        built = st.index._delta.chunk_indexes(160)     # 2 sealed chunks
+        assert len(built) == 2
+        st.checkpoint()
+        entry = st.manifest["delta_chunks"]
+        assert entry["chunk"] == 64 and len(entry["files"]) == 2
+        want = [ci.arrays() for ci in built]
+    with IndexStore.open(p, delta_chunk=64) as st2:
+        # adopted straight from the manifest — no search ran yet
+        assert st2.index.stats()["delta_chunk_indexes"] == 2
+        got = st2.index._delta.built_chunk_indexes()
+        for w, g in zip(want, got):
+            ga = g.arrays()
+            for name in w:
+                np.testing.assert_array_equal(w[name], ga[name])
+    # a different delta_chunk moves the chunk boundaries: skip adoption
+    with IndexStore.open(p) as st3:
+        assert st3.index.stats()["delta_chunk_indexes"] == 0
+        # replaying ops past a compact barrier rebuilds the delta, so
+        # the checkpointed files go stale for the next open too
+        st3.index.compact()
+        st3.index.upsert(tiny_ds.vectors[:80] + np.float32(0.02),
+                         tiny_ds.bitmaps[:80])
+    with IndexStore.open(p, delta_chunk=64) as st4:
+        assert st4.index.stats()["delta_chunk_indexes"] == 0
+        assert st4.index.n_live == tiny_ds.n + 160 + 80
 
 
 def test_router_version_stamp_validated(tmp_path, tiny_ds, toy_router):
