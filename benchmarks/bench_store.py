@@ -14,6 +14,10 @@ better, so the ``--check`` regression gate compares them uniformly:
 * ``wal_replay_ms`` — `IndexStore.open()` when the same ``rows``
   upserts (plus deletes) live only in the WAL; the derived
   ``replay_rows_s`` column is the recovery ingest rate.
+
+Ungated size columns report the segment-v2 bitmap compression:
+``bitmap_raw_kb`` (N·W·4 uncompressed) vs ``bitmap_disk_kb``
+(word-level RLE on disk) and the resulting ``bitmap_ratio``.
 """
 
 from __future__ import annotations
@@ -60,6 +64,13 @@ def run(verbose=True, smoke: bool = False, write_rows: int | None = None):
         path = os.path.join(root, "snap")
         store = IndexStore.create(path, LiveFilteredIndex(ds))
         seg_bytes = _segment_bytes(path, store.manifest)
+        seg_dir = os.path.join(path, store.manifest["segment"])
+        import json
+        with open(os.path.join(seg_dir, "segment.json")) as f:
+            seg_meta = json.load(f)
+        bm_info = seg_meta["files"]["bitmaps"]
+        bitmap_raw = int(np.prod(bm_info["shape"])) * 4
+        bitmap_disk = bm_info["bytes"]
         snap_us = timeit_best_us(store.checkpoint, repeat=3)
         write_mb_s = (seg_bytes / (1 << 20)) / (snap_us / 1e6)
 
@@ -91,6 +102,9 @@ def run(verbose=True, smoke: bool = False, write_rows: int | None = None):
         "cold_open_ms": round(open_us / 1e3, 2),
         "wal_replay_ms": round(replay_us / 1e3, 2),
         "replay_rows_s": round(replay_rows_s, 0),
+        "bitmap_raw_kb": round(bitmap_raw / 1024, 1),
+        "bitmap_disk_kb": round(bitmap_disk / 1024, 1),
+        "bitmap_ratio": round(bitmap_disk / max(bitmap_raw, 1), 3),
     }]
     if verbose:
         r = rows[-1]
@@ -98,6 +112,8 @@ def run(verbose=True, smoke: bool = False, write_rows: int | None = None):
               f"{r['snapshot_write_ms']:.1f} ms ({r['write_mb_s']:.0f} "
               f"MB/s), cold open {r['cold_open_ms']:.1f} ms, WAL replay "
               f"{r['wal_replay_ms']:.1f} ms ({r['replay_rows_s']:.0f} "
-              f"rows/s)", flush=True)
+              f"rows/s), bitmaps {r['bitmap_raw_kb']:.0f} -> "
+              f"{r['bitmap_disk_kb']:.0f} KB "
+              f"({r['bitmap_ratio']:.2f}x)", flush=True)
     path = emit(rows, "store")
     return rows, path

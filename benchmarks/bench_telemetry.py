@@ -1,0 +1,167 @@
+"""Telemetry-overhead + online-adaptation benchmark.
+
+``run`` measures the routed-search hot path with the `TelemetrySink`
+attached vs detached on the *same* service (identical compiled kernels
+and index state — only the sink toggles). Rounds interleave on/off and
+the gated ratio compares best-of-rounds to best-of-rounds, so a noisy
+neighbour inflating one round can't fake an overhead regression:
+
+* ``routed_p50_us_off`` / ``routed_p50_us_on`` — per-round median
+  routed batch latency, best (min) across interleaved rounds;
+* ``overhead_pct`` — (on/off − 1)·100, gated **absolutely** at 5 % by
+  ``--check`` (TELEMETRY_OVERHEAD_MAX): recording events, folding
+  counters, and reservoir admission must stay effectively free.
+
+``run_adaptation`` measures the control loop end-to-end: the routed
+method gets an injected recall regression (`DegradedMethod` truncates
+its results), sampled audits fold exact recall into the EWMA table,
+and the run records how many audit rounds (`reroute_rounds`) and how
+much wall-clock (`time_to_reroute_ms`) until the router's decisions
+shift off the degraded method, plus `audit_qps` (oracle replays per
+second). These are control-loop wall-clock numbers — recorded for
+trend-watching, not history-gated.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.telemetry import (DegradedMethod, OnlineRouterAdapter,
+                                 TelemetrySink, constant_router)
+from repro.core import features as F
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import DatasetSpec, make_queries, synthesize
+
+from benchmarks.common import emit, timeit_us
+
+_SPEC = DatasetSpec("bench_tel", 8192, 32, 60, 8, 16,
+                    1.3, 2.0, 0.5, 0.3, 17)
+_SMOKE_SPEC = DatasetSpec("bench_tel_smoke", 2048, 32, 60, 8, 16,
+                          1.3, 2.0, 0.5, 0.3, 17)
+_ROUNDS = 5
+
+
+def _dense_table(ds_name: str, methods: list, seed: int = 0):
+    """Dense synthetic table over the real method registry (the
+    bench_routing_latency idiom): recall in [0.91, 1.0] so every
+    (method, ps) passes t=0.9 and routing exercises the full
+    Algorithm 2 table path."""
+    rng = np.random.default_rng(seed)
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for m in methods:
+        for s in cand[m].param_settings():
+            for pt in range(3):
+                table.add(ds_name, pt, m, s.ps_id,
+                          rng.uniform(0.91, 1.0), rng.uniform(100, 2000))
+    return table
+
+
+def run(verbose=True, smoke: bool = False, q: int | None = None):
+    spec, q = (_SMOKE_SPEC, q or 64) if smoke else (_SPEC, q or 128)
+    ds = synthesize(spec)
+    methods = ["labelnav", "postfilter", "sieve", "ivf_gamma", "fvamana"]
+    table = _dense_table(ds.name, methods)
+    router = constant_router(F.MINIMAL_FEATURES, methods, table)
+    qs = make_queries(ds, Predicate.AND, q, seed=5)
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    rows = []
+    with FilteredIndex(ds) as fx:
+        svc = RouterService(fx, router, t=0.9)
+        sink = TelemetrySink(capacity=4096, reservoir=128, seed=7)
+        svc.search(batch)                       # warm-up + compile
+        svc.telemetry = sink
+        svc.search(batch)                       # warm the sink path too
+        best_off = best_on = np.inf
+        for _ in range(_ROUNDS):                # interleave on/off rounds
+            svc.telemetry = None
+            best_off = min(best_off,
+                           timeit_us(lambda: svc.search(batch), repeat=9))
+            svc.telemetry = sink
+            best_on = min(best_on,
+                          timeit_us(lambda: svc.search(batch), repeat=9))
+        events = sink.stats()["queries"]
+    overhead = (best_on / best_off - 1.0) * 100.0
+    rows.append({"n": ds.n, "q": q,
+                 "routed_p50_us_off": round(best_off, 1),
+                 "routed_p50_us_on": round(best_on, 1),
+                 "overhead_pct": round(overhead, 2),
+                 "events": int(events)})
+    if verbose:
+        r = rows[-1]
+        print(f"  n={r['n']} q={q}: routed off {best_off:.0f} us -> on "
+              f"{best_on:.0f} us = {overhead:+.2f}% overhead "
+              f"({r['events']} events)", flush=True)
+    path = emit(rows, "telemetry")
+    return rows, path
+
+
+def run_adaptation(verbose=True, smoke: bool = False):
+    """Injected drift -> measured time until the router re-routes."""
+    spec = _SMOKE_SPEC if smoke else _SPEC
+    ds = synthesize(spec)
+    methods = ["ivf_gamma", "postfilter"]
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        # ivf_gamma passes t with the best QPS -> routed everywhere;
+        # postfilter is the passing alternative the EWMA shift exposes
+        for s in cand["ivf_gamma"].param_settings():
+            table.add(ds.name, pt, "ivf_gamma", s.ps_id, 0.97, 5000.0)
+        for s in cand["postfilter"].param_settings():
+            table.add(ds.name, pt, "postfilter", s.ps_id, 0.95, 500.0)
+    router = constant_router(F.MINIMAL_FEATURES, methods, table)
+    qs = make_queries(ds, Predicate.AND, 32, seed=9)
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+    rows = []
+    with FilteredIndex(ds) as fx:
+        serving = dict(candidate_methods())
+        serving["ivf_gamma"] = DegradedMethod(serving["ivf_gamma"], keep=2)
+        sink = TelemetrySink(capacity=2048, reservoir=96, seed=3)
+        svc = RouterService(fx, router, t=0.9, methods=serving,
+                            telemetry=sink)
+        # EWMA alpha 0.5 + drift threshold above the retrain trigger:
+        # this harness times the *table-driven* re-route, not retrain
+        adapter = OnlineRouterAdapter(svc, sink, alpha=0.5,
+                                      drift_threshold=2.0, seed=1)
+        svc.search(batch)                        # warm-up + compile
+        frac0 = np.mean([d.method == "ivf_gamma"
+                         for d in svc.route(batch)])
+        t0 = time.perf_counter()
+        rounds = 0
+        audit_s = 0.0
+        audited = 0
+        while rounds < 20:
+            svc.search(batch)
+            ta = time.perf_counter()
+            rep = adapter.step()
+            audit_s += time.perf_counter() - ta
+            audited += rep["samples"]
+            rounds += 1
+            frac = np.mean([d.method == "ivf_gamma"
+                            for d in svc.route(batch)])
+            if frac == 0.0:
+                break
+        reroute_ms = (time.perf_counter() - t0) * 1e3
+        audit_qps = audited / max(audit_s, 1e-9)
+    rows.append({"n": ds.n,
+                 "routed_before": round(float(frac0), 3),
+                 "routed_after": round(float(frac), 3),
+                 "reroute_rounds": rounds,
+                 "time_to_reroute_ms": round(reroute_ms, 1),
+                 "audit_qps": round(audit_qps, 1)})
+    if verbose:
+        r = rows[-1]
+        print(f"  n={r['n']}: degraded-method share "
+              f"{r['routed_before']:.2f} -> {r['routed_after']:.2f} in "
+              f"{r['reroute_rounds']} audit round(s), "
+              f"{r['time_to_reroute_ms']:.0f} ms "
+              f"(audit {r['audit_qps']:.0f} q/s)", flush=True)
+    path = emit(rows, "telemetry_adapt")
+    return rows, path

@@ -29,10 +29,12 @@ import traceback
 CHECK_TOLERANCE = 1.25
 # absolute gates (history-independent): fused live search at 50% delta
 # fill vs the same corpus compacted into a sealed base (pure liveness
-# overhead — both sides serve identical rows), and graft-compaction
-# wall-clock growth relative to linear-in-base-size
+# overhead — both sides serve identical rows), graft-compaction
+# wall-clock growth relative to linear-in-base-size, and the telemetry
+# sink's hot-path cost (best-of-rounds on vs off, same service)
 LIVE_SEALED_MAX = 1.5
 COMPACT_SCALING_MAX = 0.9
+TELEMETRY_OVERHEAD_MAX = 5.0
 
 
 def _repo_root() -> str:
@@ -83,7 +85,9 @@ def _keep_best(old: dict, new: dict) -> dict:
             ("sharded_service", ("shards", "n", "q"), "batch_us"),
             ("live_index", ("n", "q"), "search_live_us"),
             ("live_compaction", ("n_base",), "compact_ms"),
-            ("store", ("n", "rows"), "cold_open_ms")]:
+            ("store", ("n", "rows"), "cold_open_ms"),
+            ("telemetry", ("n", "q"), "routed_p50_us_on"),
+            ("telemetry_adapt", ("n",), "time_to_reroute_ms")]:
         old_rows = {tuple(r[c] for c in key_cols): r
                     for r in old.get(section, [])}
         out = []
@@ -121,7 +125,7 @@ def _keep_best(old: dict, new: dict) -> dict:
 def run_smoke() -> None:
     from benchmarks import (bench_kernels, bench_live,
                             bench_routing_latency, bench_sharded,
-                            bench_store)
+                            bench_store, bench_telemetry)
 
     print("# == smoke: kernels (tiny sizes) ==", flush=True)
     rows_k, _ = bench_kernels.run(verbose=True, sizes=(1024, 4096))
@@ -139,6 +143,11 @@ def run_smoke() -> None:
     print("# == smoke: store (snapshot write / cold open / WAL replay) ==",
           flush=True)
     rows_t, _ = bench_store.run(verbose=True, smoke=True)
+    print("# == smoke: telemetry overhead (sink on vs off) ==", flush=True)
+    rows_m, _ = bench_telemetry.run(verbose=True, smoke=True)
+    print("# == smoke: online adaptation (injected drift -> re-route) ==",
+          flush=True)
+    rows_a, _ = bench_telemetry.run_adaptation(verbose=True, smoke=True)
     record = {
         "sha": _git_sha(),
         "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -148,6 +157,8 @@ def run_smoke() -> None:
         "live_index": rows_v,
         "live_compaction": rows_c,
         "store": rows_t,
+        "telemetry": rows_m,
+        "telemetry_adapt": rows_a,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
     }
@@ -193,6 +204,8 @@ def run_check() -> None:
         ("live_compaction", ("n_base",), ("compact_ms",)),
         ("store", ("n", "rows"),
          ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
+        ("telemetry", ("n", "q"),
+         ("routed_p50_us_off", "routed_p50_us_on")),
     ]
     failures: list[str] = []
     for section, key_cols, metrics in comparisons:
@@ -226,7 +239,8 @@ def run_check() -> None:
                       f"({ratio:.2f}x) {flag}", flush=True)
     # absolute acceptance gates, independent of trajectory history: the
     # fused live read path must hold <=1.5x sealed at 50% delta fill,
-    # and graft compaction must scale sublinearly in base size
+    # the telemetry sink must cost <=5% on the routed hot path, and
+    # graft compaction must scale sublinearly in base size
     for row in last.get("live_index", []):
         ratio = row.get("live_sealed_ratio")
         if ratio is None:
@@ -239,6 +253,19 @@ def run_check() -> None:
                 f"{LIVE_SEALED_MAX} (absolute gate)")
         print(f"  live_index{key} live_sealed_ratio: {ratio} "
               f"(gate <= {LIVE_SEALED_MAX}) "
+              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+    for row in last.get("telemetry", []):
+        pct = row.get("overhead_pct")
+        if pct is None:
+            continue
+        key = [row.get("n"), row.get("q")]
+        bad = pct > TELEMETRY_OVERHEAD_MAX
+        if bad:
+            failures.append(
+                f"telemetry{key} overhead_pct: {pct} > "
+                f"{TELEMETRY_OVERHEAD_MAX} (absolute gate)")
+        print(f"  telemetry{key} overhead_pct: {pct} "
+              f"(gate <= {TELEMETRY_OVERHEAD_MAX}) "
               f"{'REGRESSION' if bad else 'ok'}", flush=True)
     comp = [r for r in last.get("live_compaction", [])
             if "scaling_vs_linear" in r]
@@ -266,7 +293,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,pareto,fig4,table5,table6,"
                          "table7,latency,kernels,sharded,live,store,"
-                         "roofline")
+                         "telemetry,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size kernels+latency run, appends a per-PR "
                          "record to BENCH_kernels.json at the repo root")
@@ -289,7 +316,7 @@ def main() -> None:
                             bench_cls_vs_reg, bench_depth,
                             bench_routing_latency, bench_kernels,
                             bench_live, bench_roofline, bench_sharded,
-                            bench_store)
+                            bench_store, bench_telemetry)
 
     harnesses = {
         "table1": ("paper Table 1: best method grid", bench_table1.run),
@@ -311,6 +338,8 @@ def main() -> None:
                  bench_live.run),
         "store": ("storage: snapshot write / cold open / WAL replay",
                   bench_store.run),
+        "telemetry": ("telemetry sink overhead on the routed hot path",
+                      bench_telemetry.run),
         "roofline": ("roofline terms from the dry-run artifacts",
                      bench_roofline.run),
     }

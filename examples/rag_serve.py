@@ -20,8 +20,20 @@ recover the index — including writes from previous sessions — plus the
 version-stamped router from disk. Composes with `--live` and
 `--shards N` (the store remembers the shard layout).
 
+`--telemetry` attaches a `TelemetrySink` to the service: every routed
+batch records per-query events (method, ps, predicate, latency share,
+live generation) and the run prints counters + latency percentiles.
+`--online-router` (implies `--telemetry`) additionally runs the
+`OnlineRouterAdapter` between request rounds: reservoir-sampled
+queries are replayed against the brute-force oracle on a pinned
+snapshot, exact recall folds into an EWMA `OnlineBenchmarkTable`, and
+if drift crosses the threshold the router retrains off the serving
+path and promotes only after shadow-eval (with `--data-dir`, the
+promoted artifact links into the store manifest atomically).
+
     PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
-        [--shards 2] [--live] [--data-dir /tmp/rag-store]
+        [--shards 2] [--live] [--data-dir /tmp/rag-store] \
+        [--telemetry] [--online-router]
 """
 
 import argparse
@@ -49,7 +61,7 @@ from repro.launch.serve import generate
 from repro.models import common, lm
 
 
-def _open_or_create_store(args):
+def _open_or_create_store(args, sink=None):
     """Recover (or initialise) the durable corpus + router.
 
     Returns (store, router, service). A recovered store restores the
@@ -86,9 +98,9 @@ def _open_or_create_store(args):
         lfx = store.index
         print(f"created store at {args.data_dir}: {ds.n} vectors, "
               f"router artifact linked")
-    svc = (ShardedRouterService(lfx, router, t=0.9)
+    svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink)
            if isinstance(lfx, ShardedLiveIndex)
-           else RouterService(lfx, router, t=0.9))
+           else RouterService(lfx, router, t=0.9, telemetry=sink))
     return store, router, svc
 
 
@@ -106,13 +118,26 @@ def main():
                          "corpus + router from it on startup (skipping "
                          "the offline stage), persist all writes to it, "
                          "checkpoint on shutdown")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach a TelemetrySink: per-query events, "
+                         "counters, latency percentiles, audit reservoir")
+    ap.add_argument("--online-router", action="store_true",
+                    help="run the OnlineRouterAdapter (implies "
+                         "--telemetry): sampled exact-recall audits fold "
+                         "into an EWMA table; drift triggers background "
+                         "retrain + shadow-eval + atomic artifact swap")
     args = ap.parse_args()
+    if args.online_router:
+        args.telemetry = True
     rng = np.random.default_rng(0)
 
     # --- corpus + router (offline stage, or store recovery) ---
+    from repro.ann.telemetry import OnlineRouterAdapter, TelemetrySink
+    sink = (TelemetrySink(capacity=4096, reservoir=128, seed=11)
+            if args.telemetry else None)
     store = None
     if args.data_dir:
-        store, router, svc = _open_or_create_store(args)
+        store, router, svc = _open_or_create_store(args, sink)
         ds = svc.index.ds        # the recovered sealed base
     else:
         spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5,
@@ -126,14 +151,15 @@ def main():
             fx.close()           # the live handle owns its own tensors
             lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
                    else LiveFilteredIndex(ds))
-            svc = (ShardedRouterService(lfx, router, t=0.9)
-                   if args.shards > 1 else RouterService(lfx, router, t=0.9))
+            svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink)
+                   if args.shards > 1
+                   else RouterService(lfx, router, t=0.9, telemetry=sink))
         elif args.shards > 1:
             fx.close()           # collect() is done; shards own their tensors
             sfx = ShardedFilteredIndex(ds, args.shards)
-            svc = ShardedRouterService(sfx, router, t=0.9)
+            svc = ShardedRouterService(sfx, router, t=0.9, telemetry=sink)
         else:
-            svc = RouterService(fx, router, t=0.9)
+            svc = RouterService(fx, router, t=0.9, telemetry=sink)
     print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
           f"live={args.live}, durable={bool(args.data_dir)}); router "
           f"ready ({len(router.table.entries)} table entries)")
@@ -209,6 +235,24 @@ def main():
           f"(largest {qstats['max_batch_seen']}, depth "
           f"{qstats['max_queue_depth']}, "
           f"flushes {qstats['flush_reasons']})")
+    if sink is not None:
+        ts = sink.stats()
+        print(f"telemetry: {ts['queries']} events, p50 "
+              f"{ts['latency_us']['p50']:.0f} us, p99 "
+              f"{ts['latency_us']['p99']:.0f} us, by_method "
+              f"{ts['by_method']}, reservoir {ts['reservoir']['size']}")
+    if args.online_router:
+        adapter = OnlineRouterAdapter(svc, sink, store=store,
+                                      drift_threshold=0.05,
+                                      min_samples=16, retrain_epochs=40,
+                                      seed=3)
+        rep = adapter.step()
+        print(f"adapter: audited {rep['samples']} sampled queries, "
+              f"max_drift {rep['max_drift']:.3f}, table v"
+              f"{rep['table_version']}, retrained={rep['retrained']}, "
+              f"promoted={rep['promoted']}"
+              + (f", artifact {rep['artifact']}" if "artifact" in rep
+                 else ""))
     if args.live:
         st = svc.index.stats()
         print(f"live writer: {writer_stats['upserts']} upserts, "

@@ -21,12 +21,55 @@ from repro.ann.predicates import Predicate, eval_predicate_np
 
 # on-disk segment format (one directory per sealed generation; see
 # docs/persistence.md): .npy array files + a segment.json manifest with
-# per-file sha1 checksums, readable zero-copy via np.memmap
+# per-file sha1 checksums, readable zero-copy via np.memmap.
+# Version 2 adds word-level RLE for the per-row label bitmaps (rows are
+# group-sorted, so each bitmap column is ~G runs of ~group_size words —
+# the raw N·W·4 bytes compress to ~2·G·W entries); files record their
+# "encoding" and v1 segments (all raw) load unchanged.
 SEGMENT_FORMAT = "repro.ann-segment"
-SEGMENT_VERSION = 1
+SEGMENT_VERSION = 2
 SEGMENT_META = "segment.json"
 _SEGMENT_ARRAYS = ("vectors", "bitmaps", "norms_sq", "group_of",
                    "group_bitmaps", "group_start", "group_size")
+# fields eligible for RLE (the [N, W] bitmaps dominate label bytes;
+# everything else stays raw + memmapped)
+_RLE_FIELDS = ("bitmaps",)
+_RLE_ENCODING = "rle-u32-colmajor"
+
+
+def rle_encode_words(arr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Column-major word-level run-length encoding of a [N, W] uint32
+    array. Returns (values u32, counts i64) with
+    ``np.repeat(values, counts)`` reproducing ``arr.T.ravel()`` —
+    column-major order because rows are group-sorted, so each bitmap
+    column is long runs of identical words (one per label group)."""
+    flat = np.ascontiguousarray(arr.T).ravel()
+    if flat.size == 0:
+        return (np.empty(0, np.uint32), np.empty(0, np.int64))
+    edge = np.flatnonzero(np.diff(flat)) + 1
+    starts = np.concatenate(([0], edge))
+    counts = np.diff(np.concatenate((starts, [flat.size])))
+    # smallest int dtype that holds the longest run (decode repeats
+    # regardless of dtype, so this is pure size win)
+    for dt in (np.uint16, np.uint32):
+        if counts.max() <= np.iinfo(dt).max:
+            counts = counts.astype(dt)
+            break
+    else:
+        counts = counts.astype(np.int64)
+    return flat[starts].astype(np.uint32), counts
+
+
+def rle_decode_words(values: np.ndarray, counts: np.ndarray,
+                     shape: tuple[int, int]) -> np.ndarray:
+    """Inverse of `rle_encode_words`: exact [N, W] uint32 round-trip."""
+    n, w = int(shape[0]), int(shape[1])
+    flat = np.repeat(values.astype(np.uint32), counts)
+    if flat.size != n * w:
+        raise ValueError(
+            f"RLE stream decodes to {flat.size} words; shape "
+            f"{(n, w)} needs {n * w} (torn or corrupt segment)")
+    return np.ascontiguousarray(flat.reshape(w, n).T)
 
 
 def sha1_file(path: str, block: int = 1 << 22) -> str:
@@ -125,19 +168,34 @@ class ANNDataset:
         One ``.npy`` file per array plus a ``segment.json`` manifest
         carrying shape metadata and per-file sha1 checksums. Segments are
         written once per generation and never mutated; `load_segment`
-        maps them back zero-copy. Returns the manifest dict.
+        maps them back zero-copy. The [N, W] label bitmaps are stored
+        word-level run-length encoded (``.rle.npz``) when that is
+        smaller than raw — rows are group-sorted, so each column runs
+        in group-length blocks; a raw fallback keeps adversarial inputs
+        no worse than v1. Returns the manifest dict.
         """
         os.makedirs(dirpath, exist_ok=True)
         files = {}
         for field in _SEGMENT_ARRAYS:
-            fname = f"{field}.npy"
-            fpath = os.path.join(dirpath, fname)
             arr = np.ascontiguousarray(getattr(self, field))
-            np.save(fpath, arr)
+            encoding = "raw"
+            if field in _RLE_FIELDS and arr.ndim == 2:
+                values, counts = rle_encode_words(arr)
+                if values.nbytes + counts.nbytes < arr.nbytes:
+                    encoding = _RLE_ENCODING
+            if encoding == _RLE_ENCODING:
+                fname = f"{field}.rle.npz"
+                fpath = os.path.join(dirpath, fname)
+                np.savez(fpath, values=values, counts=counts)
+            else:
+                fname = f"{field}.npy"
+                fpath = os.path.join(dirpath, fname)
+                np.save(fpath, arr)
             files[field] = {"file": fname, "sha1": sha1_file(fpath),
                             "bytes": os.path.getsize(fpath),
                             "shape": list(arr.shape),
-                            "dtype": str(arr.dtype)}
+                            "dtype": str(arr.dtype),
+                            "encoding": encoding}
         meta = {
             "format": SEGMENT_FORMAT,
             "version": SEGMENT_VERSION,
@@ -199,7 +257,20 @@ class ANNDataset:
             if verify and sha1_file(fpath) != info["sha1"]:
                 raise ValueError(
                     f"segment file {fpath!r} fails its sha1 checksum")
-            arrays[field] = np.load(fpath, mmap_mode="r" if mmap else None)
+            encoding = info.get("encoding", "raw")
+            if encoding == _RLE_ENCODING:
+                # compressed fields decode into memory (they're small);
+                # raw fields stay memmapped
+                with np.load(fpath) as z:
+                    arrays[field] = rle_decode_words(
+                        z["values"], z["counts"], info["shape"])
+            elif encoding == "raw":
+                arrays[field] = np.load(fpath,
+                                        mmap_mode="r" if mmap else None)
+            else:
+                raise ValueError(
+                    f"segment file {fpath!r} uses unknown encoding "
+                    f"{encoding!r} (newer writer?)")
         lookup = {lb.bitmap_key(np.ascontiguousarray(bm)): j
                   for j, bm in enumerate(arrays["group_bitmaps"])}
         return ANNDataset(name=meta["name"], universe=int(meta["universe"]),

@@ -296,6 +296,12 @@ class FilteredIndex:
         return list(self._indexes.keys())
 
     # ---- stable external keys -------------------------------------------
+    @property
+    def generation(self) -> int:
+        """A sealed index never remaps rows — constant 0, mirroring the
+        live handles so telemetry events carry a uniform field."""
+        return 0
+
     def keys_of(self, ids) -> np.ndarray:
         """Stable external keys for result ids (−1 stays −1). A sealed
         `FilteredIndex` never remaps its rows, so keys are the row ids —

@@ -213,30 +213,51 @@ class ChunkIndex:
     `centroids[c]` to every member, so `max(0, ‖q−c‖ − radius)²` is an
     exact lower bound on any member's squared distance to q — the
     pruning test the fused read path uses. Chunks are immutable once
-    sealed, so the index never updates."""
+    sealed, so the index never updates.
+
+    `label_union[c]` / `label_inter[c]` are the bitwise OR / AND of the
+    members' label bitmaps — exact label bounds, so a cluster that
+    *cannot* contain a predicate-matching row is pruned even when the
+    distance bound can't fire (e.g. a query with < k live base
+    candidates). Both are None on indexes persisted before the fields
+    existed; such chunks simply skip label pruning."""
 
     centroids: np.ndarray   # [C, d] f32
     cnorms: np.ndarray      # [C] f64 squared centroid norms
     radius: np.ndarray      # [C] f64 cover radii (rounded up)
     members: np.ndarray     # [chunk] i32 chunk-local rows, cluster-grouped
     starts: np.ndarray      # [C+1] i32 posting-list offsets into members
+    label_union: np.ndarray | None = None   # [C, W] u32 OR of member labels
+    label_inter: np.ndarray | None = None   # [C, W] u32 AND of member labels
 
     def arrays(self) -> dict:
-        return {"centroids": self.centroids, "cnorms": self.cnorms,
-                "radius": self.radius, "members": self.members,
-                "starts": self.starts}
+        out = {"centroids": self.centroids, "cnorms": self.cnorms,
+               "radius": self.radius, "members": self.members,
+               "starts": self.starts}
+        if self.label_union is not None:
+            out["label_union"] = self.label_union
+            out["label_inter"] = self.label_inter
+        return out
 
     @classmethod
     def from_arrays(cls, arrays: dict) -> "ChunkIndex":
-        return cls(**{f: np.asarray(arrays[f])
-                      for f in ("centroids", "cnorms", "radius",
-                                "members", "starts")})
+        out = {f: np.asarray(arrays[f])
+               for f in ("centroids", "cnorms", "radius",
+                         "members", "starts")}
+        # label bounds are optional: pre-existing persisted chunk
+        # indexes lack them and just forgo label pruning
+        for f in ("label_union", "label_inter"):
+            if f in arrays:
+                out[f] = np.asarray(arrays[f])
+        return cls(**out)
 
 
-def build_chunk_index(vectors: np.ndarray, *, n_clusters: int = 8,
-                      seed: int = 0) -> ChunkIndex:
+def build_chunk_index(vectors: np.ndarray, *, bitmaps: np.ndarray = None,
+                      n_clusters: int = 8, seed: int = 0) -> ChunkIndex:
     """Build the mini-IVF for one sealed chunk (deterministic per seed,
-    so a persisted chunk index equals a rebuilt one)."""
+    so a persisted chunk index equals a rebuilt one). With `bitmaps`
+    ([n, W] u32 member label bitmaps) the index also carries exact
+    per-cluster label union/intersection bounds for predicate pruning."""
     from repro.ann.ivf import assign_to_centroids, kmeans
 
     n = vectors.shape[0]
@@ -253,8 +274,18 @@ def build_chunk_index(vectors: np.ndarray, *, n_clusters: int = 8,
     radius = np.zeros(cent.shape[0], np.float64)
     np.maximum.at(radius, assign, dist)
     radius = radius * (1.0 + 1e-9) + 1e-9    # round up: bound must hold
+    union = inter = None
+    if bitmaps is not None:
+        nc = cent.shape[0]
+        w = bitmaps.shape[1]
+        union = np.zeros((nc, w), np.uint32)
+        # empty clusters read as union=0 / inter=~0: every label test
+        # then prunes them, which is safe (their posting list is empty)
+        inter = np.full((nc, w), np.uint32(0xFFFFFFFF))
+        np.bitwise_or.at(union, assign, bitmaps.astype(np.uint32))
+        np.bitwise_and.at(inter, assign, bitmaps.astype(np.uint32))
     return ChunkIndex(cent.astype(np.float32), (centf ** 2).sum(axis=1),
-                      radius, order, starts)
+                      radius, order, starts, union, inter)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,11 +450,13 @@ class DeltaSegment:
             return []
         with self._dev_lock:
             vec = self._vec        # row prefix is immutable; see host_view
+            bm = self._bm
             while len(self._chunk_idx) < want:
                 i = len(self._chunk_idx)
                 lo = i * self.chunk
                 self._chunk_idx.append(build_chunk_index(
-                    vec[lo: lo + self.chunk], seed=i))
+                    vec[lo: lo + self.chunk],
+                    bitmaps=bm[lo: lo + self.chunk], seed=i))
             return self._chunk_idx[:want]
 
     def adopt_chunk_indexes(self, indexes: dict[int, ChunkIndex]) -> None:
@@ -701,7 +734,8 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
                                       if delta_prune_min_rows is None
                                       else int(delta_prune_min_rows))
         self._tomb_words_cache = None   # ((gen, version, n_pad), device arr)
-        self._prune_stats = {"calls": 0, "clusters": 0, "pruned": 0}
+        self._prune_stats = {"calls": 0, "clusters": 0, "pruned": 0,
+                             "label_pruned": 0}
         self._closed = False
 
     @classmethod
@@ -1149,36 +1183,83 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
         self._tomb_words_cache = (key, dev)
         return dev
 
+    @staticmethod
+    def _label_drop(chunk_idx: list[ChunkIndex],
+                    batch: QueryBatch) -> np.ndarray:
+        """[Q, C] True where a cluster's exact label bounds prove no
+        member can satisfy the query's predicate. Chunks persisted
+        without label bounds contribute all-False columns (no label
+        pruning, distance pruning unaffected)."""
+        qb = batch.bitmaps.astype(np.uint32)
+        nq = qb.shape[0]
+        qx = qb[:, None, :]                       # [Q, 1, W]
+        pred = Predicate(batch.pred)
+        cols = []
+        for c in chunk_idx:
+            ncl = c.radius.size
+            if c.label_union is None:
+                cols.append(np.zeros((nq, ncl), bool))
+                continue
+            uq = c.label_union[None, :, :] & qx   # [Q, C, W]
+            if pred == Predicate.OR:
+                # OR needs a shared bit; the union has none of q's bits
+                drop = (uq == 0).all(axis=2)
+            elif pred == Predicate.AND:
+                # AND needs q ⊆ row; a q-bit missing from the union is
+                # missing from every member
+                drop = (uq != qx).any(axis=2)
+            else:                                 # EQUALITY: row == q
+                # a q-bit missing from the union, or a bit carried by
+                # every member (intersection) that q lacks
+                drop = ((uq != qx).any(axis=2)
+                        | ((c.label_inter[None, :, :] & ~qx) != 0)
+                        .any(axis=2))
+            cols.append(drop)
+        return np.concatenate(cols, axis=1)
+
     def _delta_select(self, snap: LiveSnapshot, batch: QueryBatch,
                       b_ids: np.ndarray, b_raw: np.ndarray
                       ) -> np.ndarray | None:
-        """Exact ball-bound pruning over the sealed chunks' mini-IVFs.
+        """Exact ball-bound + label-bound pruning over the sealed
+        chunks' mini-IVFs.
 
         Returns None to scan the whole delta mirror, or a sorted [NS]
         i32 array of delta-local rows that provably contains every
         query's live top-k among the delta. A cluster is dropped only
-        when, for *every* query, the exact lower bound
-        max(0, ‖q−c‖ − radius)² on any member's distance exceeds the
-        query's k-th best live base-candidate distance (plus a rounding
-        margin) — such rows cannot displace the eventual top-k, so the
-        result stays bit-identical to the full scan. The partial tail
-        chunk is always scanned."""
+        when, for *every* query, it provably cannot contribute:
+
+        * distance: the exact lower bound max(0, ‖q−c‖ − radius)² on
+          any member's distance exceeds the query's k-th best live
+          base-candidate distance (plus a rounding margin) — such rows
+          cannot displace the eventual top-k;
+        * labels: the cluster's exact label union/intersection is
+          incompatible with the query's predicate (OR: no shared bit
+          with the union; AND: a required bit missing from the union;
+          EQUALITY: a required bit missing from the union, or a bit
+          every member carries that the query lacks) — such rows are
+          masked out by `masked_topk` anyway.
+
+        Either way the result stays bit-identical to the full scan.
+        Label pruning needs no base candidates, so it also fires for
+        queries with fewer than k live base matches (where the distance
+        threshold is +inf). The partial tail chunk is always scanned."""
         rows = snap.delta_rows
-        if rows < self._delta_prune_min_rows or b_ids.shape[1] < batch.k:
+        if rows < self._delta_prune_min_rows:
             return None
         chunk_idx = snap.delta.chunk_indexes(rows)
         if not chunk_idx:
             return None
         # per-query threshold: k-th smallest live base candidate (raw
-        # score scale ‖v‖² − 2·q·v); +inf disables pruning for queries
-        # with fewer than k live base candidates
-        live = b_ids >= 0
-        live[live] = ~snap.tombstones[b_ids[live]]
-        cand = np.where(live, b_raw, np.inf).astype(np.float64)
-        cand.sort(axis=1)
-        bound = cand[:, batch.k - 1]                       # [Q]
-        if not np.isfinite(bound).all():
-            return None
+        # score scale ‖v‖² − 2·q·v); +inf disables distance pruning for
+        # queries with fewer than k live base candidates
+        if b_ids.shape[1] >= batch.k:
+            live = b_ids >= 0
+            live[live] = ~snap.tombstones[b_ids[live]]
+            cand = np.where(live, b_raw, np.inf).astype(np.float64)
+            cand.sort(axis=1)
+            bound = cand[:, batch.k - 1]                   # [Q]
+        else:
+            bound = np.full(batch.q, np.inf)
         qv = batch.vectors.astype(np.float64)
         qn = (qv ** 2).sum(axis=1)
         cent = np.concatenate([c.centroids for c in chunk_idx]
@@ -1188,13 +1269,18 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
         d2 = np.maximum(cn[None, :] - 2.0 * (qv @ cent.T) + qn[:, None],
                         0.0)
         lb = np.maximum(np.sqrt(d2) - rad[None, :], 0.0) ** 2   # [Q, C]
-        # margin absorbs the kernel's f32 rounding of candidate scores
+        # margin absorbs the kernel's f32 rounding of candidate scores;
+        # an infinite bound yields an infinite margin and never drops
         margin = 1e-3 * (1.0 + np.abs(bound))
-        drop = ((lb - qn[:, None]) > (bound + margin)[:, None]).all(axis=0)
+        dist_drop = (lb - qn[:, None]) > (bound + margin)[:, None]
+        label_drop = self._label_drop(chunk_idx, batch)         # [Q, C]
+        drop = (dist_drop | label_drop).all(axis=0)
         with self._lock:
             self._prune_stats["calls"] += 1
             self._prune_stats["clusters"] += int(drop.size)
             self._prune_stats["pruned"] += int(drop.sum())
+            self._prune_stats["label_pruned"] += int(
+                label_drop.all(axis=0).sum())
         if not drop.any():
             return None
         chunk = snap.delta.chunk

@@ -67,15 +67,21 @@ class RouterService:
             overridable via the `t=` kwarg on search/route/explain).
         methods: optional Mapping name -> Method overriding the default
             candidate-registry view (e.g. a trimmed pool).
+        telemetry: optional `repro.ann.telemetry.TelemetrySink`; when
+            set, every executed batch records per-query events (method,
+            ps, predicate, k, latency share, live generation) and offers
+            queries to the audit reservoir. None (default) keeps the hot
+            path telemetry-free.
     """
 
     def __init__(self, index: FilteredIndex, router, *, t: float = 0.9,
-                 methods=None):
+                 methods=None, telemetry=None):
         self.index = index
         self.router = router
         self.t = float(t)
         self.methods = (methods if methods is not None
                         else registry_mod.candidate_methods())
+        self.telemetry = telemetry
 
     @property
     def ds(self):
@@ -157,6 +163,15 @@ class RouterService:
         timings = {"search_s": t2 - t1, "total_s": t2 - t1}
         if callable(pop):
             timings.update(pop())
+        sink = self.telemetry
+        if sink is not None:
+            sink.record_batch(
+                batch, decisions, search_s=t2 - t1,
+                generation=getattr(self.index, "generation", 0),
+                keys=keys if keys is not None else ids)
+            for stage in ("base_s", "delta_s", "merge_s"):
+                if stage in timings:
+                    sink.note(stage, timings[stage])
         return SearchResult(
             ids=ids,
             distances=exact_distances(raw, ids, batch.vectors),
@@ -185,6 +200,8 @@ class RouterService:
         res = self.execute(batch, decisions)
         res.timings["route_s"] = t1 - t0
         res.timings["total_s"] = res.timings["search_s"] + (t1 - t0)
+        if self.telemetry is not None:
+            self.telemetry.note("route_s", t1 - t0)
         return res
 
     def search_chunked(self, batch: QueryBatch, *,
@@ -264,7 +281,8 @@ class ShardedRouterService(RouterService):
         router / t / methods: as in `RouterService`.
     """
 
-    def __init__(self, index, router, *, t: float = 0.9, methods=None):
+    def __init__(self, index, router, *, t: float = 0.9, methods=None,
+                 telemetry=None):
         from repro.ann.live import ShardedLiveIndex
         from repro.ann.sharded import ShardedFilteredIndex
 
@@ -273,7 +291,8 @@ class ShardedRouterService(RouterService):
                 f"ShardedRouterService needs a ShardedFilteredIndex or "
                 f"ShardedLiveIndex; got {type(index).__name__} (use "
                 f"RouterService for single-index handles)")
-        super().__init__(index, router, t=t, methods=methods)
+        super().__init__(index, router, t=t, methods=methods,
+                         telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -501,7 +520,10 @@ class AsyncBatchQueue:
             s = dict(self._stats)
             s["flush_reasons"] = dict(self._stats["flush_reasons"])
             s["pending"] = len(self._pending)
-            return s
+        sink = getattr(self.service, "telemetry", None)
+        if sink is not None:
+            s["telemetry"] = sink.stats()
+        return s
 
     # ---- worker: stage 1 (collect + route), stage 2 (execute) ------------
     def _run(self) -> None:
@@ -580,11 +602,19 @@ class AsyncBatchQueue:
                     self._stats["max_batch_seen"], len(futs))
                 rs = self._stats["flush_reasons"]
                 rs[reason] = rs.get(reason, 0) + 1
+            sink = getattr(self.service, "telemetry", None)
             for reqs, batch, decisions in staged:
                 try:
                     res = (self.service.execute(batch, decisions)
                            if decisions is not None
                            else self._search(batch))
+                    if sink is not None:
+                        # queue wait = submit -> result, folded as a
+                        # counter pair (sum + count) per drain window
+                        now = time.monotonic()
+                        wait = sum(now - r.t_submit for r in reqs)
+                        sink.note("queue_wait_s", wait)
+                        sink.note("queue_waits", len(reqs))
                     for j, req in enumerate(reqs):
                         dec = (res.decisions[j]
                                if res.decisions is not None else None)

@@ -238,6 +238,13 @@ class ShardedFilteredIndex:
             decisions=None, timings={"search_s": dt, "total_s": dt},
             keys=self.keys_of(ids))
 
+    @property
+    def generation(self) -> int:
+        """Sealed sharded indexes never remap rows — generation is a
+        constant 0, mirroring `FilteredIndex` so telemetry events carry
+        a uniform generation field across handle types."""
+        return 0
+
     # ---- stable external keys -------------------------------------------
     def keys_of(self, ids) -> np.ndarray:
         """Stable external keys for global result ids: identity on a

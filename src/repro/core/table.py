@@ -43,6 +43,13 @@ class BenchmarkTable:
         self.entries[(ds, int(pt), method, ps_id)] = {
             "recall": float(recall), "qps": float(qps)}
 
+    def copy(self) -> "BenchmarkTable":
+        """Deep-enough copy: fresh entries dict with fresh cell dicts.
+        The online layer (`repro.ann.telemetry.OnlineBenchmarkTable`)
+        builds on this so EWMA folds never mutate the offline table."""
+        return BenchmarkTable(
+            entries={k: dict(v) for k, v in self.entries.items()})
+
     def settings(self, ds: str, pt: int, method: str):
         out = []
         for (d, p, m, ps_id), v in self.entries.items():

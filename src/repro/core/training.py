@@ -128,11 +128,14 @@ def assemble_xy(coll: Collection, feature_names: list,
             np.concatenate(ys).astype(np.float32), meta)
 
 
-def train_models(coll: Collection, feature_names: list, *, seed: int = 0,
-                 hidden=(64, 32), epochs: int = 200,
-                 methods: list = METHOD_ORDER):
-    """Train one MLP-Reg per candidate method. Returns (models, scaler)."""
-    x_raw, y, _ = assemble_xy(coll, feature_names, methods)
+def train_models_from_xy(x_raw: "np.ndarray", y: "np.ndarray",
+                         methods: list, *, seed: int = 0,
+                         hidden=(64, 32), epochs: int = 200):
+    """Fit the scaler + one MLP-Reg per method on an already-assembled
+    (X_raw [N, F], y [N, M]) pair. This is the shared core of offline
+    `train_models` and the online adapter's audit-label retrain
+    (`repro.ann.telemetry.OnlineRouterAdapter`). Returns
+    (models, scaler)."""
     scaler = mlp.Scaler.fit(x_raw)
     xs = scaler.transform(x_raw)
     models = {}
@@ -141,6 +144,15 @@ def train_models(coll: Collection, feature_names: list, *, seed: int = 0,
                                seed=seed + 131 * j)
         models[m] = mlp.params_to_numpy(params)
     return models, scaler
+
+
+def train_models(coll: Collection, feature_names: list, *, seed: int = 0,
+                 hidden=(64, 32), epochs: int = 200,
+                 methods: list = METHOD_ORDER):
+    """Train one MLP-Reg per candidate method. Returns (models, scaler)."""
+    x_raw, y, _ = assemble_xy(coll, feature_names, methods)
+    return train_models_from_xy(x_raw, y, methods, seed=seed,
+                                hidden=hidden, epochs=epochs)
 
 
 def train_router(coll_train: Collection, table: BenchmarkTable,

@@ -10,7 +10,8 @@ import re
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ["docs/ARCHITECTURE.md", "docs/serving.md", "docs/persistence.md"]
+DOCS = ["docs/ARCHITECTURE.md", "docs/serving.md", "docs/persistence.md",
+        "docs/observability.md"]
 FENCE = re.compile(r"```([^\n`]*)\n(.*?)```", re.DOTALL)
 
 

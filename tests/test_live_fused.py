@@ -341,3 +341,122 @@ def test_key_table_growth_keeps_all_entries(rng):
         t.insert(ks, ks * 2)
     all_ks = np.arange(0, 40000, dtype=np.int64) * 7 + 1
     np.testing.assert_array_equal(t.lookup(all_ks), all_ks * 2)
+
+
+# ---------------------------------------------------------------------------
+# label-aware delta pruning (PR-7)
+# ---------------------------------------------------------------------------
+
+def test_chunk_index_label_bounds_exact(tiny_ds, rng):
+    """label_union / label_inter are the exact bitwise OR / AND of each
+    cluster's member bitmaps, and they round-trip through arrays()."""
+    v = tiny_ds.vectors[:128]
+    bm = tiny_ds.bitmaps[:128]
+    ci = build_chunk_index(v, bitmaps=bm, seed=2)
+    W = bm.shape[1]
+    assert ci.label_union.shape == ci.label_inter.shape \
+        == (ci.radius.size, W)
+    for c in range(ci.radius.size):
+        rows = ci.members[ci.starts[c]: ci.starts[c + 1]]
+        if rows.size == 0:        # empty cluster: identity elements
+            assert (ci.label_union[c] == 0).all()
+            assert (ci.label_inter[c] == np.uint32(0xFFFFFFFF)).all()
+            continue
+        np.testing.assert_array_equal(
+            ci.label_union[c], np.bitwise_or.reduce(bm[rows], axis=0))
+        np.testing.assert_array_equal(
+            ci.label_inter[c], np.bitwise_and.reduce(bm[rows], axis=0))
+    rt = ChunkIndex.from_arrays(ci.arrays())
+    np.testing.assert_array_equal(rt.label_union, ci.label_union)
+    np.testing.assert_array_equal(rt.label_inter, ci.label_inter)
+
+
+def test_chunk_index_without_bitmaps_stays_legacy(rng):
+    """No bitmaps at build time (or a legacy npz without the label
+    fields) -> label fields stay None and _label_drop contributes
+    all-False columns."""
+    v = rng.normal(size=(96, 8)).astype(np.float32)
+    ci = build_chunk_index(v, seed=1)
+    assert ci.label_union is None and ci.label_inter is None
+    arrays = ci.arrays()
+    assert "label_union" not in arrays
+    rt = ChunkIndex.from_arrays(arrays)
+    assert rt.label_union is None
+    qb = np.ones((3, 2), np.uint32)
+    batch = QueryBatch(np.zeros((3, 8), np.float32), qb,
+                       Predicate.AND, 5)
+    drop = LiveFilteredIndex._label_drop([rt], batch)
+    assert drop.shape == (3, rt.radius.size)
+    assert not drop.any()
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_label_prune_parity_under_churn(tiny_ds, tiny_queries, pred, rng):
+    """Fused results with label bounds active are bit-identical to the
+    staged path for every predicate."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors[:16], qs.bitmaps[:16], pred, 10)
+    pick = rng.integers(0, tiny_ds.n, 512)
+    with LiveFilteredIndex(tiny_ds, delta_chunk=64,
+                           delta_prune_min_rows=0) as live:
+        live.upsert(tiny_ds.vectors[pick] + np.float32(0.01),
+                    tiny_ds.bitmaps[pick])
+        r1 = live.search(batch, "prefilter")
+        live.fused = False
+        r2 = live.search(batch, "prefilter")
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        np.testing.assert_array_equal(r1.distances, r2.distances)
+        np.testing.assert_array_equal(r1.keys, r2.keys)
+        assert live.stats()["delta_prune"]["calls"] > 0
+
+
+def test_label_prune_fires_where_distance_bound_cannot(tiny_ds):
+    """An empty base gives every query an infinite distance bound — only
+    the label bounds can prune. Small sealed chunks make per-cluster
+    unions narrow enough that selective EQUALITY queries drop clusters,
+    and the result must still match the staged path bit for bit."""
+    from repro.data.ann_synth import make_queries
+
+    qs = make_queries(tiny_ds, Predicate.EQUALITY, 8, seed=4)
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.EQUALITY, 5)
+    rng = np.random.default_rng(9)
+    pick = rng.integers(0, tiny_ds.n, 512)
+    with LiveFilteredIndex.empty("lbl_e", tiny_ds.dim, tiny_ds.universe,
+                                 delta_chunk=64,
+                                 delta_prune_min_rows=0) as live:
+        live.upsert(tiny_ds.vectors[pick], tiny_ds.bitmaps[pick])
+        r1 = live.search(batch, "prefilter")
+        live.fused = False
+        r2 = live.search(batch, "prefilter")
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        np.testing.assert_array_equal(r1.keys, r2.keys)
+        st = live.stats()["delta_prune"]
+        assert st["label_pruned"] > 0, st
+
+
+def test_label_prune_drop_rules_directly(tiny_ds):
+    """_label_drop's three predicate rules on a handcrafted cluster:
+    union=0b0011, inter=0b0001."""
+    union = np.array([[0b0011]], np.uint32)
+    inter = np.array([[0b0001]], np.uint32)
+    ci = ChunkIndex(centroids=np.zeros((1, 4), np.float32),
+                    cnorms=np.zeros(1, np.float32),
+                    radius=np.zeros(1, np.float32),
+                    members=np.arange(2, dtype=np.int32),
+                    starts=np.array([0, 2], np.int32),
+                    label_union=union, label_inter=inter)
+
+    def drop(bits, pred):
+        qb = np.array([[bits]], np.uint32)
+        b = QueryBatch(np.zeros((1, 4), np.float32), qb, pred, 3)
+        return bool(LiveFilteredIndex._label_drop([ci], b)[0, 0])
+
+    # OR: prune iff union shares no bit with q
+    assert drop(0b0100, Predicate.OR) is True
+    assert drop(0b0010, Predicate.OR) is False
+    # AND: prune iff some q-bit is missing from the union
+    assert drop(0b0110, Predicate.AND) is True
+    assert drop(0b0011, Predicate.AND) is False
+    # EQ: AND rule, plus a bit every member carries that q lacks
+    assert drop(0b0010, Predicate.EQUALITY) is True   # inter bit 0 missing
+    assert drop(0b0011, Predicate.EQUALITY) is False

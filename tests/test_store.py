@@ -622,3 +622,118 @@ def test_empty_store_grows_and_recovers(tmp_path, tiny_ds, tiny_queries):
         assert st3.index.base_n == tiny_ds.n
         assert st3.stats()["replayed_records"] == 0
         _assert_same_result(st3.index.search(batch, "prefilter"), want)
+
+
+# ---------------------------------------------------------------------------
+# segment bitmap compression (PR-7, segment v2)
+# ---------------------------------------------------------------------------
+
+def test_rle_roundtrip_bit_identical(rng):
+    from repro.ann.dataset import rle_decode_words, rle_encode_words
+
+    cases = [
+        np.zeros((100, 3), np.uint32),                       # one giant run
+        rng.integers(0, 2 ** 32, (64, 4)).astype(np.uint32),  # incompressible
+        np.repeat(rng.integers(0, 2 ** 32, (7, 2)).astype(np.uint32),
+                  137, axis=0),                               # group-like runs
+        np.arange(12, dtype=np.uint32).reshape(6, 2),         # all runs len 1
+        np.empty((0, 5), np.uint32),                          # empty
+    ]
+    for arr in cases:
+        values, counts = rle_encode_words(arr)
+        out = rle_decode_words(values, counts, arr.shape)
+        assert out.dtype == np.uint32
+        np.testing.assert_array_equal(out, arr)
+    # counts land in the smallest sufficient dtype
+    values, counts = rle_encode_words(np.zeros((1000, 1), np.uint32))
+    assert counts.dtype == np.uint16
+    values, counts = rle_encode_words(np.zeros((70000, 1), np.uint32))
+    assert counts.dtype == np.uint32
+
+
+def test_rle_decode_rejects_torn_stream():
+    from repro.ann.dataset import rle_decode_words
+
+    with pytest.raises(ValueError, match="decodes to"):
+        rle_decode_words(np.array([1], np.uint32),
+                         np.array([3], np.int64), (2, 2))
+
+
+def test_segment_bitmaps_stored_rle_and_smaller(tmp_path, tiny_ds):
+    """Group-sorted bitmaps compress on disk; the manifest records the
+    encoding and the loaded array is bit-identical to the original."""
+    seg = str(tmp_path / "seg")
+    meta = tiny_ds.save_segment(seg)
+    info = meta["files"]["bitmaps"]
+    assert info["encoding"] == "rle-u32-colmajor"
+    assert info["file"].endswith(".rle.npz")
+    raw_bytes = int(np.prod(info["shape"])) * 4
+    assert info["bytes"] < raw_bytes
+    ds2 = ANNDataset.load_segment(seg, verify=True)
+    np.testing.assert_array_equal(ds2.bitmaps, tiny_ds.bitmaps)
+    assert ds2.bitmaps.dtype == np.uint32
+    # non-RLE fields still memmap
+    assert isinstance(ds2.vectors, np.memmap)
+    assert not isinstance(ds2.bitmaps, np.memmap)
+
+
+def test_segment_raw_fallback_for_incompressible_bitmaps(tmp_path, rng):
+    """Adversarial (unsorted, high-entropy) bitmaps fall back to raw
+    .npy — never worse than the v1 format."""
+    from repro.data.ann_synth import DatasetSpec, synthesize
+
+    ds = synthesize(DatasetSpec("rnd", 64, 8, 40, 6, 8,
+                                1.3, 2.0, 0.5, 0.3, 3))
+    # scramble: every row a unique random word pattern, no group runs
+    bm = rng.integers(1, 2 ** 32, ds.bitmaps.shape).astype(np.uint32)
+    ds = ds.__class__(**{**ds.__dict__, "bitmaps": bm})
+    seg = str(tmp_path / "seg")
+    meta = ds.save_segment(seg)
+    info = meta["files"]["bitmaps"]
+    assert info["encoding"] == "raw"
+    assert info["file"].endswith(".npy")
+    ds2 = ANNDataset.load_segment(seg)
+    np.testing.assert_array_equal(ds2.bitmaps, bm)
+
+
+def test_v1_raw_manifest_still_loads(tmp_path, tiny_ds):
+    """A v1-era segment (all raw, no "encoding" keys) loads unchanged."""
+    import json as _json
+
+    seg = str(tmp_path / "seg")
+    tiny_ds.save_segment(seg)
+    meta_path = os.path.join(seg, "segment.json")
+    with open(meta_path) as f:
+        meta = _json.load(f)
+    info = meta["files"]["bitmaps"]
+    if info["encoding"] != "raw":          # rewrite the field as raw v1
+        fpath = os.path.join(seg, info["file"])
+        arr = np.ascontiguousarray(tiny_ds.bitmaps)
+        np.save(os.path.join(seg, "bitmaps.npy"), arr)
+        os.remove(fpath)
+        from repro.ann.dataset import sha1_file
+        npy = os.path.join(seg, "bitmaps.npy")
+        meta["files"]["bitmaps"] = {
+            "file": "bitmaps.npy", "sha1": sha1_file(npy),
+            "bytes": os.path.getsize(npy), "shape": list(arr.shape),
+            "dtype": str(arr.dtype)}        # note: no "encoding" key
+    meta["version"] = 1
+    with open(meta_path, "w") as f:
+        _json.dump(meta, f)
+    ds2 = ANNDataset.load_segment(seg, verify=True)
+    np.testing.assert_array_equal(ds2.bitmaps, tiny_ds.bitmaps)
+
+
+def test_segment_unknown_encoding_refused(tmp_path, tiny_ds):
+    import json as _json
+
+    seg = str(tmp_path / "seg")
+    tiny_ds.save_segment(seg)
+    meta_path = os.path.join(seg, "segment.json")
+    with open(meta_path) as f:
+        meta = _json.load(f)
+    meta["files"]["bitmaps"]["encoding"] = "zstd-v9"
+    with open(meta_path, "w") as f:
+        _json.dump(meta, f)
+    with pytest.raises(ValueError, match="unknown encoding"):
+        ANNDataset.load_segment(seg)

@@ -1,0 +1,513 @@
+"""PR-7 serving telemetry + online adaptation: sink ring/counters/
+reservoir semantics, exact-recall audits on pinned snapshots, EWMA
+online table (versioning, drift, cache), and the end-to-end adaptation
+loop — injected recall regression -> audits fold -> table-driven
+re-route -> retrain -> shadow-eval promote/rollback through the
+versioned-artifact store machinery."""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.live import LiveFilteredIndex
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.store import IndexStore
+from repro.ann.telemetry import (DegradedMethod, OnlineBenchmarkTable,
+                                 OnlineRouterAdapter, RecallAuditor,
+                                 TelemetrySink, _audit_recall,
+                                 constant_router)
+from repro.core import features as F
+from repro.core.router import MLRouter, artifact_versions
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import make_queries
+
+
+def _batch(tiny_ds, pred=Predicate.AND, q=32, k=10, seed=3):
+    qs = make_queries(tiny_ds, pred, q, seed=seed)
+    return QueryBatch(qs.vectors, qs.bitmaps, pred, k)
+
+
+def _two_method_table(ds_name, *, degraded="ivf_gamma", alt="postfilter",
+                      degraded_qps=5000.0, alt_qps=500.0):
+    """Both methods pass t=0.9 offline; the degraded one has the best
+    QPS, so Algorithm 2 routes everything to it until audits say
+    otherwise."""
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for s in cand[degraded].param_settings():
+            table.add(ds_name, pt, degraded, s.ps_id, 0.97, degraded_qps)
+        for s in cand[alt].param_settings():
+            table.add(ds_name, pt, alt, s.ps_id, 0.95, alt_qps)
+    return table
+
+
+# ------------------------------------------------------------------ sink
+
+
+def test_sink_records_counters_cells_and_percentiles():
+    sink = TelemetrySink(capacity=64, reservoir=0)
+    bm = np.zeros((4, 2), np.uint32)
+    vec = np.zeros((4, 8), np.float32)
+    batch = QueryBatch(vec, bm, Predicate.OR, 5)
+    sink.record_batch(batch, ("m1", "ps0"), search_s=4e-3)
+    sink.record_batch(batch, ("m2", "ps1"), search_s=8e-3)
+    s = sink.stats()
+    assert s["queries"] == 8 and s["batches"] == 2
+    assert s["ring_events"] == 8
+    assert s["by_method"] == {"m1": 4, "m2": 4}
+    # per-query share: 4ms/4 = 1000us and 8ms/4 = 2000us
+    assert s["cells"]["m1/ps0/OR"] == {"queries": 4, "mean_us": 1000.0}
+    assert s["cells"]["m2/ps1/OR"] == {"queries": 4, "mean_us": 2000.0}
+    assert s["latency_us"]["p50"] == pytest.approx(1500.0)
+    sink.note("queue_wait_s", 0.5)
+    sink.note("queue_wait_s", 0.25)
+    assert sink.stats()["counters"]["queue_wait_s"] == 0.75
+
+
+def test_sink_ring_wraps_but_totals_are_monotone():
+    sink = TelemetrySink(capacity=16, reservoir=0)
+    bm = np.zeros((8, 1), np.uint32)
+    batch = QueryBatch(np.zeros((8, 4), np.float32), bm, Predicate.AND, 3)
+    for _ in range(10):
+        sink.record_batch(batch, ("m", "p"), search_s=1e-3)
+    s = sink.stats()
+    assert s["ring_events"] == 16          # ring holds only the tail
+    assert s["queries"] == 80              # totals keep counting
+    assert sink.seen_events() == 80
+
+
+def test_sink_per_query_decisions():
+    sink = TelemetrySink(capacity=32, reservoir=0)
+    bm = np.zeros((3, 1), np.uint32)
+    batch = QueryBatch(np.zeros((3, 4), np.float32), bm, Predicate.AND, 3)
+    decs = [("a", "p0"), ("b", "p1"), ("a", "p0")]
+    sink.record_batch(batch, decs, search_s=3e-3)
+    assert sink.stats()["by_method"] == {"a": 2, "b": 1}
+    assert sink.stats()["batches"] == 1
+
+
+def test_sink_reservoir_caps_drains_and_copies():
+    sink = TelemetrySink(capacity=8, reservoir=10, seed=1)
+    vec = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    bm = np.ones((32, 1), np.uint32)
+    keys = np.arange(32 * 3, dtype=np.int64).reshape(32, 3)
+    batch = QueryBatch(vec, bm, Predicate.AND, 3)
+    for _ in range(4):
+        sink.record_batch(batch, ("m", "p"), search_s=1e-3, keys=keys)
+    st = sink.stats()["reservoir"]
+    assert st["size"] == 10 and st["seen"] == 128
+    samples = sink.take_samples()
+    assert len(samples) == 10
+    for s in samples:
+        assert s.vector.shape == (4,) and s.served_keys.shape == (3,)
+        assert s.method == "m" and s.k == 3
+        # copies, not views into the caller's batch
+        assert not np.shares_memory(s.vector, vec)
+    assert sink.take_samples() == []       # drained and reset
+    assert sink.stats()["reservoir"]["seen"] == 0
+
+
+def test_drain_cells_resets_fresh_but_stats_stay_cumulative():
+    sink = TelemetrySink(capacity=8, reservoir=0)
+    bm = np.zeros((4, 1), np.uint32)
+    batch = QueryBatch(np.zeros((4, 4), np.float32), bm, Predicate.OR, 3)
+    sink.record_batch(batch, ("m", "p"), search_s=4e-3)
+    cells = sink.drain_cells()
+    assert cells == {("m", "p", int(Predicate.OR)): (4, 1000.0)}
+    assert sink.drain_cells() == {}            # drained
+    assert sink.stats()["cells"]["m/p/OR"]["queries"] == 4   # cumulative
+    sink.record_batch(batch, ("m", "p"), search_s=8e-3)
+    assert sink.drain_cells()[("m", "p", int(Predicate.OR))] == (4, 2000.0)
+
+
+def test_sink_concurrent_writers_keep_exact_totals():
+    sink = TelemetrySink(capacity=256, reservoir=32, seed=0)
+    bm = np.zeros((4, 1), np.uint32)
+    batch = QueryBatch(np.zeros((4, 4), np.float32), bm, Predicate.AND, 3)
+
+    def writer():
+        for _ in range(50):
+            sink.record_batch(batch, ("m", "p"), search_s=1e-3)
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    s = sink.stats()
+    assert s["queries"] == 800 and s["batches"] == 200
+    assert s["cells"]["m/p/AND"]["queries"] == 800
+
+
+def test_sink_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        TelemetrySink(capacity=0)
+    with pytest.raises(ValueError):
+        TelemetrySink(reservoir=-1)
+
+
+# --------------------------------------------------------------- auditor
+
+
+def test_audit_recall_helper():
+    assert _audit_recall(np.array([1, 2, 3]), np.array([1, 2, 3]), 3) == 1.0
+    assert _audit_recall(np.array([1, -1, -1]), np.array([1, 2, 3]), 3) \
+        == pytest.approx(1 / 3)
+    # vacuous predicate (no matching rows) counts as perfect
+    assert _audit_recall(np.array([-1]), np.array([-1, -1]), 5) == 1.0
+    # fewer exact matches than k: denominator is |exact|
+    assert _audit_recall(np.array([7, 8, -1]), np.array([7, -1, -1]), 3) \
+        == 1.0
+
+
+def test_auditor_exact_recall_against_oracle(tiny_ds, tiny_index):
+    """Served keys taken from the oracle itself audit at exactly 1.0;
+    truncating them to 3 of k=10 audits at exactly 0.3 (selective
+    predicates with < k matches stay 1.0 by the min(k, |exact|) rule)."""
+    batch = _batch(tiny_ds, Predicate.AND, q=16)
+    exact = tiny_index.search(batch, "prefilter")
+    served = exact.keys if exact.keys is not None else exact.ids
+    sink = TelemetrySink(capacity=64, reservoir=64)
+    sink.record_batch(batch, ("prefilter", "full"), search_s=1e-3,
+                      keys=served)
+    auditor = RecallAuditor(tiny_index, sink)
+    rep = auditor.run_once()
+    assert rep["samples"] == 16
+    assert all(r == 1.0 for _s, r, _e in rep["results"])
+
+    truncated = np.array(served, copy=True)
+    truncated[:, 3:] = -1
+    sink.record_batch(batch, ("prefilter", "full"), search_s=1e-3,
+                      keys=truncated)
+    rep = auditor.run_once()
+    n_exact = (np.asarray(served) >= 0).sum(axis=1)
+    for (s, r, _e), ne in zip(rep["results"], n_exact):
+        assert r == pytest.approx(min(3, ne) / min(batch.k, ne))
+    assert auditor.runs == 2 and auditor.audits == 32
+
+
+def test_auditor_folds_cells_into_table(tiny_ds, tiny_index):
+    table = OnlineBenchmarkTable(
+        _two_method_table(tiny_ds.name), alpha=0.5)
+    batch = _batch(tiny_ds, Predicate.AND, q=8)
+    exact = tiny_index.search(batch, "prefilter")
+    served = np.array(exact.keys if exact.keys is not None else exact.ids,
+                      copy=True)
+    served[:, 2:] = -1            # serve 2 of k=10 -> low audited recall
+    sink = TelemetrySink(capacity=64, reservoir=64)
+    ps = candidate_methods()["ivf_gamma"].param_settings()[-1].ps_id
+    sink.record_batch(batch, ("ivf_gamma", ps), search_s=1e-3, keys=served)
+    v0 = table.version
+    RecallAuditor(tiny_index, sink, table=table).run_once()
+    key = (tiny_ds.name, int(Predicate.AND), "ivf_gamma", ps)
+    assert table.version > v0
+    audited = table.audited_cells()[key]
+    exact_keys = exact.keys if exact.keys is not None else exact.ids
+    want = np.mean([_audit_recall(served[j], exact_keys[j], batch.k)
+                    for j in range(batch.q)])
+    assert audited["n"] == 8
+    assert audited["recall"] == pytest.approx(want)
+    # EWMA(alpha=.5) pulled the published cell halfway toward measured
+    assert table.entries[key]["recall"] == \
+        pytest.approx(0.5 * 0.97 + 0.5 * want)
+
+
+def test_audit_keys_stable_across_compaction(tiny_ds):
+    """Serve exact results on a live index, then compact (rows remap)
+    before auditing: stable external keys keep every audit at 1.0."""
+    with LiveFilteredIndex(tiny_ds) as live:
+        rng = np.random.default_rng(2)
+        pick = rng.integers(0, tiny_ds.n, 200)
+        live.upsert(tiny_ds.vectors[pick] + np.float32(0.01),
+                    tiny_ds.bitmaps[pick])
+        batch = _batch(tiny_ds, Predicate.AND, q=12)
+        res = live.search(batch, "prefilter")
+        sink = TelemetrySink(capacity=64, reservoir=64)
+        sink.record_batch(batch, ("prefilter", "full"), search_s=1e-3,
+                          keys=res.keys, generation=0)
+        live.compact()                      # remaps delta rows into base
+        rep = RecallAuditor(live, sink).run_once()
+        assert rep["samples"] == 12
+        assert all(r == 1.0 for _s, r, _e in rep["results"])
+
+
+def test_audit_runs_during_concurrent_compaction(tiny_ds):
+    """The auditor pins a snapshot per pass, so compactions racing the
+    audit never corrupt the replay (recalls stay exact)."""
+    with LiveFilteredIndex(tiny_ds) as live:
+        rng = np.random.default_rng(3)
+        batch = _batch(tiny_ds, Predicate.OR, q=8)
+        sink = TelemetrySink(capacity=256, reservoir=128)
+        auditor = RecallAuditor(live, sink)
+        stop = threading.Event()
+
+        def churn():
+            while not stop.is_set():
+                pick = rng.integers(0, tiny_ds.n, 64)
+                live.upsert(tiny_ds.vectors[pick],
+                            tiny_ds.bitmaps[pick])
+                live.compact()
+
+        t = threading.Thread(target=churn)
+        t.start()
+        try:
+            for _ in range(5):
+                res = live.search(batch, "prefilter")
+                sink.record_batch(batch, ("prefilter", "full"),
+                                  search_s=1e-3, keys=res.keys)
+                rep = auditor.run_once()
+                for _s, r, _e in rep["results"]:
+                    assert 0.0 <= r <= 1.0
+        finally:
+            stop.set()
+            t.join()
+        assert auditor.last_error is None
+
+
+# ---------------------------------------------------------- online table
+
+
+def test_online_table_ewma_and_version():
+    base = BenchmarkTable.new()
+    base.add("d", 0, "m", "p", 0.8, 1000.0)
+    ot = OnlineBenchmarkTable(base, alpha=0.5)
+    key = ("d", 0, "m", "p")
+    v0 = ot.version
+    ot.observe("d", 0, "m", "p", recall=1.0)
+    assert ot.entries[key]["recall"] == pytest.approx(0.9)
+    assert ot.entries[key]["qps"] == 1000.0        # untouched field
+    ot.observe("d", 0, "m", "p", qps=2000.0)
+    assert ot.entries[key]["qps"] == pytest.approx(1500.0)
+    assert ot.version == v0 + 2
+    # base table is isolated from online updates
+    assert base.entries[key]["recall"] == 0.8
+    # unknown cell is seeded directly with the measurement
+    ot.observe("d", 1, "m", "p", recall=0.7, qps=10.0)
+    assert ot.entries[("d", 1, "m", "p")] == {"recall": 0.7, "qps": 10.0}
+    with pytest.raises(ValueError):
+        OnlineBenchmarkTable(base, alpha=0.0)
+
+
+def test_online_table_drift_tracks_audits_not_qps():
+    base = BenchmarkTable.new()
+    base.add("d", 0, "m", "p", 0.9, 1000.0)
+    ot = OnlineBenchmarkTable(base, alpha=1.0)
+    ot.observe("d", 0, "m", "p", qps=50.0)     # QPS-only: no drift
+    assert ot.max_drift() == 0.0
+    ot.observe("d", 0, "m", "p", recall=0.4)
+    assert ot.max_drift() == pytest.approx(0.5)
+    d = ot.drift()
+    assert d[("d", 0, "m", "p")] == pytest.approx(0.5)
+
+
+def test_online_table_routing_arrays_cache_invalidation():
+    base = _two_method_table("d")
+    ot = OnlineBenchmarkTable(base, alpha=1.0)
+    a1 = ot.routing_arrays("d", 0, ["ivf_gamma", "postfilter"], 0.9)
+    a2 = ot.routing_arrays("d", 0, ["ivf_gamma", "postfilter"], 0.9)
+    assert a1 is a2                     # version-stable reads hit cache
+    ps = candidate_methods()["ivf_gamma"].param_settings()[0].ps_id
+    ot.observe("d", 0, "ivf_gamma", ps, recall=0.1)
+    a3 = ot.routing_arrays("d", 0, ["ivf_gamma", "postfilter"], 0.9)
+    assert a3 is not a1                 # observe invalidates
+
+
+def test_online_table_snapshot_is_frozen_plain_table():
+    ot = OnlineBenchmarkTable(_two_method_table("d"))
+    snap = ot.snapshot()
+    assert type(snap) is BenchmarkTable
+    ps = candidate_methods()["postfilter"].param_settings()[0].ps_id
+    ot.observe("d", 0, "postfilter", ps, recall=0.1)
+    assert snap.entries[("d", 0, "postfilter", ps)]["recall"] == 0.95
+
+
+# -------------------------------------------------- constant router helper
+
+
+def test_constant_router_predicts_exactly_value(tiny_ds):
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table,
+                             value=0.93)
+    qs = make_queries(tiny_ds, Predicate.AND, 6, seed=1)
+    r_hat = router.predict_recalls(tiny_ds, qs.bitmaps, Predicate.AND)
+    assert r_hat.shape == (6, 2)
+    assert np.allclose(r_hat, 0.93, atol=1e-6)
+
+
+# ------------------------------------------------------- e2e adaptation
+
+
+def test_adaptation_reroutes_off_degraded_method(tiny_ds):
+    """The paper's router never re-reads reality; here the audited EWMA
+    drops the degraded method's cells below t and Algorithm 2 re-routes
+    to the alternative — no retrain involved (threshold set above any
+    possible drift)."""
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table)
+    serving = dict(candidate_methods())
+    serving["ivf_gamma"] = DegradedMethod(serving["ivf_gamma"], keep=2)
+    with FilteredIndex(tiny_ds) as fx:
+        sink = TelemetrySink(capacity=512, reservoir=64, seed=5)
+        svc = RouterService(fx, router, t=0.9, methods=serving,
+                            telemetry=sink)
+        adapter = OnlineRouterAdapter(svc, sink, alpha=0.5,
+                                      drift_threshold=2.0, seed=0)
+        assert svc.router.table is adapter.table
+        batch = _batch(tiny_ds, Predicate.AND, q=32)
+        before = [d.method for d in svc.route(batch)]
+        assert set(before) == {"ivf_gamma"}     # best QPS, passes t
+        rerouted = False
+        for _ in range(6):
+            svc.search(batch)
+            rep = adapter.step()
+            assert rep["retrained"] is False
+            after = [d.method for d in svc.route(batch)]
+            if "ivf_gamma" not in after:
+                rerouted = True
+                break
+        assert rerouted, adapter.history
+        assert set(after) == {"postfilter"}
+        assert adapter.table.max_drift() > 0.3
+        # measured QPS folded from the sink's latency aggregates
+        audited = adapter.table.audited_cells()
+        assert any(k[2] == "ivf_gamma" for k in audited)
+
+
+def test_adaptation_promote_then_rollback(tiny_ds, tmp_path):
+    """Retrain fires on drift; a better candidate promotes (artifact
+    saved, store-linked, reference swapped), a worse one rolls back."""
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table)
+    serving = dict(candidate_methods())
+    serving["ivf_gamma"] = DegradedMethod(serving["ivf_gamma"], keep=2)
+
+    store = IndexStore.create(str(tmp_path / "store"),
+                              LiveFilteredIndex(tiny_ds))
+    try:
+        sink = TelemetrySink(capacity=512, reservoir=96, seed=2)
+        svc = RouterService(store.index, router, t=0.9, methods=serving,
+                            telemetry=sink)
+
+        # candidate A routes everything to the healthy alternative (its
+        # own table fails ivf_gamma), candidate B back to the degraded
+        # method — deterministic stand-ins for a real retrain
+        good_table = _two_method_table(tiny_ds.name, degraded_qps=1.0)
+        cand_good = constant_router(F.MINIMAL_FEATURES,
+                                    ["ivf_gamma", "postfilter"],
+                                    good_table)
+        cand_bad = constant_router(F.MINIMAL_FEATURES,
+                                   ["ivf_gamma", "postfilter"], table)
+        plan = [cand_good, cand_bad]
+        adapter = OnlineRouterAdapter(
+            svc, sink, store=store, alpha=0.5, drift_threshold=0.05,
+            min_samples=8, seed=4,
+            retrain_fn=lambda ad: plan.pop(0))
+        batch = _batch(tiny_ds, Predicate.AND, q=32)
+
+        promoted = None
+        for _ in range(8):
+            svc.search(batch)
+            rep = adapter.step()
+            if rep.get("promoted"):
+                promoted = rep
+                break
+        assert promoted is not None, adapter.history
+        sh = promoted["shadow"]
+        assert sh["candidate_recall"] > sh["incumbent_recall"]
+        assert svc.router is cand_good
+        assert svc.router.table is adapter.table   # live table re-attached
+        assert adapter.promotions == 1
+
+        # versioned artifact exists, validates, links, and round-trips
+        path = promoted["artifact"]
+        assert os.path.isdir(path)
+        assert promoted["versions"] == artifact_versions(path)
+        assert store.manifest["router"]["content_sha1"] == \
+            promoted["versions"]["content_sha1"]
+        loaded = MLRouter.load(path)
+        assert loaded.methods == ["ivf_gamma", "postfilter"]
+        assert store.load_router().methods == loaded.methods
+
+        # cand_bad routes back to the degraded method -> shadow eval
+        # rejects it and the old artifact keeps serving
+        rolled = None
+        for _ in range(8):
+            svc.search(batch)
+            rep = adapter.step()
+            if rep.get("retrained"):
+                rolled = rep
+                break
+        assert rolled is not None, adapter.history
+        assert rolled["promoted"] is False
+        assert rolled["action"] == "rollback"
+        assert svc.router is cand_good            # unchanged
+        assert adapter.promotions == 1
+    finally:
+        store.close()
+
+
+def test_default_retrain_learns_from_audit_labels(tiny_ds):
+    """The real retrain path: audit-derived per-method recall labels ->
+    train_models_from_xy -> shadow eval. The incumbent routes everything
+    to a degraded method, so the audit-trained candidate should beat it
+    and promote."""
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table)
+    serving = dict(candidate_methods())
+    serving["ivf_gamma"] = DegradedMethod(serving["ivf_gamma"], keep=1)
+    with FilteredIndex(tiny_ds) as fx:
+        sink = TelemetrySink(capacity=512, reservoir=96, seed=6)
+        svc = RouterService(fx, router, t=0.9, methods=serving,
+                            telemetry=sink)
+        adapter = OnlineRouterAdapter(svc, sink, alpha=0.5,
+                                      drift_threshold=0.05,
+                                      min_samples=8, retrain_epochs=30,
+                                      retrain_hidden=(16,), seed=7)
+        batch = _batch(tiny_ds, Predicate.AND, q=32)
+        report = None
+        for _ in range(8):
+            svc.search(batch)
+            rep = adapter.step()
+            if rep.get("retrained"):
+                report = rep
+                break
+        assert report is not None, adapter.history
+        assert "shadow" in report
+        if report["promoted"]:
+            assert svc.router is not router
+            assert report["shadow"]["candidate_recall"] > \
+                report["shadow"]["incumbent_recall"]
+        else:                       # rollback keeps the incumbent
+            assert svc.router is router
+
+
+def test_adapter_background_loop_and_stop(tiny_ds):
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table)
+    with FilteredIndex(tiny_ds) as fx:
+        sink = TelemetrySink(capacity=256, reservoir=32, seed=8)
+        svc = RouterService(fx, router, t=0.9, telemetry=sink)
+        adapter = OnlineRouterAdapter(svc, sink, drift_threshold=2.0)
+        batch = _batch(tiny_ds, Predicate.OR, q=16)
+        adapter.start(interval_s=0.05)
+        try:
+            deadline = 50
+            while not adapter.history and deadline:
+                svc.search(batch)
+                deadline -= 1
+        finally:
+            adapter.stop()
+        assert adapter.last_error is None
+        assert adapter.history                  # loop audited something
+        assert adapter._thread is None          # stopped cleanly
