@@ -1,0 +1,148 @@
+"""Semantic result cache: hit-rate + served-latency under Zipfian replay.
+
+``run`` fronts a routed `RouterService` with `SemanticResultCache` and
+replays a Zipf-distributed request stream over a fixed query pool — the
+repetitive-traffic shape the cache exists for. Recorded per size:
+
+* ``hit_rate`` — exact+semantic hits / requests over the whole replay;
+* ``served_p50_us`` / ``served_p90_us`` — per-request latency of the
+  cache-fronted service across the replay (hits and misses mixed, the
+  number a caller actually sees);
+* ``hit_us`` — exact-key hit-path latency (probe + freshness check,
+  no routing, no search), best-of-rounds;
+* ``routed_us`` — the same single query through the full routed search,
+  best-of-rounds;
+* ``speedup`` — routed_us / hit_us, gated **absolutely** by ``--check``
+  (CACHE_SPEEDUP_MIN): the exact-key hit path must stay ≥5× cheaper
+  than a routed search, or the cache isn't paying for its admission
+  bookkeeping.
+
+Rounds interleave hit/routed measurements so a noisy neighbour can't
+bias the ratio.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ann.cache import SemanticResultCache
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.telemetry import TelemetrySink, constant_router
+from repro.core import features as F
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import DatasetSpec, make_queries, synthesize
+
+from benchmarks.common import emit, timeit_us
+
+_SPEC = DatasetSpec("bench_cache", 8192, 32, 60, 8, 16,
+                    1.3, 2.0, 0.5, 0.3, 17)
+_SMOKE_SPEC = DatasetSpec("bench_cache_smoke", 2048, 32, 60, 8, 16,
+                          1.3, 2.0, 0.5, 0.3, 17)
+_ROUNDS = 5
+_ZIPF_S = 1.1
+
+
+def _dense_table(ds_name: str, methods: list, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for m in methods:
+        for s in cand[m].param_settings():
+            for pt in range(3):
+                table.add(ds_name, pt, m, s.ps_id,
+                          rng.uniform(0.91, 1.0), rng.uniform(100, 2000))
+    return table
+
+
+def _zipf_stream(pool: int, requests: int, seed: int) -> np.ndarray:
+    """Zipf(s)-distributed pool indices — rank r served ∝ 1/r^s."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, pool + 1, dtype=np.float64) ** _ZIPF_S
+    return rng.choice(pool, size=requests, p=p / p.sum())
+
+
+def run(verbose=True, smoke: bool = False, requests: int | None = None):
+    spec, requests = ((_SMOKE_SPEC, requests or 512) if smoke
+                      else (_SPEC, requests or 2048))
+    pool_n = 128 if smoke else 256
+    ds = synthesize(spec)
+    methods = ["labelnav", "postfilter", "sieve", "ivf_gamma", "fvamana"]
+    table = _dense_table(ds.name, methods)
+    router = constant_router(F.MINIMAL_FEATURES, methods, table)
+    qs = make_queries(ds, Predicate.AND, pool_n, seed=5)
+    stream = _zipf_stream(pool_n, requests, seed=9)
+    rows = []
+    with FilteredIndex(ds) as fx:
+        sink = TelemetrySink(capacity=4096, reservoir=64, seed=7)
+        svc = RouterService(fx, router, t=0.9, telemetry=sink)
+        cache = SemanticResultCache(svc, threshold=0.98,
+                                    capacity=pool_n * 2)
+        one = QueryBatch(qs.vectors[:1], qs.bitmaps[:1],
+                         Predicate.AND, 10)
+        svc.search(one)                         # warm-up + compile
+        cache.search(one)                       # seed the hit path
+
+        # Zipfian replay: per-request latency through the fronted
+        # service. A quarter of the requests are near-duplicates (tiny
+        # vector jitter) rather than byte-identical repeats — they miss
+        # the exact key and exercise the cosine/semantic path.
+        jrng = np.random.default_rng(33)
+        scale = 1e-3 * float(np.median(
+            np.linalg.norm(qs.vectors, axis=1))) / np.sqrt(ds.dim)
+        jitter = (scale * jrng.normal(0, 1, (requests, ds.dim))
+                  ).astype(np.float32)
+        near = jrng.random(requests) < 0.25
+        lat_us = np.empty(requests, dtype=np.float64)
+        import time as _time
+        for i, qi in enumerate(stream):
+            vec = qs.vectors[qi:qi + 1]
+            if near[i]:
+                vec = vec + jitter[i:i + 1]
+            b = QueryBatch(vec, qs.bitmaps[qi:qi + 1],
+                           Predicate.AND, 10)
+            t0 = _time.perf_counter()
+            cache.search(b)
+            lat_us[i] = (_time.perf_counter() - t0) * 1e6
+        st = cache.stats()
+        hit_rate = ((st["hits_exact"] + st["hits_semantic"])
+                    / max(1, requests))
+
+        # interleaved best-of-rounds: exact-key hit vs full routed search
+        best_hit = best_routed = np.inf
+        for _ in range(_ROUNDS):
+            best_hit = min(best_hit,
+                           timeit_us(lambda: cache.search(one), repeat=9))
+            best_routed = min(best_routed,
+                              timeit_us(lambda: svc.search(one), repeat=9))
+        cache.close()
+    speedup = best_routed / best_hit
+    rows.append({
+        "n": ds.n, "q": requests, "pool": pool_n,
+        "hit_rate": round(float(hit_rate), 4),
+        "served_p50_us": round(float(np.percentile(lat_us, 50)), 1),
+        "served_p90_us": round(float(np.percentile(lat_us, 90)), 1),
+        "hit_us": round(best_hit, 1),
+        "routed_us": round(best_routed, 1),
+        "speedup": round(speedup, 2),
+        "hits_exact": st["hits_exact"],
+        "hits_semantic": st["hits_semantic"],
+        "evictions": (st["evictions_ttl"] + st["evictions_stale"]
+                      + st["evictions_capacity"]),
+    })
+    if verbose:
+        r = rows[-1]
+        print(f"  n={r['n']} requests={requests} pool={pool_n}: "
+              f"hit_rate {r['hit_rate']:.2f} "
+              f"(exact {r['hits_exact']}, semantic {r['hits_semantic']}), "
+              f"served p50 {r['served_p50_us']:.0f} us, "
+              f"hit {best_hit:.0f} us vs routed {best_routed:.0f} us "
+              f"= {speedup:.1f}x", flush=True)
+    path = emit(rows, "cache")
+    return rows, path
+
+
+if __name__ == "__main__":
+    run()

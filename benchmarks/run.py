@@ -35,6 +35,9 @@ CHECK_TOLERANCE = 1.25
 LIVE_SEALED_MAX = 1.5
 COMPACT_SCALING_MAX = 0.9
 TELEMETRY_OVERHEAD_MAX = 5.0
+# exact-key cache hit must beat the full routed search by at least this
+# factor in smoke, or the hit path isn't paying for its bookkeeping
+CACHE_SPEEDUP_MIN = 5.0
 
 
 def _repo_root() -> str:
@@ -87,7 +90,8 @@ def _keep_best(old: dict, new: dict) -> dict:
             ("live_compaction", ("n_base",), "compact_ms"),
             ("store", ("n", "rows"), "cold_open_ms"),
             ("telemetry", ("n", "q"), "routed_p50_us_on"),
-            ("telemetry_adapt", ("n",), "time_to_reroute_ms")]:
+            ("telemetry_adapt", ("n",), "time_to_reroute_ms"),
+            ("cache", ("n", "q"), "hit_us")]:
         old_rows = {tuple(r[c] for c in key_cols): r
                     for r in old.get(section, [])}
         out = []
@@ -123,7 +127,7 @@ def _keep_best(old: dict, new: dict) -> dict:
 
 
 def run_smoke() -> None:
-    from benchmarks import (bench_kernels, bench_live,
+    from benchmarks import (bench_cache, bench_kernels, bench_live,
                             bench_routing_latency, bench_sharded,
                             bench_store, bench_telemetry)
 
@@ -148,6 +152,9 @@ def run_smoke() -> None:
     print("# == smoke: online adaptation (injected drift -> re-route) ==",
           flush=True)
     rows_a, _ = bench_telemetry.run_adaptation(verbose=True, smoke=True)
+    print("# == smoke: semantic cache (Zipfian replay, hit vs routed) ==",
+          flush=True)
+    rows_h, _ = bench_cache.run(verbose=True, smoke=True)
     record = {
         "sha": _git_sha(),
         "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -159,6 +166,7 @@ def run_smoke() -> None:
         "store": rows_t,
         "telemetry": rows_m,
         "telemetry_adapt": rows_a,
+        "cache": rows_h,
         "routing_speedup_median": float(
             sorted(r["speedup"] for r in rows_l)[len(rows_l) // 2]),
     }
@@ -206,6 +214,7 @@ def run_check() -> None:
          ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
         ("telemetry", ("n", "q"),
          ("routed_p50_us_off", "routed_p50_us_on")),
+        ("cache", ("n", "q"), ("hit_us", "served_p50_us")),
     ]
     failures: list[str] = []
     for section, key_cols, metrics in comparisons:
@@ -267,6 +276,19 @@ def run_check() -> None:
         print(f"  telemetry{key} overhead_pct: {pct} "
               f"(gate <= {TELEMETRY_OVERHEAD_MAX}) "
               f"{'REGRESSION' if bad else 'ok'}", flush=True)
+    for row in last.get("cache", []):
+        s = row.get("speedup")
+        if s is None:
+            continue
+        key = [row.get("n"), row.get("q")]
+        bad = s < CACHE_SPEEDUP_MIN
+        if bad:
+            failures.append(
+                f"cache{key} speedup: {s} < {CACHE_SPEEDUP_MIN} "
+                f"(absolute gate: exact-key hit vs routed search)")
+        print(f"  cache{key} speedup: {s} "
+              f"(gate >= {CACHE_SPEEDUP_MIN}) "
+              f"{'REGRESSION' if bad else 'ok'}", flush=True)
     comp = [r for r in last.get("live_compaction", [])
             if "scaling_vs_linear" in r]
     for row in comp[1:]:            # first row is its own baseline (1.0)
@@ -293,7 +315,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,pareto,fig4,table5,table6,"
                          "table7,latency,kernels,sharded,live,store,"
-                         "telemetry,roofline")
+                         "telemetry,cache,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size kernels+latency run, appends a per-PR "
                          "record to BENCH_kernels.json at the repo root")
@@ -313,7 +335,7 @@ def main() -> None:
 
     from benchmarks import (bench_table1, bench_pareto,
                             bench_feature_ablation, bench_featureset_latency,
-                            bench_cls_vs_reg, bench_depth,
+                            bench_cache, bench_cls_vs_reg, bench_depth,
                             bench_routing_latency, bench_kernels,
                             bench_live, bench_roofline, bench_sharded,
                             bench_store, bench_telemetry)
@@ -340,6 +362,8 @@ def main() -> None:
                   bench_store.run),
         "telemetry": ("telemetry sink overhead on the routed hot path",
                       bench_telemetry.run),
+        "cache": ("semantic cache: Zipfian hit-rate + hit vs routed",
+                  bench_cache.run),
         "roofline": ("roofline terms from the dry-run artifacts",
                      bench_roofline.run),
     }

@@ -20,6 +20,14 @@ recover the index — including writes from previous sessions — plus the
 version-stamped router from disk. Composes with `--live` and
 `--shards N` (the store remembers the shard layout).
 
+`--cache` fronts the service with a `SemanticResultCache`: every
+`submit()` probes it before batching (exact-key hits bypass routing and
+search entirely; near-duplicate embeddings serve re-scored semantic
+hits), only misses flow through the routed pipeline, and the run
+replays the request round to report hit/miss/eviction counters. With
+`--live`, the concurrent writer's upserts/deletes evict exactly the
+entries whose label sets they touch.
+
 `--telemetry` attaches a `TelemetrySink` to the service: every routed
 batch records per-query events (method, ps, predicate, latency share,
 live generation) and the run prints counters + latency percentiles.
@@ -33,7 +41,7 @@ promoted artifact links into the store manifest atomically).
 
     PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
         [--shards 2] [--live] [--data-dir /tmp/rag-store] \
-        [--telemetry] [--online-router]
+        [--cache] [--telemetry] [--online-router]
 """
 
 import argparse
@@ -118,6 +126,12 @@ def main():
                          "corpus + router from it on startup (skipping "
                          "the offline stage), persist all writes to it, "
                          "checkpoint on shutdown")
+    ap.add_argument("--cache", action="store_true",
+                    help="front the service with a SemanticResultCache "
+                         "(exact-key + cosine-threshold hits bypass "
+                         "routing and search; label-clock invalidation "
+                         "under --live) and replay the round to show "
+                         "hit/miss/eviction counters")
     ap.add_argument("--telemetry", action="store_true",
                     help="attach a TelemetrySink: per-query events, "
                          "counters, latency percentiles, audit reservoir")
@@ -160,8 +174,13 @@ def main():
             svc = ShardedRouterService(sfx, router, t=0.9, telemetry=sink)
         else:
             svc = RouterService(fx, router, t=0.9, telemetry=sink)
+    serving = svc
+    if args.cache:
+        from repro.ann.cache import SemanticResultCache
+        serving = SemanticResultCache(svc, threshold=0.98, capacity=2048)
     print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
-          f"live={args.live}, durable={bool(args.data_dir)}); router "
+          f"live={args.live}, durable={bool(args.data_dir)}, "
+          f"cache={args.cache}); router "
           f"ready ({len(router.table.entries)} table entries)")
 
     # --- served LM (reduced config; embeddings from its hidden states) ---
@@ -220,11 +239,18 @@ def main():
     if args.live:
         wt = threading.Thread(target=writer, daemon=True)
         wt.start()
-    with AsyncBatchQueue(svc, max_batch=16, max_wait_ms=20.0) as queue:
+    replay_tags: list = []
+    with AsyncBatchQueue(serving, max_batch=16, max_wait_ms=20.0) as queue:
         futs = [queue.submit(emb[i], qbms[i], preds[i], k=5)
                 for i in range(b)]
         for i, f in enumerate(futs):
             retrieved[i] = f.result(timeout=300).ids
+        if args.cache:
+            # replay the round — repeat traffic is the cache's case;
+            # hits resolve at submit, before the queue ever batches
+            rfuts = [queue.submit(emb[i], qbms[i], preds[i], k=5)
+                     for i in range(b)]
+            replay_tags = [f.result(timeout=300).cache for f in rfuts]
         qstats = queue.stats()
     if wt is not None:
         stop_writer.set()
@@ -235,6 +261,15 @@ def main():
           f"(largest {qstats['max_batch_seen']}, depth "
           f"{qstats['max_queue_depth']}, "
           f"flushes {qstats['flush_reasons']})")
+    if args.cache:
+        cs = serving.stats()
+        print(f"cache: replay served "
+              f"{sum(t is not None for t in replay_tags)}/{b} from cache "
+              f"({qstats['cache_hits']} at submit; exact "
+              f"{cs['hits_exact']}, semantic {cs['hits_semantic']}, "
+              f"misses {cs['misses']}, hit_rate {cs['hit_rate']}, "
+              f"evictions ttl/stale/cap {cs['evictions_ttl']}/"
+              f"{cs['evictions_stale']}/{cs['evictions_capacity']})")
     if sink is not None:
         ts = sink.stats()
         print(f"telemetry: {ts['queries']} events, p50 "
@@ -266,7 +301,8 @@ def main():
         print(f"compacted -> generation {gen}: base_n={st['base_n']}, "
               f"delta_rows={st['delta_rows']}")
         # one more request round from the freshly swapped base
-        with AsyncBatchQueue(svc, max_batch=16, max_wait_ms=20.0) as queue:
+        with AsyncBatchQueue(serving, max_batch=16,
+                             max_wait_ms=20.0) as queue:
             futs = [queue.submit(emb[i], qbms[i], preds[i], k=5)
                     for i in range(min(b, 8))]
             for i, f in enumerate(futs):
@@ -289,6 +325,8 @@ def main():
     print("sample generations:", out[:2].tolist())
     hit = (retrieved >= 0).any(1).mean()
     print(f"retrieval hit rate: {hit:.2f}")
+    if args.cache:
+        serving.close()          # drop entries; the service stays open
     if store is not None:
         store.checkpoint()       # fold this session's WAL into a segment
         st = store.stats()

@@ -11,6 +11,7 @@ docs/persistence.md)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
+from repro.ann.cache import SemanticResultCache
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult)
 from repro.ann.live import LiveFilteredIndex, LiveSnapshot, ShardedLiveIndex
@@ -18,6 +19,6 @@ from repro.ann.sharded import ShardedFilteredIndex
 from repro.ann.store import IndexStore, WriteAheadLog
 
 __all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
-           "RoutingDecision", "SearchResult", "ShardedFilteredIndex",
-           "LiveFilteredIndex", "LiveSnapshot", "ShardedLiveIndex",
-           "IndexStore", "WriteAheadLog"]
+           "RoutingDecision", "SearchResult", "SemanticResultCache",
+           "ShardedFilteredIndex", "LiveFilteredIndex", "LiveSnapshot",
+           "ShardedLiveIndex", "IndexStore", "WriteAheadLog"]

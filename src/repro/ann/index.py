@@ -123,12 +123,18 @@ class SearchResult:
       `compact()` and a `repro.ann.store` save/reopen, so clients
       should hold on to these. For sealed indexes keys equal the row
       ids.
+    * `cache` — per-query serving provenance when a
+      `repro.ann.cache.SemanticResultCache` fronted the request: a
+      [Q] list of ``"exact"`` / ``"semantic"`` / ``None`` (None for a
+      query that missed and was searched). None (default) means no
+      cache was involved.
     """
     ids: np.ndarray
     distances: np.ndarray
     decisions: list[RoutingDecision] | None = None
     timings: dict = dataclasses.field(default_factory=dict)
     keys: np.ndarray | None = None
+    cache: list | None = None
 
     @property
     def q(self) -> int:
@@ -309,6 +315,12 @@ class FilteredIndex:
         surface uniform across sealed and live handles."""
         ids = np.asarray(ids, dtype=np.int64)
         return np.where(ids >= 0, ids, np.int64(-1))
+
+    def label_clock(self, labels=None) -> int:
+        """Sealed data never changes — constant 0, mirroring the live
+        handles' per-label write clock so cache invalidation
+        (`repro.ann.cache`) reads one uniform surface."""
+        return 0
 
     def evict(self, method_name: str | None = None) -> int:
         """Drop built indexes (all of one method, or every method).

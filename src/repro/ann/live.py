@@ -492,6 +492,50 @@ class _StageTimings:
         return engine_mod.pop_stage_timings()
 
 
+class _LabelClockMixin:
+    """Monotone per-label write clock shared by `LiveFilteredIndex` and
+    `ShardedLiveIndex` — the invalidation signal the semantic result
+    cache (`repro.ann.cache`) keys on.
+
+    Every `upsert`/`delete` bumps a global write counter and stamps the
+    labels present in the written rows with it. A cached entry recorded
+    at clock `c` for query labels `L` is provably unaffected by later
+    writes iff `label_clock(L) <= c`: any row that can match an
+    EQUALITY/AND/OR predicate over a non-empty query label set carries
+    at least one of those labels, so writing it stamps them. Entries
+    with an *empty* query bitmap (AND matches every row) compare
+    against the global clock instead (`label_clock(None)`).
+
+    Concrete classes provide `_lock` and `_universe` and call
+    `_clock_init()` in `__init__` and `_clock_touch(counts)` under the
+    lock on every write. Compaction does not touch the clock: it remaps
+    ids but never changes the live row set."""
+
+    def _clock_init(self) -> None:
+        self._label_stamps = np.zeros(self._universe, dtype=np.int64)
+        self._write_clock = 0
+
+    def _clock_touch(self, counts: np.ndarray) -> None:
+        """Stamp the labels with nonzero `counts` ([U] per-label row
+        counts of the written rows); caller holds the lock."""
+        self._write_clock += 1
+        touched = np.nonzero(counts)[0]
+        if touched.size:
+            self._label_stamps[touched] = self._write_clock
+
+    def label_clock(self, labels=None) -> int:
+        """The latest write clock that touched any of `labels` (int
+        indices), or the global write clock when `labels` is None/empty.
+        Monotone; 0 means "never written"."""
+        with self._lock:
+            if labels is None:
+                return self._write_clock
+            labels = np.asarray(labels, dtype=np.int64)
+            if labels.size == 0:
+                return self._write_clock
+            return int(self._label_stamps[labels].max())
+
+
 class _StableKeyMixin:
     """Stable external-key plumbing shared by `LiveFilteredIndex` and
     `ShardedLiveIndex` (it had drifted into two near-identical copies).
@@ -641,7 +685,7 @@ class LiveSnapshot:
                 f"tombstones={int(self.tombstones.sum())})")
 
 
-class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
+class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
     """Mutable serving handle: sealed base + delta segment + tombstones.
 
     Args:
@@ -708,6 +752,7 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
         self._tomb = np.zeros(self._base_n, bool)
         self._tomb_version = 0
         self._live_label_counts = base_counts
+        self._clock_init()
         self._generation = int(generation)
         if base_keys is None:
             self._keys = np.arange(self._base_n, dtype=np.int64)
@@ -875,6 +920,7 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
             self._keys = np.concatenate([self._keys, ks])
             self._note_new_keys(ks, self._base_n + start)
             self._live_label_counts = self._live_label_counts + counts
+            self._clock_touch(counts)
             out = np.arange(self._base_n + start, self._base_n + stop,
                             dtype=np.int64)
         if wal is not None:
@@ -906,9 +952,10 @@ class LiveFilteredIndex(_StableKeyMixin, _StageTimings):
             if fresh.size:
                 self._tomb[fresh] = True
                 self._tomb_version += 1
-                self._live_label_counts = (
-                    self._live_label_counts
-                    - _label_counts(self._bitmaps_of(fresh), self._universe))
+                dcounts = _label_counts(self._bitmaps_of(fresh),
+                                        self._universe)
+                self._live_label_counts = self._live_label_counts - dcounts
+                self._clock_touch(dcounts)
             out = int(fresh.size)
         if wal is not None:
             wal.commit(seq)                  # durable before acked, off-lock
@@ -1596,7 +1643,7 @@ class ShardedLiveSnapshot:
         self.release()
 
 
-class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
+class ShardedLiveIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
     """Row-sharded live handle: one `LiveFilteredIndex` per shard.
 
     Upserts round-robin row-by-row across shards; global delta ids are
@@ -1697,6 +1744,7 @@ class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
             thread_name_prefix=f"live-shard-{self._name}")
             if self._parallel else None)
         self._lock = threading.RLock()
+        self._clock_init()
         self._epoch = int(generation)
         self._epoch_readers: dict[int, int] = {}
         self._old_shards: dict[int, list] = {}
@@ -1854,6 +1902,7 @@ class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
                     self._shard_gids[s].append(gid0 + int(j))
             self._keys = np.concatenate([self._keys, ks])
             self._note_new_keys(ks, gid0)
+            self._clock_touch(_label_counts(bitmaps, self._universe))
             self._gid_arrays = None           # searches rebuild lazily
             self._next_shard = (self._next_shard + n) % nsh
             out = np.arange(gid0, gid0 + n, dtype=np.int64)
@@ -1895,6 +1944,13 @@ class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
             for gid in ids.tolist():
                 s, lid = self._shard_local(gid)
                 per.setdefault(s, []).append(lid)
+            # stamp before delegating: labels of every named id (a
+            # conservative superset — already-dead ids stamp too)
+            if ids.size:
+                bms = np.concatenate(
+                    [self.shards[s]._bitmaps_of(np.asarray(lids, np.int64))
+                     for s, lids in per.items()])
+                self._clock_touch(_label_counts(bms, self._universe))
             out = sum(self.shards[s].delete(lids)
                       for s, lids in per.items())
         if wal is not None:
@@ -2026,6 +2082,35 @@ class ShardedLiveIndex(_StableKeyMixin, _StageTimings):
         return SearchResult(
             ids=ids, distances=exact_distances(raw, ids, batch.vectors),
             decisions=None, timings=timings, keys=keys)
+
+    def fetch(self, ids, snapshot: ShardedLiveSnapshot | None = None
+              ) -> np.ndarray:
+        """[R, d] vectors for global result ids (−1 rows come back as
+        NaN) — the sharded mirror of `LiveFilteredIndex.fetch`. With a
+        snapshot, ids are interpreted in that epoch's global id space."""
+        snap = snapshot or self.snapshot()
+        try:
+            ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+            out = np.full((ids.size, self._dim), np.nan, np.float32)
+            base_n = int(snap.bounds[-1])
+            base = (ids >= 0) & (ids < base_n)
+            if base.any():
+                out[base] = snap.base_ds.vectors[ids[base]]
+            delta = ids >= base_n
+            if delta.any():
+                didx = np.nonzero(delta)[0]
+                loc = [snap.locs[int(ids[j]) - base_n] for j in didx]
+                loc_shard = np.array([l[0] for l in loc], np.int64)
+                loc_row = np.array([l[1] for l in loc], np.int64)
+                for s, ssnap in enumerate(snap.snaps):
+                    mine = loc_shard == s
+                    if mine.any():
+                        sv, _, _ = ssnap.delta.host_view(ssnap.delta_rows)
+                        out[didx[mine]] = sv[loc_row[mine]]
+            return out
+        finally:
+            if snapshot is None:
+                snap.release()
 
     # ---- routing-feature freshness ---------------------------------------
     def live_stats(self) -> LiveStats:

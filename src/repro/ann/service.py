@@ -309,11 +309,16 @@ class QueryResult(NamedTuple):
     * `keys` — [k] int64 stable external keys (−1 pad; None when the
       backend has no key layer). Hold these across compactions and
       restarts instead of `ids`.
+    * `cache` — how the query was served when the backend is a
+      `repro.ann.cache.SemanticResultCache`: ``"exact"`` (bit-identical
+      cached result), ``"semantic"`` (near-duplicate cached result,
+      re-scored), or None (full routed search).
     """
     ids: np.ndarray
     distances: np.ndarray
     decision: RoutingDecision | None
     keys: np.ndarray | None = None
+    cache: str | None = None
 
 
 @dataclasses.dataclass
@@ -386,6 +391,12 @@ class AsyncBatchQueue:
     `QueryResult`; a failed batch propagates its exception to exactly
     the futures in that batch.
 
+    When the backend is a `repro.ann.cache.SemanticResultCache` (it
+    exposes `probe_one`), every `submit()` probes the cache *before*
+    batching: a hit resolves the Future immediately — no queueing, no
+    routing, no search — and only the misses flow through the pipeline,
+    whose execute stage admits their results back into the cache.
+
     Args:
         service: the batched backend — a `RouterService` /
             `ShardedRouterService` (routed), or, with `method=`, any
@@ -427,8 +438,9 @@ class AsyncBatchQueue:
         self._inflight: list[Future] = []
         self._flush_req = False
         self._closed = False
-        self._stats = {"queries": 0, "batches": 0, "max_batch_seen": 0,
-                       "max_queue_depth": 0, "flush_reasons": {}}
+        self._stats = {"queries": 0, "batches": 0, "cache_hits": 0,
+                       "max_batch_seen": 0, "max_queue_depth": 0,
+                       "flush_reasons": {}}
         self._exec = _DaemonExecutor("async-batch-exec")
         self._exec_fut: Future | None = None
         self._worker = threading.Thread(
@@ -465,6 +477,20 @@ class AsyncBatchQueue:
                 raise ValueError(
                     f"query bitmap width {bitmap.shape[0]} does not match "
                     f"dataset width {ds.bitmaps.shape[1]}")
+        # cache probe before batching: a semantic-cache backend answers
+        # hits here, synchronously — the pipeline only ever sees misses
+        probe = getattr(self.service, "probe_one", None)
+        if callable(probe):
+            hit = probe(vector, bitmap, Predicate(pred), int(k))
+            if hit is not None:
+                with self._cv:
+                    if self._closed:
+                        raise RuntimeError("AsyncBatchQueue is closed")
+                    self._stats["queries"] += 1
+                    self._stats["cache_hits"] += 1
+                fut: Future = Future()
+                fut.set_result(hit)
+                return fut
         req = _PendingQuery(vector, bitmap, Predicate(pred), int(k),
                             time.monotonic(), Future())
         with self._cv:
@@ -512,10 +538,12 @@ class AsyncBatchQueue:
         self.close()
 
     def stats(self) -> dict:
-        """Counters: queries/batches served, largest batch, the
-        queue-depth high-water mark (`max_queue_depth` — how far
-        submissions ran ahead of the pipeline), and a flush-reason
-        histogram (max_batch / max_wait / flush / close)."""
+        """Counters: queries/batches served, cache hits answered at
+        submit time (`cache_hits`, nonzero only over a semantic-cache
+        backend), largest batch, the queue-depth high-water mark
+        (`max_queue_depth` — how far submissions ran ahead of the
+        pipeline), and a flush-reason histogram (max_batch / max_wait /
+        flush / close)."""
         with self._cv:
             s = dict(self._stats)
             s["flush_reasons"] = dict(self._stats["flush_reasons"])

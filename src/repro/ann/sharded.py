@@ -253,6 +253,11 @@ class ShardedFilteredIndex:
         ids = np.asarray(ids, dtype=np.int64)
         return np.where(ids >= 0, ids, np.int64(-1))
 
+    def label_clock(self, labels=None) -> int:
+        """Sealed data never changes — constant 0, mirroring the live
+        handles' per-label write clock (see `repro.ann.cache`)."""
+        return 0
+
     # ---- maintenance -----------------------------------------------------
     def evict(self, method_name: str | None = None) -> int:
         """Drop built indexes on every shard; returns total evictions."""

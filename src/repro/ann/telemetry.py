@@ -266,21 +266,68 @@ def _audit_recall(served: np.ndarray, exact: np.ndarray, k: int) -> float:
 
 class RecallAuditor:
     """Replays sampled queries against the brute-force oracle on a
-    pinned snapshot and folds exact recall into the online table."""
+    pinned snapshot and folds exact recall into the online table.
+
+    The per-pass sampling budget adapts to traffic: with `sample_frac`
+    set, each pass audits at most
+    `clip(ceil(traffic_since_last_pass * sample_frac), min_budget,
+    max_budget)` of the drained reservoir (uniform subsample), so audit
+    cost tracks sink throughput instead of reservoir size — quiet
+    periods still audit `min_budget` for signal, floods are capped at
+    `max_budget`. The default (`sample_frac=None`) audits every drained
+    sample, the pre-adaptive behaviour.
+
+    Args:
+        index: the serving handle audits replay on.
+        sink: the `TelemetrySink` whose reservoir is drained.
+        table: optional `OnlineBenchmarkTable` audited recall folds into.
+        ds_name: table dataset key (defaults to `index.ds.name`).
+        sample_frac: target audited fraction of recorded traffic per
+            pass, in (0, 1]; None audits everything.
+        min_budget / max_budget: hard floor / cap on the per-pass budget
+            when `sample_frac` is set.
+        seed: RNG seed for the uniform subsample.
+    """
 
     def __init__(self, index, sink: TelemetrySink, *,
                  table: "OnlineBenchmarkTable | None" = None,
-                 ds_name: str | None = None):
+                 ds_name: str | None = None,
+                 sample_frac: float | None = None,
+                 min_budget: int = 8, max_budget: int = 256,
+                 seed: int = 0):
+        if sample_frac is not None and not (0.0 < sample_frac <= 1.0):
+            raise ValueError(
+                f"sample_frac must be in (0, 1] or None; got {sample_frac}")
+        if min_budget < 1 or max_budget < min_budget:
+            raise ValueError(
+                f"need 1 <= min_budget <= max_budget; got "
+                f"{min_budget}/{max_budget}")
         self.index = index
         self.sink = sink
         self.table = table
         ds = getattr(index, "ds", None)
         self.ds_name = ds_name or (ds.name if ds is not None else "live")
+        self.sample_frac = (None if sample_frac is None
+                            else float(sample_frac))
+        self.min_budget = int(min_budget)
+        self.max_budget = int(max_budget)
+        self._budget_rng = np.random.default_rng(seed)
+        self._last_seen = 0
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self.last_error: BaseException | None = None
         self.audits = 0          # samples audited so far
+        self.skipped = 0         # samples dropped by the budget
         self.runs = 0
+
+    def budget_for(self, throughput: int) -> int | None:
+        """Per-pass audit budget for `throughput` queries recorded since
+        the last pass: `clip(ceil(throughput * sample_frac), min_budget,
+        max_budget)`; None (unlimited) when `sample_frac` is unset."""
+        if self.sample_frac is None:
+            return None
+        want = int(np.ceil(max(0, int(throughput)) * self.sample_frac))
+        return int(np.clip(want, self.min_budget, self.max_budget))
 
     # one audit pass -----------------------------------------------------
 
@@ -292,7 +339,18 @@ class RecallAuditor:
         samples = self.sink.take_samples()
         self.runs += 1
         if not samples:
-            return {"samples": 0, "cells": {}, "results": []}
+            return {"samples": 0, "cells": {}, "results": [],
+                    "budget": None}
+        seen = self.sink.seen_events()
+        budget = self.budget_for(seen - self._last_seen)
+        self._last_seen = seen
+        if budget is not None and len(samples) > budget:
+            # uniform subsample of the drained reservoir (which is
+            # itself an unbiased sample of traffic) — order-preserving
+            idx = np.sort(self._budget_rng.choice(
+                len(samples), size=budget, replace=False))
+            self.skipped += len(samples) - budget
+            samples = [samples[int(i)] for i in idx]
         groups: dict[tuple, list[AuditSample]] = {}
         for s in samples:
             groups.setdefault((s.pred, s.k), []).append(s)
@@ -334,7 +392,7 @@ class RecallAuditor:
                         {"n": n, "recall": round(tot / n, 4)}
                         for (m, ps, p), (n, tot) in cells.items()}
         return {"samples": len(results), "cells": report_cells,
-                "results": results}
+                "results": results, "budget": budget}
 
     # background loop ----------------------------------------------------
 

@@ -9,6 +9,22 @@ from repro.ann.predicates import Predicate
 TINY_SPEC = DatasetSpec("tiny", 600, 24, 40, 6, 8, 1.3, 2.0, 0.5, 0.3, 7)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running sweeps (deselect with '-m \"not slow\"'; "
+        "run with '-m slow')")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return                        # explicit marker expression wins
+    skip = pytest.mark.skip(reason="slow sweep; run with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def tiny_ds() -> ANNDataset:
     return synthesize(TINY_SPEC)

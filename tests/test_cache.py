@@ -1,0 +1,573 @@
+"""Oracle-backed staleness + concurrency suite for
+`repro.ann.cache.SemanticResultCache`.
+
+The contract under test: **a cache hit is always bit-identical to a
+fresh search on the pinned snapshot** — same ids, same distances (to
+float tolerance across a compaction's re-sort), same stable keys — and
+a write that could change a cached answer always turns the next probe
+into a miss. A stale hit is a hard failure here, never a recall delta.
+
+Exact-key mode (`threshold=None`) is the bit-identity surface, so the
+oracle suites run there; the semantic path has its own tests pinning
+its weaker contract (neighbour's row set, exactly re-scored distances).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ann.cache import SemanticResultCache
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.live import LiveFilteredIndex, ShardedLiveIndex
+from repro.ann.predicates import Predicate
+from repro.ann.sharded import ShardedFilteredIndex
+
+ALL_PREDS = (Predicate.EQUALITY, Predicate.AND, Predicate.OR)
+HANDLE_KINDS = ("sealed", "sharded", "live", "sharded_live")
+
+
+def _make_handle(kind: str, tiny_ds):
+    if kind == "sealed":
+        return FilteredIndex(tiny_ds)
+    if kind == "sharded":
+        return ShardedFilteredIndex(tiny_ds, 2)
+    if kind == "live":
+        return LiveFilteredIndex(tiny_ds)
+    live = ShardedLiveIndex(None, 2, name=tiny_ds.name, dim=tiny_ds.dim,
+                            universe=tiny_ds.universe)
+    live.upsert(tiny_ds.vectors, tiny_ds.bitmaps)
+    return live
+
+
+def _assert_same_result(res, want):
+    np.testing.assert_array_equal(res.ids, want.ids)
+    np.testing.assert_allclose(res.distances, want.distances,
+                               rtol=1e-5, atol=1e-5, equal_nan=True)
+    if want.keys is not None:
+        np.testing.assert_array_equal(res.keys, want.keys)
+
+
+# ---------------------------------------------------------------------------
+# staleness oracle: every hit == fresh search, all predicates × handles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", HANDLE_KINDS)
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_exact_hit_bit_identical_to_fresh_search(tiny_ds, tiny_queries,
+                                                 pred, kind):
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors[:8], qs.bitmaps[:8], pred, 10)
+    with _make_handle(kind, tiny_ds) as h:
+        cache = SemanticResultCache(h, method="prefilter", threshold=None)
+        first = cache.search(batch)
+        assert first.cache == [None] * batch.q
+        hit = cache.search(batch)
+        assert hit.cache == ["exact"] * batch.q
+        # the fill itself must already match the handle verbatim
+        want = h.search(batch, "prefilter")
+        _assert_same_result(first, want)
+        np.testing.assert_array_equal(hit.ids, want.ids)
+        np.testing.assert_array_equal(      # verbatim, not just close
+            hit.distances, want.distances)
+        np.testing.assert_array_equal(hit.keys, want.keys)
+        st = cache.stats()
+        assert st["hits_exact"] == batch.q and st["misses"] == batch.q
+        cache.close()
+
+
+@pytest.mark.parametrize("kind", HANDLE_KINDS)
+def test_hit_path_runs_no_search(tiny_ds, tiny_queries, kind,
+                                 monkeypatch):
+    """The hit path must bypass routing and search *entirely*: poison
+    the handle's search surface after the fill and hits must still
+    serve."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors[:4], qs.bitmaps[:4], Predicate.AND, 5)
+    with _make_handle(kind, tiny_ds) as h:
+        cache = SemanticResultCache(h, method="prefilter", threshold=None)
+        want = cache.search(batch)
+
+        def boom(*a, **kw):
+            raise AssertionError("cache hit touched the search path")
+
+        monkeypatch.setattr(h, "search", boom)
+        monkeypatch.setattr(h, "run_method", boom, raising=False)
+        hit = cache.search(batch)
+        assert hit.cache == ["exact"] * batch.q
+        np.testing.assert_array_equal(hit.ids, want.ids)
+        cache.close()
+
+
+@pytest.mark.parametrize("pred", ALL_PREDS)
+def test_delete_then_hit_is_stale_miss(tiny_ds, tiny_queries, pred):
+    """Deleting a served row evicts the entry: the next probe misses and
+    refills to the post-delete oracle — the dead row never surfaces."""
+    qs = tiny_queries[pred]
+    batch = QueryBatch(qs.vectors[:6], qs.bitmaps[:6], pred, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None)
+        filled = cache.search(batch)
+        victims = np.unique(filled.ids[filled.ids >= 0].ravel())[:3]
+        assert victims.size
+        live.delete(victims)
+        res = cache.search(batch)
+        for qi in range(batch.q):
+            if np.intersect1d(filled.ids[qi], victims).size:
+                assert res.cache[qi] is None, \
+                    "served a cached result whose rows were deleted"
+            assert not np.intersect1d(res.ids[qi], victims).size
+        _assert_same_result(res, live.search(batch, "prefilter"))
+        # and the refilled entries hit again, fresh
+        again = cache.search(batch)
+        assert again.cache == ["exact"] * batch.q
+        _assert_same_result(again, live.search(batch, "prefilter"))
+        cache.close()
+
+
+def test_upsert_shifts_topk_evicts(tiny_ds, tiny_queries):
+    """An upsert that would change the top-k (a row exactly at the query
+    point, matching labels) must evict — the old top-k is never served
+    once the better row exists."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors[:4], qs.bitmaps[:4], Predicate.AND, 5)
+    with LiveFilteredIndex(tiny_ds) as live:
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None)
+        cache.search(batch)
+        new = live.upsert(batch.vectors, batch.bitmaps)  # dist-0 rows
+        res = cache.search(batch)
+        assert res.cache == [None] * batch.q
+        want = live.search(batch, "prefilter")
+        _assert_same_result(res, want)
+        for qi in range(batch.q):
+            assert int(new[qi]) in res.ids[qi], \
+                "the upserted exact-match row must enter the top-k"
+        cache.close()
+
+
+def test_compact_mid_ttl_hit_survives_and_matches(tiny_ds, tiny_queries):
+    """Compaction remaps ids but never changes the live row set, so a
+    mid-TTL entry *survives* it — and the hit re-resolves through stable
+    keys to match a fresh post-compaction search."""
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors[:6], qs.bitmaps[:6], Predicate.AND, 10)
+    with LiveFilteredIndex(tiny_ds) as live:
+        # deletes + deltas so compaction actually remaps rows
+        live.delete(np.arange(0, 40))
+        live.upsert(tiny_ds.vectors[:10] + np.float32(0.05),
+                    tiny_ds.bitmaps[:10])
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None, ttl_s=3600.0)
+        pre = cache.search(batch)
+        gen0 = live.generation
+        assert live.compact() > gen0 - 1
+        assert live.generation != gen0
+        hit = cache.search(batch)
+        assert hit.cache == ["exact"] * batch.q, \
+            "compaction alone must not evict (row set unchanged)"
+        want = live.search(batch, "prefilter")
+        np.testing.assert_array_equal(hit.ids, want.ids)
+        np.testing.assert_array_equal(hit.keys, want.keys)
+        np.testing.assert_allclose(hit.distances, want.distances,
+                                   rtol=1e-5, atol=1e-5, equal_nan=True)
+        # same rows as before the compaction, under stable keys
+        np.testing.assert_array_equal(np.sort(hit.keys, axis=1),
+                                      np.sort(pre.keys, axis=1))
+        cache.close()
+
+
+def test_disjoint_label_writes_do_not_evict(tiny_ds):
+    """Invalidation is per-label-set, not global: writes touching only
+    labels outside a cached predicate's set keep the entry hot."""
+    from repro.ann import labels as lb
+
+    w = tiny_ds.bitmaps.shape[1]
+    qb = lb.pack_one([0], tiny_ds.universe)
+    other = lb.pack_one([tiny_ds.universe - 1], tiny_ds.universe)
+    qv = tiny_ds.vectors[:2]
+    batch = QueryBatch(qv, np.broadcast_to(qb, (2, w)).copy(),
+                       Predicate.AND, 5)
+    with LiveFilteredIndex(tiny_ds) as live:
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None)
+        cache.search(batch)
+        new = live.upsert(qv + np.float32(0.01),
+                          np.broadcast_to(other, (2, w)).copy())
+        live.delete(new[:1])
+        res = cache.search(batch)
+        assert res.cache == ["exact"] * 2, \
+            "a disjoint-label write evicted a cached entry"
+        _assert_same_result(res, live.search(batch, "prefilter"))
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# semantic path: neighbour's rows, exactly re-scored
+# ---------------------------------------------------------------------------
+
+def test_semantic_hit_rescores_exactly(tiny_ds, tiny_queries, rng):
+    qs = tiny_queries[Predicate.AND]
+    base = qs.vectors[:4]
+    batch = QueryBatch(base, qs.bitmaps[:4], Predicate.AND, 5)
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        filled = cache.search(batch)
+        near = (base + rng.normal(0, 1e-4, base.shape)
+                .astype(np.float32)).astype(np.float32)
+        res = cache.search(QueryBatch(near, qs.bitmaps[:4],
+                                      Predicate.AND, 5))
+        assert res.cache == ["semantic"] * 4
+        for qi in range(4):
+            ids = res.ids[qi]
+            assert set(ids.tolist()) == set(filled.ids[qi].tolist()), \
+                "semantic hit must serve the cached neighbour's rows"
+            valid = ids >= 0
+            diff = tiny_ds.vectors[ids[valid]].astype(np.float64) \
+                - near[qi].astype(np.float64)
+            want = (diff ** 2).sum(axis=1)
+            np.testing.assert_allclose(res.distances[qi][valid], want,
+                                       rtol=1e-5, atol=1e-5)
+            d = res.distances[qi][valid]
+            assert np.all(np.diff(d) >= -1e-6), "re-scored rows unsorted"
+        cache.close()
+
+
+def test_semantic_requires_identical_bitmap(tiny_ds):
+    """Near-identical vector under a *different* label set must miss —
+    results never transfer across predicates."""
+    from repro.ann import labels as lb
+
+    w = tiny_ds.bitmaps.shape[1]
+    bm_a = np.broadcast_to(lb.pack_one([0], tiny_ds.universe),
+                           (1, w)).copy()
+    bm_b = np.broadcast_to(lb.pack_one([1], tiny_ds.universe),
+                           (1, w)).copy()
+    qv = tiny_ds.vectors[:1]
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.9, rebuild_every=1)
+        cache.search(QueryBatch(qv, bm_a, Predicate.AND, 5))
+        res = cache.search(QueryBatch(qv, bm_b, Predicate.AND, 5))
+        assert res.cache == [None]
+        cache.close()
+
+
+def test_semantic_threshold_none_disables(tiny_ds, tiny_queries, rng):
+    qs = tiny_queries[Predicate.AND]
+    base = qs.vectors[:2]
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=None)
+        cache.search(QueryBatch(base, qs.bitmaps[:2], Predicate.AND, 5))
+        near = base + rng.normal(0, 1e-5, base.shape).astype(np.float32)
+        res = cache.search(QueryBatch(near.astype(np.float32),
+                                      qs.bitmaps[:2], Predicate.AND, 5))
+        assert res.cache == [None, None]
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle knobs: TTL, capacity LRU, admission doorkeeper
+# ---------------------------------------------------------------------------
+
+def test_ttl_expiry_evicts(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.OR]
+    batch = QueryBatch(qs.vectors[:3], qs.bitmaps[:3], Predicate.OR, 5)
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=None, ttl_s=0.02)
+        cache.search(batch)
+        assert cache.search(batch).cache == ["exact"] * 3
+        time.sleep(0.05)
+        res = cache.search(batch)
+        assert res.cache == [None] * 3
+        assert cache.stats()["evictions_ttl"] == 3
+        cache.close()
+
+
+def test_capacity_lru_eviction(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=None, capacity=4)
+        for i in range(8):
+            cache.search(QueryBatch(qs.vectors[i:i + 1],
+                                    qs.bitmaps[i:i + 1],
+                                    Predicate.AND, 5))
+        st = cache.stats()
+        assert st["entries"] == 4
+        assert st["evictions_capacity"] == 4
+        # oldest 4 evicted, newest 4 still hit
+        for i, want in zip((0, 7), (None, "exact")):
+            res = cache.search(QueryBatch(qs.vectors[i:i + 1],
+                                          qs.bitmaps[i:i + 1],
+                                          Predicate.AND, 5))
+            assert res.cache == [want]
+        cache.close()
+
+
+def test_admission_doorkeeper(tiny_ds, tiny_queries):
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors[:2], qs.bitmaps[:2], Predicate.AND, 5)
+    with FilteredIndex(tiny_ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=None, admit_after=2)
+        cache.search(batch)
+        assert cache.stats()["insertions"] == 0     # first miss: counted
+        assert cache.search(batch).cache == [None, None]
+        assert cache.stats()["insertions"] == 2     # second miss: admitted
+        assert cache.search(batch).cache == ["exact", "exact"]
+        cache.close()
+
+
+def test_constructor_validation(tiny_ds):
+    with FilteredIndex(tiny_ds) as fx:
+        with pytest.raises(ValueError):
+            SemanticResultCache(fx, method="prefilter", capacity=0)
+        with pytest.raises(ValueError):
+            SemanticResultCache(fx, method="prefilter", threshold=1.5)
+        with pytest.raises(ValueError):
+            SemanticResultCache(fx, method="prefilter", admit_after=0)
+        with pytest.raises(ValueError):
+            SemanticResultCache(fx)    # no router surface, no method=
+
+
+# ---------------------------------------------------------------------------
+# routed service + async queue integration
+# ---------------------------------------------------------------------------
+
+def test_routed_service_and_queue_probe(tiny_ds, tiny_queries,
+                                        toy_router):
+    from repro.ann.service import AsyncBatchQueue, RouterService
+    from repro.ann.telemetry import TelemetrySink
+
+    qs = tiny_queries[Predicate.AND]
+    sink = TelemetrySink(reservoir=16)
+    with FilteredIndex(tiny_ds) as fx:
+        svc = RouterService(fx, toy_router, t=0.5, telemetry=sink)
+        cache = SemanticResultCache(svc, threshold=None)
+        batch = QueryBatch(qs.vectors[:4], qs.bitmaps[:4],
+                           Predicate.AND, 5)
+        first = cache.search(batch)
+        assert first.decisions is not None      # misses were routed
+        hit = cache.search(batch)
+        assert hit.cache == ["exact"] * 4
+        np.testing.assert_array_equal(hit.ids, first.ids)
+        with AsyncBatchQueue(cache, max_batch=4, max_wait_ms=2.0) as q:
+            a = q.submit(qs.vectors[10], qs.bitmaps[10],
+                         Predicate.AND, 5).result(30)
+            assert a.cache is None
+            b = q.submit(qs.vectors[10], qs.bitmaps[10],
+                         Predicate.AND, 5).result(30)
+            assert b.cache == "exact"
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.distances, b.distances)
+            st = q.stats()
+            assert st["cache_hits"] == 1
+        counters = sink.stats()["counters"]
+        assert counters["cache_hits_exact"] >= 5
+        assert counters["cache_insertions"] >= 5
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrency: threaded writer vs cached readers (PR-4 harness shape)
+# ---------------------------------------------------------------------------
+
+def test_cached_reads_racing_delete_and_compact_never_stale(tiny_ds,
+                                                            tiny_queries):
+    """A writer deletes rows and compacts while readers serve through
+    the cache: a cache *hit* must never contain a key whose delete
+    completed before the probe — version-counter invalidation may not
+    be lost under interleaving."""
+    qs = tiny_queries[Predicate.AND]
+    batches = [QueryBatch(qs.vectors[i:i + 4], qs.bitmaps[i:i + 4],
+                          Predicate.AND, 10) for i in range(0, 16, 4)]
+    live = LiveFilteredIndex(tiny_ds)
+    try:
+        new_keys = live.keys_of(
+            live.upsert(tiny_ds.vectors + np.float32(0.01),
+                        tiny_ds.bitmaps))
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None)
+        deleted_keys: list[int] = []
+        stop = threading.Event()
+        errors: list[BaseException] = []
+        compactions: list = []
+
+        def writer():
+            rng = np.random.default_rng(11)
+            order = rng.permutation(tiny_ds.n)
+            try:
+                for i in range(160):
+                    if stop.is_set():
+                        break
+                    key = int(new_keys[order[i]])
+                    if live.delete_keys([key]):
+                        deleted_keys.append(key)  # before readers see it
+                    if i == 80:
+                        compactions.append(live.compact_async())
+            except BaseException as e:           # pragma: no cover
+                errors.append(e)
+            finally:
+                stop.set()
+
+        def reader():
+            rng = np.random.default_rng(threading.get_ident() % 2**31)
+            try:
+                while not stop.is_set():
+                    known = set(deleted_keys)    # before the probe
+                    batch = batches[int(rng.integers(len(batches)))]
+                    res = cache.search(batch)
+                    for qi in range(batch.q):
+                        if res.cache[qi] is None:
+                            continue
+                        served = set(
+                            int(x) for x in res.keys[qi] if x >= 0)
+                        dead = served & known
+                        assert not dead, \
+                            f"stale hit served deleted keys {dead}"
+            except BaseException as e:
+                errors.append(e)
+                stop.set()
+
+        th_w = threading.Thread(target=writer)
+        readers = [threading.Thread(target=reader) for _ in range(3)]
+        th_w.start()
+        for th in readers:
+            th.start()
+        th_w.join(timeout=120)
+        for th in readers:
+            th.join(timeout=120)
+        assert not errors, errors[0]
+        for fut in compactions:       # drain the racing compaction
+            fut.result(timeout=120)
+        # quiescent state: the cache agrees with the oracle end-state
+        for batch in batches:
+            _assert_same_result(cache.search(batch),
+                                live.search(batch, "prefilter"))
+        cache.close()
+    finally:
+        live.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle fuzz: randomized interleavings vs the oracle, shrinkable by seed
+# ---------------------------------------------------------------------------
+
+def _fuzz_round(tiny_ds, tmp_path, seed: int, n_ops: int) -> dict:
+    """One seeded interleaving of upsert/delete/search/checkpoint/
+    compact/cache-probe on a durable live index; every cache hit is
+    checked bit-identical to a fresh oracle search in the same
+    (single-threaded) state. Returns op/hit counts for sanity."""
+    from repro.ann.store import IndexStore
+
+    rng = np.random.default_rng(seed)
+    qpool = [(tiny_ds.vectors[i:i + 2].copy(),
+              tiny_ds.bitmaps[i:i + 2].copy(),
+              Predicate(int(rng.integers(3))))
+             for i in rng.integers(0, tiny_ds.n, 6)]
+    counts = {"hits": 0, "probes": 0, "writes": 0}
+    with IndexStore.create(str(tmp_path / f"fuzz{seed}"),
+                           LiveFilteredIndex(tiny_ds)) as st:
+        live = st.index
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=None, capacity=64)
+        for step in range(n_ops):
+            op = rng.random()
+            if op < 0.25:                                     # upsert
+                take = rng.integers(0, tiny_ds.n, rng.integers(1, 5))
+                live.upsert(tiny_ds.vectors[take]
+                            + np.float32(rng.normal(0, 0.01)),
+                            tiny_ds.bitmaps[take])
+                counts["writes"] += 1
+            elif op < 0.45:                                   # delete
+                stats = live.live_stats()
+                n_live = stats.n_live
+                if n_live > tiny_ds.n // 2:
+                    with live.snapshot() as snap:
+                        pool = np.nonzero(
+                            ~snap.tombstones[:snap.base_n])[0]
+                    if pool.size:
+                        live.delete(pool[rng.integers(
+                            0, pool.size, rng.integers(1, 4))])
+                        counts["writes"] += 1
+            elif op < 0.55:                                   # compact
+                if rng.random() < 0.5:
+                    live.compact()
+                else:
+                    live.compact_async().result(60)
+            elif op < 0.62:                                   # checkpoint
+                st.checkpoint()
+            else:                                             # probe
+                qv, qb, pred = qpool[int(rng.integers(len(qpool)))]
+                batch = QueryBatch(qv, qb, pred,
+                                   int(rng.integers(3, 12)))
+                res = cache.search(batch)
+                want = live.search(batch, "prefilter")
+                counts["probes"] += 1
+                for qi in range(batch.q):
+                    if res.cache[qi] is not None:
+                        counts["hits"] += 1
+                try:
+                    _assert_same_result(res, want)
+                except AssertionError as e:   # shrink handle: seed+step
+                    raise AssertionError(
+                        f"fuzz divergence at seed={seed} step={step}: "
+                        f"{e}") from e
+        cache.close()
+    return counts
+
+
+def test_lifecycle_fuzz_bounded(tiny_ds, tmp_path):
+    counts = _fuzz_round(tiny_ds, tmp_path, seed=1234, n_ops=60)
+    assert counts["probes"] > 0
+    assert counts["hits"] > 0, "fuzz never exercised the hit path"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_lifecycle_fuzz_sweep(tiny_ds, tmp_path, seed):
+    counts = _fuzz_round(tiny_ds, tmp_path, seed=seed, n_ops=250)
+    assert counts["probes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# label write clock (the invalidation signal itself)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_label_clock_stamps_exactly_touched_labels(tiny_ds, sharded):
+    from repro.ann import labels as lb
+
+    w = tiny_ds.bitmaps.shape[1]
+    if sharded:
+        live = ShardedLiveIndex(None, 2, name=tiny_ds.name,
+                                dim=tiny_ds.dim,
+                                universe=tiny_ds.universe)
+        live.upsert(tiny_ds.vectors, tiny_ds.bitmaps)
+    else:
+        live = LiveFilteredIndex(tiny_ds)
+    with live:
+        c0 = live.label_clock()       # sharded setup upsert advances it
+        bm = np.broadcast_to(lb.pack_one([3, 5], tiny_ds.universe),
+                             (1, w)).copy()
+        new = live.upsert(tiny_ds.vectors[:1], bm)
+        c1 = live.label_clock()
+        assert c1 > c0
+        assert live.label_clock([3]) == c1
+        assert live.label_clock([5]) == c1
+        assert live.label_clock([4]) < c1
+        live.delete(new)
+        c2 = live.label_clock()
+        assert c2 > c1 and live.label_clock([3]) == c2
+        # deleting an already-dead id must not advance any stamp
+        live.delete(new)
+        assert live.label_clock([3]) == live.label_clock()
+        # sealed handles: constant clock
+    with FilteredIndex(tiny_ds) as fx:
+        assert fx.label_clock() == 0 and fx.label_clock([0]) == 0

@@ -511,3 +511,58 @@ def test_adapter_background_loop_and_stop(tiny_ds):
         assert adapter.last_error is None
         assert adapter.history                  # loop audited something
         assert adapter._thread is None          # stopped cleanly
+
+
+# ----------------------------------------------------- adaptive audit budget
+
+
+def test_auditor_budget_curve():
+    """Pin the budget curve: clip(ceil(throughput * sample_frac),
+    min_budget, max_budget), unlimited when sample_frac is unset."""
+    aud = RecallAuditor.__new__(RecallAuditor)   # curve is state-free
+    aud.sample_frac, aud.min_budget, aud.max_budget = 0.1, 8, 64
+    assert aud.budget_for(0) == 8        # floor on quiet traffic
+    assert aud.budget_for(79) == 8       # ceil(7.9) == 8 == floor
+    assert aud.budget_for(81) == 9       # linear region: ceil
+    assert aud.budget_for(200) == 20
+    assert aud.budget_for(640) == 64     # cap reached exactly
+    assert aud.budget_for(100000) == 64  # hard cap on floods
+    aud.sample_frac = None
+    assert aud.budget_for(100000) is None   # default: audit everything
+
+
+def test_auditor_budget_validation(tiny_ds, tiny_index):
+    sink = TelemetrySink(capacity=16, reservoir=16)
+    with pytest.raises(ValueError):
+        RecallAuditor(tiny_index, sink, sample_frac=0.0)
+    with pytest.raises(ValueError):
+        RecallAuditor(tiny_index, sink, sample_frac=1.5)
+    with pytest.raises(ValueError):
+        RecallAuditor(tiny_index, sink, sample_frac=0.5, min_budget=0)
+    with pytest.raises(ValueError):
+        RecallAuditor(tiny_index, sink, sample_frac=0.5,
+                      min_budget=9, max_budget=8)
+
+
+def test_auditor_budget_scales_with_traffic(tiny_ds, tiny_index):
+    """With sample_frac set, a pass audits at most the traffic-derived
+    budget (uniform subsample of the drained reservoir); audited recall
+    stays exact on the subsample."""
+    batch = _batch(tiny_ds, Predicate.AND, q=32)
+    exact = tiny_index.search(batch, "prefilter")
+    served = exact.keys if exact.keys is not None else exact.ids
+    sink = TelemetrySink(capacity=128, reservoir=128)
+    sink.record_batch(batch, ("prefilter", "full"), search_s=1e-3,
+                      keys=served)
+    aud = RecallAuditor(tiny_index, sink, sample_frac=0.25,
+                        min_budget=4, max_budget=16)
+    rep = aud.run_once()
+    assert rep["budget"] == 8            # ceil(32 * 0.25)
+    assert rep["samples"] == 8
+    assert aud.skipped == 32 - 8
+    assert all(r == 1.0 for _s, r, _e in rep["results"])
+    # default-configured auditor still audits everything it drains
+    sink.record_batch(batch, ("prefilter", "full"), search_s=1e-3,
+                      keys=served)
+    rep2 = RecallAuditor(tiny_index, sink).run_once()
+    assert rep2["budget"] is None and rep2["samples"] == 32
