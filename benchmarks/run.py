@@ -13,7 +13,11 @@ and **appends** a per-PR record (keyed by git SHA) to the
 the latest recorded run against the median of the last (up to) 3 prior
 records and exits 1 if any smoke number regressed by more than 25 %;
 every failure line names the regressing metric and the baseline window
-(which prior SHAs the median came from).
+(which prior SHAs the median came from). Besides the console lines,
+``--check`` writes a machine-readable regression report — every
+comparison (trajectory + absolute gates) with its baseline window — to
+``artifacts/bench/check_report.json`` and a markdown table twin at
+``check_report.md``, so CI can post the verdict without scraping stdout.
 """
 
 from __future__ import annotations
@@ -89,7 +93,7 @@ def _keep_best(old: dict, new: dict) -> dict:
             ("live_index", ("n", "q"), "search_live_us"),
             ("live_compaction", ("n_base",), "compact_ms"),
             ("store", ("n", "rows"), "cold_open_ms"),
-            ("telemetry", ("n", "q"), "routed_p50_us_on"),
+            ("telemetry", ("n", "q"), "routed_best_us_on"),
             ("telemetry_adapt", ("n",), "time_to_reroute_ms"),
             ("cache", ("n", "q"), "hit_us")]:
         old_rows = {tuple(r[c] for c in key_cols): r
@@ -108,7 +112,9 @@ def _keep_best(old: dict, new: dict) -> dict:
                     best["two_pass_us"] / best["fused_us"], 2)
                 out.append(best)
             else:                                   # whole faster row
-                out.append(row if row[pick] <= prev[pick] else prev)
+                # prev may predate a renamed gate metric: keep the new row
+                out.append(row if row[pick] <= prev.get(pick, float("inf"))
+                           else prev)
         merged[section] = out
     rl = merged.get("routing_latency", [])
     if rl:
@@ -182,6 +188,48 @@ def run_smoke() -> None:
     print(f"smoke summary -> {path} ({len(runs)} recorded runs)", flush=True)
 
 
+def _write_check_report(report: list[dict], meta: dict) -> str:
+    """Persist the --check verdict machine-readably: a JSON document
+    (one entry per comparison, trajectory and absolute gates alike, with
+    the baseline window that produced each number) plus a markdown table
+    twin for humans/CI comments. Returns the JSON path."""
+    from repro.common import artifacts_dir
+
+    out_dir = artifacts_dir("bench")
+    jpath = os.path.join(out_dir, "check_report.json")
+    with open(jpath, "w") as f:
+        json.dump({**meta, "comparisons": report}, f, indent=1)
+    lines = [
+        "# Bench regression check",
+        "",
+        f"- run: `{meta['sha']}` ({meta['date']})",
+        f"- baseline: median of last ≤3 prior records; "
+        f"tolerance {meta['tolerance']}x",
+        f"- verdict: **{'FAIL' if meta['failures'] else 'PASS'}** "
+        f"({meta['failures']} regression(s) / "
+        f"{len(report)} comparison(s))",
+        "",
+        "| section | key | metric | baseline | current | ratio | gate "
+        "| status | window |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in report:
+        lines.append(
+            "| {section} | {key} | {metric} | {baseline} | {current} "
+            "| {ratio} | {gate} | {status} | {window} |".format(
+                section=c["section"],
+                key=",".join(str(k) for k in c["key"]),
+                metric=c["metric"],
+                baseline="—" if c["baseline"] is None else c["baseline"],
+                current=c["current"],
+                ratio="—" if c["ratio"] is None else f"{c['ratio']:.2f}x",
+                gate=c["gate"], status=c["status"],
+                window=" ".join(c["window"]) or "—"))
+    with open(os.path.join(out_dir, "check_report.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return jpath
+
+
 def run_check() -> None:
     """Fail (exit 1) if the latest recorded smoke run regressed >25% vs
     the trajectory baseline on any gated number.
@@ -190,6 +238,10 @@ def run_check() -> None:
     prior records** carrying it, not the single previous record: one
     lucky-fast (or polluted) historical sample on a shared host would
     otherwise gate every later run against an unrepresentative number.
+
+    Every comparison is also appended to the machine-readable report
+    written by `_write_check_report` (JSON + markdown twin under
+    artifacts/bench/), pass or fail.
     """
     import statistics
 
@@ -199,6 +251,7 @@ def run_check() -> None:
               f"compare, passing", flush=True)
         return
     prior, last = runs[:-1], runs[-1]
+    report: list[dict] = []
     print(f"check: {last.get('sha')} vs median of last "
           f"{min(3, len(prior))} prior record(s) "
           f"(tolerance {CHECK_TOLERANCE}x)")
@@ -213,7 +266,8 @@ def run_check() -> None:
         ("store", ("n", "rows"),
          ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
         ("telemetry", ("n", "q"),
-         ("routed_p50_us_off", "routed_p50_us_on")),
+         ("routed_best_us_off", "routed_best_us_on",
+          "routed_best_us_trace")),
         ("cache", ("n", "q"), ("hit_us", "served_p50_us")),
     ]
     failures: list[str] = []
@@ -236,6 +290,13 @@ def run_check() -> None:
                 base = statistics.median(v for _, v in window)
                 ratio = row[metric] / max(base, 1e-9)
                 flag = "REGRESSION" if ratio > CHECK_TOLERANCE else "ok"
+                report.append({
+                    "kind": "trajectory", "section": section,
+                    "key": list(key), "metric": metric,
+                    "baseline": base, "current": row[metric],
+                    "ratio": round(ratio, 3),
+                    "gate": f"<= {CHECK_TOLERANCE}x", "status": flag,
+                    "window": [sha for sha, _ in window]})
                 if ratio > CHECK_TOLERANCE:
                     failures.append(
                         f"{section}{list(key)} {metric}: {base} -> "
@@ -250,57 +311,55 @@ def run_check() -> None:
     # fused live read path must hold <=1.5x sealed at 50% delta fill,
     # the telemetry sink must cost <=5% on the routed hot path, and
     # graft compaction must scale sublinearly in base size
+    def absolute_gate(section: str, key: list, metric: str, value,
+                      limit: float, *, below: bool = False) -> None:
+        """One history-independent gate: fail when `value` exceeds
+        `limit` (or falls below it with `below=True`)."""
+        bad = (value < limit) if below else (value > limit)
+        gate = f"{'>=' if below else '<='} {limit}"
+        report.append({
+            "kind": "absolute", "section": section, "key": key,
+            "metric": metric, "baseline": None, "current": value,
+            "ratio": None, "gate": gate,
+            "status": "REGRESSION" if bad else "ok", "window": []})
+        if bad:
+            failures.append(
+                f"{section}{key} {metric}: {value} "
+                f"{'<' if below else '>'} {limit} (absolute gate)")
+        print(f"  {section}{key} {metric}: {value} (gate {gate}) "
+              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+
     for row in last.get("live_index", []):
-        ratio = row.get("live_sealed_ratio")
-        if ratio is None:
-            continue
-        key = [row.get("n"), row.get("q")]
-        bad = ratio > LIVE_SEALED_MAX
-        if bad:
-            failures.append(
-                f"live_index{key} live_sealed_ratio: {ratio} > "
-                f"{LIVE_SEALED_MAX} (absolute gate)")
-        print(f"  live_index{key} live_sealed_ratio: {ratio} "
-              f"(gate <= {LIVE_SEALED_MAX}) "
-              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+        if row.get("live_sealed_ratio") is not None:
+            absolute_gate("live_index", [row.get("n"), row.get("q")],
+                          "live_sealed_ratio", row["live_sealed_ratio"],
+                          LIVE_SEALED_MAX)
     for row in last.get("telemetry", []):
-        pct = row.get("overhead_pct")
-        if pct is None:
-            continue
         key = [row.get("n"), row.get("q")]
-        bad = pct > TELEMETRY_OVERHEAD_MAX
-        if bad:
-            failures.append(
-                f"telemetry{key} overhead_pct: {pct} > "
-                f"{TELEMETRY_OVERHEAD_MAX} (absolute gate)")
-        print(f"  telemetry{key} overhead_pct: {pct} "
-              f"(gate <= {TELEMETRY_OVERHEAD_MAX}) "
-              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+        if row.get("overhead_pct") is not None:
+            absolute_gate("telemetry", key, "overhead_pct",
+                          row["overhead_pct"], TELEMETRY_OVERHEAD_MAX)
+        # combined sink+tracer overhead shares the same 5% budget: the
+        # span layer must stay invisible on the routed hot path
+        if row.get("overhead_trace_pct") is not None:
+            absolute_gate("telemetry", key, "overhead_trace_pct",
+                          row["overhead_trace_pct"],
+                          TELEMETRY_OVERHEAD_MAX)
     for row in last.get("cache", []):
-        s = row.get("speedup")
-        if s is None:
-            continue
-        key = [row.get("n"), row.get("q")]
-        bad = s < CACHE_SPEEDUP_MIN
-        if bad:
-            failures.append(
-                f"cache{key} speedup: {s} < {CACHE_SPEEDUP_MIN} "
-                f"(absolute gate: exact-key hit vs routed search)")
-        print(f"  cache{key} speedup: {s} "
-              f"(gate >= {CACHE_SPEEDUP_MIN}) "
-              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+        if row.get("speedup") is not None:
+            absolute_gate("cache", [row.get("n"), row.get("q")],
+                          "speedup", row["speedup"], CACHE_SPEEDUP_MIN,
+                          below=True)
     comp = [r for r in last.get("live_compaction", [])
             if "scaling_vs_linear" in r]
     for row in comp[1:]:            # first row is its own baseline (1.0)
-        s = row["scaling_vs_linear"]
-        bad = s > COMPACT_SCALING_MAX
-        if bad:
-            failures.append(
-                f"live_compaction[{row['n_base']}] scaling_vs_linear: "
-                f"{s} > {COMPACT_SCALING_MAX} (absolute gate)")
-        print(f"  live_compaction[{row['n_base']}] scaling_vs_linear: "
-              f"{s} (gate <= {COMPACT_SCALING_MAX}) "
-              f"{'REGRESSION' if bad else 'ok'}", flush=True)
+        absolute_gate("live_compaction", [row["n_base"]],
+                      "scaling_vs_linear", row["scaling_vs_linear"],
+                      COMPACT_SCALING_MAX)
+    jpath = _write_check_report(report, {
+        "sha": last.get("sha", "?"), "date": last.get("date", "?"),
+        "tolerance": CHECK_TOLERANCE, "failures": len(failures)})
+    print(f"check report -> {jpath} (+ .md)", flush=True)
     if failures:
         print(f"check: {len(failures)} regression(s) beyond "
               f"{CHECK_TOLERANCE}x:", flush=True)

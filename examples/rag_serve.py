@@ -39,9 +39,18 @@ if drift crosses the threshold the router retrains off the serving
 path and promotes only after shadow-eval (with `--data-dir`, the
 promoted artifact links into the store manifest atomically).
 
+`--trace` attaches a `repro.ann.trace.Tracer`: every request grows a
+hierarchical span tree (queue wait -> batch assembly -> route ->
+execute -> per-shard / live stages), the flight recorder keeps the
+worst trees, and the run prints the slowest one and dumps Perfetto
+JSON + the flight recorder under artifacts/serve/. `--metrics-port P`
+serves Prometheus `/metrics` (sink counters, per-shard cells, span
+histograms, cache/queue stats) and `/healthz` for the run's duration.
+
     PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
         [--shards 2] [--live] [--data-dir /tmp/rag-store] \
-        [--cache] [--telemetry] [--online-router]
+        [--cache] [--telemetry] [--online-router] \
+        [--trace] [--metrics-port 9100]
 """
 
 import argparse
@@ -69,7 +78,7 @@ from repro.launch.serve import generate
 from repro.models import common, lm
 
 
-def _open_or_create_store(args, sink=None):
+def _open_or_create_store(args, sink=None, tracer=None):
     """Recover (or initialise) the durable corpus + router.
 
     Returns (store, router, service). A recovered store restores the
@@ -106,9 +115,11 @@ def _open_or_create_store(args, sink=None):
         lfx = store.index
         print(f"created store at {args.data_dir}: {ds.n} vectors, "
               f"router artifact linked")
-    svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink)
+    svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink,
+                                tracer=tracer)
            if isinstance(lfx, ShardedLiveIndex)
-           else RouterService(lfx, router, t=0.9, telemetry=sink))
+           else RouterService(lfx, router, t=0.9, telemetry=sink,
+                              tracer=tracer))
     return store, router, svc
 
 
@@ -140,6 +151,16 @@ def main():
                          "--telemetry): sampled exact-recall audits fold "
                          "into an EWMA table; drift triggers background "
                          "retrain + shadow-eval + atomic artifact swap")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach a Tracer: hierarchical spans across "
+                         "route/execute/queue/cache/live stages with "
+                         "tail-based sampling; prints the slowest span "
+                         "tree and dumps Perfetto JSON + the flight "
+                         "recorder under artifacts/serve/")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics and /healthz on this "
+                         "port (0 = auto-pick) for the duration of the "
+                         "run; composes with --telemetry/--trace/--cache")
     args = ap.parse_args()
     if args.online_router:
         args.telemetry = True
@@ -149,9 +170,16 @@ def main():
     from repro.ann.telemetry import OnlineRouterAdapter, TelemetrySink
     sink = (TelemetrySink(capacity=4096, reservoir=128, seed=11)
             if args.telemetry else None)
+    tracer = None
+    if args.trace:
+        from repro.ann.trace import Tracer
+        # slow_ms=0: keep everything in this short demo run so the
+        # flight recorder and Perfetto dump are never empty
+        tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=32,
+                        seed=11)
     store = None
     if args.data_dir:
-        store, router, svc = _open_or_create_store(args, sink)
+        store, router, svc = _open_or_create_store(args, sink, tracer)
         ds = svc.index.ds        # the recovered sealed base
     else:
         spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5,
@@ -165,19 +193,32 @@ def main():
             fx.close()           # the live handle owns its own tensors
             lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
                    else LiveFilteredIndex(ds))
-            svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink)
+            svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink,
+                                        tracer=tracer)
                    if args.shards > 1
-                   else RouterService(lfx, router, t=0.9, telemetry=sink))
+                   else RouterService(lfx, router, t=0.9, telemetry=sink,
+                                      tracer=tracer))
         elif args.shards > 1:
             fx.close()           # collect() is done; shards own their tensors
             sfx = ShardedFilteredIndex(ds, args.shards)
-            svc = ShardedRouterService(sfx, router, t=0.9, telemetry=sink)
+            svc = ShardedRouterService(sfx, router, t=0.9, telemetry=sink,
+                                       tracer=tracer)
         else:
-            svc = RouterService(fx, router, t=0.9, telemetry=sink)
+            svc = RouterService(fx, router, t=0.9, telemetry=sink,
+                                tracer=tracer)
     serving = svc
     if args.cache:
         from repro.ann.cache import SemanticResultCache
         serving = SemanticResultCache(svc, threshold=0.98, capacity=2048)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from repro.ann.metrics import MetricsServer, metrics_text
+        cache_obj = serving if args.cache else None
+        metrics_srv = MetricsServer(
+            lambda: metrics_text(sink=sink, tracer=tracer,
+                                 cache=cache_obj),
+            port=args.metrics_port)
+        print(f"metrics: {metrics_srv.url}/metrics + /healthz")
     print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
           f"live={args.live}, durable={bool(args.data_dir)}, "
           f"cache={args.cache}); router "
@@ -325,6 +366,31 @@ def main():
     print("sample generations:", out[:2].tolist())
     hit = (retrieved >= 0).any(1).mean()
     print(f"retrieval hit rate: {hit:.2f}")
+    if tracer is not None:
+        from repro.common import artifacts_dir
+        ts = tracer.stats()
+        flight = tracer.flight()
+        out_dir = artifacts_dir("serve")
+        tracer.dump_flight_json(os.path.join(out_dir, "flight.json"))
+        with open(os.path.join(out_dir, "trace_perfetto.json"), "w") as f:
+            f.write(tracer.perfetto_json())
+        print(f"trace: {ts['traces']} traces ({ts['kept']} kept, "
+              f"{ts['slow']} slow, {ts['errors']} errored); flight + "
+              f"Perfetto JSON -> {out_dir}")
+        if flight:
+            worst = max(flight, key=lambda r: r["duration_ms"])
+            root = worst["root"]
+            print(f"  slowest: {root.name} {worst['duration_ms']:.1f} ms "
+                  f"[{worst['reason']}] {worst['annotations']}")
+            for child in root.children:
+                print(f"    {child.name}: {child.duration_s*1e3:.1f} ms "
+                      f"{child.attrs}")
+    if metrics_srv is not None:
+        import urllib.request
+        n_lines = len(urllib.request.urlopen(
+            metrics_srv.url + "/metrics", timeout=5).read().splitlines())
+        print(f"metrics: final scrape {n_lines} exposition lines")
+        metrics_srv.close()
     if args.cache:
         serving.close()          # drop entries; the service stays open
     if store is not None:

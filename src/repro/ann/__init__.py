@@ -7,7 +7,8 @@ micro-batch queue, made writable by `LiveFilteredIndex`/
 tombstones, snapshot epochs, and background compaction — and made
 durable by `IndexStore` — segment files, write-ahead log, stable
 external keys, crash recovery — see docs/serving.md and
-docs/persistence.md)."""
+docs/persistence.md; and observable end to end by `Tracer` spans +
+the Prometheus `metrics_text` exposition — see docs/observability.md)."""
 
 from repro.ann.predicates import Predicate
 from repro.ann.dataset import ANNDataset
@@ -15,10 +16,13 @@ from repro.ann.cache import SemanticResultCache
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult)
 from repro.ann.live import LiveFilteredIndex, LiveSnapshot, ShardedLiveIndex
+from repro.ann.metrics import MetricsServer, metrics_text
 from repro.ann.sharded import ShardedFilteredIndex
 from repro.ann.store import IndexStore, WriteAheadLog
+from repro.ann.trace import Span, Tracer
 
 __all__ = ["Predicate", "ANNDataset", "FilteredIndex", "QueryBatch",
            "RoutingDecision", "SearchResult", "SemanticResultCache",
            "ShardedFilteredIndex", "LiveFilteredIndex", "LiveSnapshot",
-           "ShardedLiveIndex", "IndexStore", "WriteAheadLog"]
+           "ShardedLiveIndex", "IndexStore", "WriteAheadLog",
+           "Span", "Tracer", "MetricsServer", "metrics_text"]

@@ -19,6 +19,12 @@ and serves two kinds of hits:
   vectors, re-sorted — so distances are exact for the returned rows,
   but the row *set* is the neighbour's top-k: an approximation that is
   only as good as the threshold. `threshold=None` disables this path.
+* **transfer** — when no same-bitmap neighbour clears the threshold, a
+  cached query under a provably *looser* filter may still serve: OR
+  with cached labels ⊇ the query's, AND with cached labels ⊆ the
+  query's.  Served only if every valid cached row also satisfies the
+  tighter query filter (packed-bitmap re-check per row), which makes
+  the cached top-k exactly the query's top-k over its admissible rows.
 
 The semantic lookup reuses our own `FilteredIndex` as the cache's
 lookup structure: cached query vectors + bitmaps form a tiny
@@ -56,6 +62,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.ann import trace
 from repro.ann.dataset import ANNDataset
 from repro.ann.index import FilteredIndex, QueryBatch, SearchResult
 from repro.ann.predicates import Predicate
@@ -151,6 +158,12 @@ class _SimPart:
         out.extend(e for e in self.tail if e.bitmap.tobytes() == bkey)
         return out
 
+    def entries(self) -> list[_Entry]:
+        """Every alive entry in the partition (bitmap-agnostic scan —
+        the subset/superset transfer probe's candidate pool)."""
+        return ([e for e in self.built if e.alive]
+                + [e for e in self.tail if e.alive])
+
     def close(self) -> None:
         if self.fx is not None:
             self.fx.close()
@@ -227,9 +240,9 @@ class SemanticResultCache:
         self._parts: dict[tuple, _SimPart] = {}
         self._seen: dict[tuple, int] = {}        # admission doorkeeper
         self._counters = {
-            "hits_exact": 0, "hits_semantic": 0, "misses": 0,
-            "insertions": 0, "evictions_ttl": 0, "evictions_stale": 0,
-            "evictions_capacity": 0}
+            "hits_exact": 0, "hits_semantic": 0, "hits_transfer": 0,
+            "misses": 0, "insertions": 0, "evictions_ttl": 0,
+            "evictions_stale": 0, "evictions_capacity": 0}
 
     # ---- facade ----------------------------------------------------------
     @property
@@ -243,6 +256,11 @@ class SemanticResultCache:
     @property
     def telemetry(self):
         return self._sink
+
+    @property
+    def tracer(self):
+        """The wrapped service's tracer (the queue discovers it here)."""
+        return getattr(self.service, "tracer", None)
 
     def close(self) -> None:
         """Drop every entry and the built similarity indexes. The
@@ -268,7 +286,7 @@ class SemanticResultCache:
             c["entries"] = len(self._entries)
             c["capacity"] = self.capacity
             c["partitions"] = len(self._parts)
-        hits = c["hits_exact"] + c["hits_semantic"]
+        hits = c["hits_exact"] + c["hits_semantic"] + c["hits_transfer"]
         seen = hits + c["misses"]
         c["hit_rate"] = round(hits / seen, 4) if seen else None
         return c
@@ -384,12 +402,84 @@ class SemanticResultCache:
                 / (vnorm * cand.vnorm)
             if cos >= best_cos:
                 best, best_cos = cand, cos
+        if best is not None and self._fresh(best, now):
+            self._entries.move_to_end(best.ekey)
+            self._note("hits_semantic")
+            ids, _, keys = self._current_rows(best)
+            return (*self._rescore(vector, ids, keys), "semantic")
+        if Predicate(pred) in (Predicate.AND, Predicate.OR):
+            return self._probe_transfer(part, vector, vnorm, bitmap,
+                                        Predicate(pred), k, now)
+        return None
+
+    def _row_bitmaps(self, ids: np.ndarray) -> np.ndarray | None:
+        """[R, W] packed bitmaps of current-generation row ids, or None
+        when they can't be resolved (conservative: no transfer)."""
+        bm_of = getattr(self._index, "_bitmaps_of", None)
+        if callable(bm_of):
+            try:
+                return np.asarray(bm_of(np.asarray(ids, np.int64)),
+                                  dtype=np.uint32)
+            except Exception:
+                return None
+        ds = getattr(self._index, "ds", None)
+        if ds is None:
+            return None
+        ids = np.asarray(ids)
+        if ids.size and int(ids.max()) >= ds.n:
+            return None   # rows beyond the sealed dataset (sharded delta)
+        return np.asarray(ds.bitmaps[ids], dtype=np.uint32)
+
+    def _probe_transfer(self, part, vector, vnorm, bitmap,
+                        pred: Predicate, k, now):
+        """Subset/superset bitmap transfer: serve from a cached entry
+        whose filter is provably *looser* than the query's — OR with
+        cached labels ⊇ query labels, AND with cached labels ⊆ query
+        labels — when every valid cached row also passes the tighter
+        query filter.  The query's admissible rows are then a subset of
+        the cached search's, and a top-k that lies entirely inside the
+        subset is that subset's top-k too, so the transfer is exact for
+        the served row set.  Any valid row failing the re-check means
+        rows outside the query's filter may have crowded out admissible
+        ones — that's a miss, never a guess."""
+        qb = bitmap
+        qkey = bitmap.tobytes()
+        best, best_cos = None, float(self.threshold)
+        for cand in part.entries():
+            if cand.vnorm == 0.0 or cand.bitmap.tobytes() == qkey:
+                continue
+            cb = cand.bitmap
+            if pred == Predicate.OR:
+                looser = bool(((cb & qb) == qb).all())   # qb ⊆ cb
+            else:                                        # AND
+                # a label-less cached filter is invisible to the write
+                # clock — new rows matching the query would go unseen
+                looser = (cand.labels.size > 0
+                          and bool(((cb & qb) == cb).all()))  # cb ⊆ qb
+            if not looser:
+                continue
+            cos = float(vector.astype(np.float64)
+                        @ cand.vector.astype(np.float64)) \
+                / (vnorm * cand.vnorm)
+            if cos >= best_cos:
+                best, best_cos = cand, cos
         if best is None or not self._fresh(best, now):
             return None
-        self._entries.move_to_end(best.ekey)
-        self._note("hits_semantic")
         ids, _, keys = self._current_rows(best)
-        return (*self._rescore(vector, ids, keys), "semantic")
+        valid = ids >= 0
+        if valid.any():
+            rbms = self._row_bitmaps(ids[valid])
+            if rbms is None:
+                return None
+            if pred == Predicate.OR:
+                ok = ((rbms & qb) != 0).any(axis=1)
+            else:
+                ok = ((rbms & qb) == qb).all(axis=1)
+            if not bool(ok.all()):
+                return None
+        self._entries.move_to_end(best.ekey)
+        self._note("hits_transfer")
+        return (*self._rescore(vector, ids, keys), "transfer")
 
     def probe_one(self, vector, bitmap, pred, k: int = 10):
         """Single-query probe for `AsyncBatchQueue.submit`: a
@@ -397,12 +487,21 @@ class SemanticResultCache:
         path bypasses routing and search entirely."""
         from repro.ann.service import QueryResult
 
+        t0 = time.monotonic()
         hit = self._probe_query(np.asarray(vector, dtype=np.float32),
                                 np.asarray(bitmap, dtype=np.uint32),
                                 Predicate(pred), int(k))
         if hit is None:
             return None
         ids, dists, keys, kind = hit
+        tracer = self.tracer
+        if tracer is not None:
+            # hits never reach the batch pipeline, so they get their own
+            # (tiny, retroactive) trace — cache provenance + latency
+            root = tracer.start("cache_probe", pred=int(pred), k=int(k),
+                                cache=kind)
+            root.t0 = t0
+            tracer.finish(root)
         return QueryResult(ids=ids, distances=dists, decision=None,
                            keys=keys, cache=kind)
 
@@ -412,42 +511,51 @@ class SemanticResultCache:
         """Probe every query; the misses — and only the misses — flow
         through the wrapped service as one sub-batch, and their results
         are admitted. `res.cache[i]` says how query i was served."""
-        t0 = time.perf_counter()
-        hits = [self._probe_query(batch.vectors[i], batch.bitmaps[i],
-                                  batch.pred, batch.k)
-                for i in range(batch.q)]
-        miss = [i for i, h in enumerate(hits) if h is None]
-        ids = np.full((batch.q, batch.k), -1, np.int32)
-        dists = np.full((batch.q, batch.k), np.nan, np.float32)
-        keys = np.full((batch.q, batch.k), -1, np.int64)
-        tags: list = [None] * batch.q
-        decisions = None
-        timings: dict = {}
-        for i, h in enumerate(hits):
-            if h is not None:
-                ids[i], dists[i], keys[i], tags[i] = h
-        t1 = time.perf_counter()
-        if miss:
-            sub = batch.take(np.asarray(miss))
-            clock0, gen0 = self._stamp()
-            res = self._fill(sub, t=t)
-            self._admit(sub, res, clock0, gen0)
-            midx = np.asarray(miss)
-            ids[midx] = res.ids
-            dists[midx] = res.distances
-            if res.keys is not None:
-                keys[midx] = res.keys
-            if res.decisions is not None:
-                decisions = [None] * batch.q
-                for j, i in enumerate(miss):
-                    decisions[i] = res.decisions[j]
-            timings.update(res.timings)
-        total = time.perf_counter() - t0
-        timings["cache_s"] = timings.get("cache_s", 0.0) + (t1 - t0)
-        timings["total_s"] = total
-        return SearchResult(ids=ids, distances=dists,
-                            decisions=decisions, timings=timings,
-                            keys=keys, cache=tags)
+        with trace.maybe_trace(self.tracer, "cache_search", q=batch.q):
+            t0 = time.perf_counter()
+            with trace.span("cache.probe", q=batch.q):
+                hits = [self._probe_query(batch.vectors[i],
+                                          batch.bitmaps[i],
+                                          batch.pred, batch.k)
+                        for i in range(batch.q)]
+                miss = [i for i, h in enumerate(hits) if h is None]
+                trace.annotate(misses=len(miss))
+            ids = np.full((batch.q, batch.k), -1, np.int32)
+            dists = np.full((batch.q, batch.k), np.nan, np.float32)
+            keys = np.full((batch.q, batch.k), -1, np.int64)
+            tags: list = [None] * batch.q
+            decisions = None
+            timings: dict = {}
+            for i, h in enumerate(hits):
+                if h is not None:
+                    ids[i], dists[i], keys[i], tags[i] = h
+            t1 = time.perf_counter()
+            if miss:
+                sub = batch.take(np.asarray(miss))
+                clock0, gen0 = self._stamp()
+                res = self._fill(sub, t=t)
+                with trace.span("cache.admit", q=sub.q):
+                    self._admit(sub, res, clock0, gen0)
+                midx = np.asarray(miss)
+                ids[midx] = res.ids
+                dists[midx] = res.distances
+                if res.keys is not None:
+                    keys[midx] = res.keys
+                if res.decisions is not None:
+                    decisions = [None] * batch.q
+                    for j, i in enumerate(miss):
+                        decisions[i] = res.decisions[j]
+                timings.update(res.timings)
+            total = time.perf_counter() - t0
+            timings["cache_s"] = timings.get("cache_s", 0.0) + (t1 - t0)
+            timings["total_s"] = total
+            kinds: dict[str, int] = {}
+            for tag in tags:
+                kinds[tag or "miss"] = kinds.get(tag or "miss", 0) + 1
+            trace.annotate(cache=kinds)
+            return SearchResult(ids=ids, distances=dists,
+                                decisions=decisions, timings=timings,
+                                keys=keys, cache=tags)
 
     def _execute(self, batch: QueryBatch, decisions) -> SearchResult:
         """`execute` facade for the pipelined queue: run the inner
@@ -455,7 +563,8 @@ class SemanticResultCache:
         `submit`, so everything reaching here is a miss."""
         clock0, gen0 = self._stamp()
         res = self.service.execute(batch, decisions)
-        self._admit(batch, res, clock0, gen0)
+        with trace.span("cache.admit", q=batch.q):
+            self._admit(batch, res, clock0, gen0)
         return res
 
     # ---- admission -------------------------------------------------------

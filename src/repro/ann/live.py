@@ -70,6 +70,7 @@ import numpy as np
 from repro.ann import engine as engine_mod
 from repro.ann import labels as lb
 from repro.ann import registry as registry_mod
+from repro.ann import trace
 from repro.ann.dataset import ANNDataset
 from repro.ann.engine import ParamSetting, resolve_setting
 from repro.ann.index import (FilteredIndex, QueryBatch, SearchResult,
@@ -1097,6 +1098,7 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         k = batch.k
         kb = (max(k, min(_bucket(k + base_dead), snap.base_n))
               if base_dead else k)
+        trace.annotate(overfetch=int(kb))
         b_ids, b_raw = fx.run_method(
             self._resolve(method), setting,
             QueryBatch(batch.vectors, batch.bitmaps, batch.pred, kb))
@@ -1118,33 +1120,38 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         tomb = snap.tombstones
         base_dead = int(tomb[: snap.base_n].sum())
         t0 = time.perf_counter()
-        b_ids, b_raw = self._run_base(method, setting, batch, snap,
-                                      base_dead)
+        with trace.span("live.base", base_n=int(snap.base_n),
+                        dead=base_dead):
+            b_ids, b_raw = self._run_base(method, setting, batch, snap,
+                                          base_dead)
         t1 = time.perf_counter()
-        dvec, dnorm, dbm = snap.delta.device_view(
-            snap.delta_rows, self._device_scope)
-        tomb_words = self._tomb_words(snap)
-        sel = self._delta_select(snap, batch, b_ids, b_raw)
-        if sel is not None and sel.size == 0:
-            # every sealed cluster was pruned and there is no tail row.
-            # Re-include one pruned row to keep the kernel operand
-            # non-empty: a pruned row provably cannot displace any
-            # query's top-k, so the result bits are unchanged.
-            sel = np.zeros(1, np.int32)
-        qv = jnp.asarray(batch.vectors)
-        qb = jnp.asarray(batch.bitmaps)
-        if sel is None:
-            ids, raw = ops.fused_live_topk(
-                qv, qb, b_ids, b_raw, dvec, dnorm, dbm,
-                np.int32(snap.base_n), tomb_words,
-                pred=int(batch.pred), k=k)
-        else:
-            ids, raw = ops.fused_live_topk_select(
-                qv, qb, b_ids, b_raw, dvec, dnorm, dbm, sel,
-                np.int32(snap.base_n), tomb_words,
-                pred=int(batch.pred), k=k)
-        ids = np.asarray(ids, dtype=np.int32)
-        raw = np.asarray(raw, dtype=np.float32)
+        with trace.span("live.delta", rows=int(snap.delta_rows),
+                        fused=True):
+            dvec, dnorm, dbm = snap.delta.device_view(
+                snap.delta_rows, self._device_scope)
+            tomb_words = self._tomb_words(snap)
+            sel = self._delta_select(snap, batch, b_ids, b_raw)
+            if sel is not None and sel.size == 0:
+                # every sealed cluster was pruned and there is no tail
+                # row.  Re-include one pruned row to keep the kernel
+                # operand non-empty: a pruned row provably cannot
+                # displace any query's top-k, so the result bits are
+                # unchanged.
+                sel = np.zeros(1, np.int32)
+            qv = jnp.asarray(batch.vectors)
+            qb = jnp.asarray(batch.bitmaps)
+            if sel is None:
+                ids, raw = ops.fused_live_topk(
+                    qv, qb, b_ids, b_raw, dvec, dnorm, dbm,
+                    np.int32(snap.base_n), tomb_words,
+                    pred=int(batch.pred), k=k)
+            else:
+                ids, raw = ops.fused_live_topk_select(
+                    qv, qb, b_ids, b_raw, dvec, dnorm, dbm, sel,
+                    np.int32(snap.base_n), tomb_words,
+                    pred=int(batch.pred), k=k)
+            ids = np.asarray(ids, dtype=np.int32)
+            raw = np.asarray(raw, dtype=np.float32)
         t2 = time.perf_counter()
         self._stage_add({"base_s": t1 - t0, "delta_s": t2 - t1,
                          "merge_s": 0.0})    # merge happens in-kernel
@@ -1163,8 +1170,10 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         parts = []
         t0 = time.perf_counter()
         if snap.base_n:
-            b_ids, b_raw = self._run_base(method, setting, batch, snap,
-                                          base_dead)
+            with trace.span("live.base", base_n=int(snap.base_n),
+                            dead=base_dead):
+                b_ids, b_raw = self._run_base(method, setting, batch,
+                                              snap, base_dead)
             if base_dead:
                 valid = b_ids >= 0
                 dead = np.zeros_like(valid)
@@ -1181,11 +1190,14 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
             # exact overfetch: top-(k + dead) over the delta always
             # contains the live top-k
             kd = _bucket(k + min(delta_dead, snap.delta_rows))
-            dvec, dnorm, dbm = snap.delta.device_view(
-                snap.delta_rows, self._device_scope)
-            d_ids, d_raw = ops.masked_topk(
-                jnp.asarray(batch.vectors), jnp.asarray(batch.bitmaps),
-                dvec, dnorm, dbm, pred=int(batch.pred), k=kd)
+            with trace.span("live.delta", rows=int(snap.delta_rows),
+                            overfetch=int(kd), fused=False):
+                dvec, dnorm, dbm = snap.delta.device_view(
+                    snap.delta_rows, self._device_scope)
+                d_ids, d_raw = ops.masked_topk(
+                    jnp.asarray(batch.vectors),
+                    jnp.asarray(batch.bitmaps),
+                    dvec, dnorm, dbm, pred=int(batch.pred), k=kd)
             d_ids = np.asarray(d_ids, dtype=np.int32)
             d_raw = np.asarray(d_raw, dtype=np.float32)
             # sentinel/pad rows are already −1; rows past the watermark
@@ -1202,7 +1214,9 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
             ids = np.full((batch.q, k), -1, np.int32)
             raw = np.full((batch.q, k), np.inf, np.float32)
         else:
-            ids, raw = merge_candidates(*stack_candidates(parts), k=k)
+            with trace.span("live.merge"):
+                ids, raw = merge_candidates(*stack_candidates(parts),
+                                            k=k)
         t3 = time.perf_counter()
         self._stage_add({"base_s": t1 - t0, "delta_s": t2 - t1,
                          "merge_s": t3 - t2})
@@ -2011,20 +2025,34 @@ class ShardedLiveIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         shards, bounds = snap.shards, snap.bounds
         snaps, gmaps = snap.snaps, snap.gmaps
         try:
-            def shard_run(sv):
+            parent = trace.current()
+            times = [0.0] * len(shards)
+
+            def shard_run(jsv):
                 # drain the shard's stage timings *in the worker thread*
                 # (they live on a thread-local) and return them alongside
-                out = sv[0].run_method(method, setting, batch,
-                                       snapshot=sv[1])
+                j, sv = jsv
+                s0 = time.perf_counter()
+                with trace.attach(parent):
+                    with trace.span("shard", shard=j):
+                        out = sv[0].run_method(method, setting, batch,
+                                               snapshot=sv[1])
+                times[j] = time.perf_counter() - s0
                 return out, sv[0].pop_stage_timings()
 
-            ran = self._map_shards(shard_run, list(zip(shards, snaps)))
+            ran = self._map_shards(shard_run,
+                                   list(enumerate(zip(shards, snaps))))
             per = [r for r, _ in ran]
             # shards overlap in wall-clock: report the slowest stage
             for key in ("base_s", "delta_s"):
                 vals = [t.get(key, 0.0) for _, t in ran]
                 if any(vals):
                     self._stage_add({key: max(vals)})
+            # per-shard wall seconds + the straggler (the latency the
+            # fan-out actually waits for — a sum would hide it)
+            self._stage_add({f"shard{j}_s": s
+                             for j, s in enumerate(times)})
+            self._stage_add({"shard_max_s": max(times)})
             t0 = time.perf_counter()
             parts = []
             for s, ((ids, raw), ssnap) in enumerate(zip(per, snaps)):

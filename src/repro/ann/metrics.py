@@ -1,0 +1,290 @@
+"""Prometheus text exposition + a lightweight scrape endpoint.
+
+`metrics_text()` renders one consistent snapshot of the serving stack's
+observability surfaces in Prometheus text format 0.0.4:
+
+* `TelemetrySink` — query/batch counters, per-(method, ps, predicate)
+  cells, per-shard stage-time cells (skew), named counters, and the
+  ring-derived latency percentiles as gauges;
+* `Tracer` — per-span latency histograms with *fixed* log2-µs buckets
+  (`trace.BUCKET_BOUNDS_US` — bucket layout is independent of any ring
+  capacity, so rates and quantiles are comparable across deployments
+  and restarts) plus trace/keep/drop counters;
+* `SemanticResultCache` — hit/miss/eviction counters and occupancy;
+* `AsyncBatchQueue` — served queries/batches, submit-time cache hits,
+  queue-depth high-water mark, flush reasons.
+
+`MetricsServer` serves `/metrics` (the exposition) and `/healthz` on a
+daemon `ThreadingHTTPServer` — enough for a scraper or a load balancer
+probe without pulling in any dependency.  `rag_serve.py --metrics-port`
+wires it up.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Callable
+
+__all__ = ["metrics_text", "MetricsServer"]
+
+_PREFIX = "ann"
+
+
+def _esc(v) -> str:
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _fmt(value) -> str:
+    if value is None:
+        return "0"
+    if isinstance(value, float):
+        if math.isinf(value):
+            return "+Inf" if value > 0 else "-Inf"
+        if math.isnan(value):
+            return "NaN"
+    return repr(float(value)) if isinstance(value, float) else str(value)
+
+
+class _Writer:
+    def __init__(self):
+        self.lines: list[str] = []
+        self._typed: set[str] = set()
+
+    def header(self, name: str, mtype: str, help_: str) -> None:
+        if name in self._typed:
+            return
+        self._typed.add(name)
+        self.lines.append(f"# HELP {name} {help_}")
+        self.lines.append(f"# TYPE {name} {mtype}")
+
+    def sample(self, name: str, labels: dict | None, value) -> None:
+        if labels:
+            lab = ",".join(f'{k}="{_esc(v)}"' for k, v in labels.items())
+            self.lines.append(f"{name}{{{lab}}} {_fmt(value)}")
+        else:
+            self.lines.append(f"{name} {_fmt(value)}")
+
+    def text(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def _sink_metrics(w: _Writer, sink, prefix: str) -> None:
+    from repro.ann.predicates import Predicate
+
+    s = sink.stats()
+    w.header(f"{prefix}_queries_total", "counter",
+             "Queries recorded by the telemetry sink.")
+    w.sample(f"{prefix}_queries_total", None, s["queries"])
+    w.header(f"{prefix}_batches_total", "counter",
+             "Executed batches recorded by the telemetry sink.")
+    w.sample(f"{prefix}_batches_total", None, s["batches"])
+    w.header(f"{prefix}_latency_us", "gauge",
+             "Ring-derived per-query latency percentiles (µs).")
+    for q, v in s["latency_us"].items():
+        w.sample(f"{prefix}_latency_us", {"quantile": q}, v)
+    w.header(f"{prefix}_method_queries_total", "counter",
+             "Queries served per routed method.")
+    for m, n in sorted(s["by_method"].items()):
+        w.sample(f"{prefix}_method_queries_total", {"method": m}, n)
+    w.header(f"{prefix}_cell_queries_total", "counter",
+             "Queries per (method, param-setting, predicate) cell.")
+    w.header(f"{prefix}_cell_latency_us_mean", "gauge",
+             "Mean per-query latency per cell (µs).")
+    for (m, ps, p), (n, us) in sorted(sink.cell_aggregates().items(),
+                                      key=lambda kv: str(kv[0])):
+        if n <= 0:
+            continue
+        lab = {"method": m, "ps": ps if ps is not None else "",
+               "pred": Predicate(p).name}
+        w.sample(f"{prefix}_cell_queries_total", lab, n)
+        w.sample(f"{prefix}_cell_latency_us_mean", lab, us / n)
+    w.header(f"{prefix}_shard_stage_seconds_total", "counter",
+             "Per-shard stage seconds (fan-out skew).")
+    w.header(f"{prefix}_shard_stage_calls_total", "counter",
+             "Per-shard stage fold count.")
+    for (sh, stage), (n, sec) in sorted(sink.shard_aggregates().items()):
+        lab = {"shard": sh, "stage": stage}
+        w.sample(f"{prefix}_shard_stage_seconds_total", lab, sec)
+        w.sample(f"{prefix}_shard_stage_calls_total", lab, n)
+    w.header(f"{prefix}_counter", "counter",
+             "Named sink counters (stage seconds, cache notes, waits).")
+    for name, val in sorted(sink.counter_values().items()):
+        w.sample(f"{prefix}_counter", {"name": name}, val)
+
+
+def _tracer_metrics(w: _Writer, tracer, prefix: str) -> None:
+    from repro.ann.trace import BUCKET_BOUNDS_US
+
+    t = tracer.stats()
+    w.header(f"{prefix}_traces_total", "counter",
+             "Finished traces, by sampling outcome.")
+    for key in ("traces", "kept", "dropped", "slow", "errors"):
+        w.sample(f"{prefix}_traces_total", {"outcome": key}, t[key])
+    w.header(f"{prefix}_flight_size", "gauge",
+             "Span trees currently held by the flight recorder.")
+    w.sample(f"{prefix}_flight_size", None, t["flight_size"])
+    name = f"{prefix}_span_latency_us"
+    w.header(name, "histogram",
+             "Per-span latency, fixed log2-µs buckets "
+             "(independent of ring capacity).")
+    for span_name, h in sorted(tracer.histograms().items()):
+        acc = 0
+        for bound, c in zip(BUCKET_BOUNDS_US, h["counts"]):
+            acc += c
+            le = "+Inf" if math.isinf(bound) else _fmt(bound)
+            w.sample(f"{name}_bucket", {"span": span_name, "le": le}, acc)
+        w.sample(f"{name}_sum", {"span": span_name}, h["sum_us"])
+        w.sample(f"{name}_count", {"span": span_name}, h["count"])
+
+
+def _cache_metrics(w: _Writer, cache, prefix: str) -> None:
+    c = cache.stats()
+    w.header(f"{prefix}_cache_events_total", "counter",
+             "Semantic-cache events (hits by kind, misses, evictions).")
+    for key, val in sorted(c.items()):
+        if key in ("entries", "capacity", "partitions", "hit_rate"):
+            continue
+        w.sample(f"{prefix}_cache_events_total", {"event": key}, val)
+    w.header(f"{prefix}_cache_entries", "gauge", "Cached entries.")
+    w.sample(f"{prefix}_cache_entries", None, c["entries"])
+    w.header(f"{prefix}_cache_capacity", "gauge", "Cache capacity.")
+    w.sample(f"{prefix}_cache_capacity", None, c["capacity"])
+    w.header(f"{prefix}_cache_hit_rate", "gauge",
+             "Lifetime hit rate (0 when nothing probed yet).")
+    w.sample(f"{prefix}_cache_hit_rate", None, c["hit_rate"] or 0.0)
+
+
+def _queue_metrics(w: _Writer, queue, prefix: str) -> None:
+    s = queue.stats()
+    w.header(f"{prefix}_queue_queries_total", "counter",
+             "Queries served through the async batch queue.")
+    w.sample(f"{prefix}_queue_queries_total", None, s["queries"])
+    w.header(f"{prefix}_queue_batches_total", "counter",
+             "Micro-batches flushed by the queue worker.")
+    w.sample(f"{prefix}_queue_batches_total", None, s["batches"])
+    w.header(f"{prefix}_queue_cache_hits_total", "counter",
+             "Queries answered from the cache at submit time.")
+    w.sample(f"{prefix}_queue_cache_hits_total", None, s["cache_hits"])
+    w.header(f"{prefix}_queue_pending", "gauge",
+             "Requests currently waiting for a flush.")
+    w.sample(f"{prefix}_queue_pending", None, s["pending"])
+    w.header(f"{prefix}_queue_depth_high_water", "gauge",
+             "Queue-depth high-water mark.")
+    w.sample(f"{prefix}_queue_depth_high_water", None,
+             s["max_queue_depth"])
+    w.header(f"{prefix}_queue_flushes_total", "counter",
+             "Flushes by trigger reason.")
+    for reason, n in sorted(s["flush_reasons"].items()):
+        w.sample(f"{prefix}_queue_flushes_total", {"reason": reason}, n)
+
+
+def metrics_text(*, sink=None, tracer=None, cache=None, queue=None,
+                 service=None, prefix: str = _PREFIX) -> str:
+    """Render one Prometheus text-format snapshot of whatever surfaces
+    are passed.  `service=` is a convenience: its `telemetry` and
+    `tracer` attributes fill `sink`/`tracer` when those are omitted
+    (and a `SemanticResultCache` passed as `service` fills `cache`)."""
+    if service is not None:
+        if sink is None:
+            sink = getattr(service, "telemetry", None)
+        if tracer is None:
+            tracer = getattr(service, "tracer", None)
+        if cache is None and hasattr(service, "probe_one"):
+            cache = service
+    w = _Writer()
+    if sink is not None:
+        _sink_metrics(w, sink, prefix)
+    if tracer is not None:
+        _tracer_metrics(w, tracer, prefix)
+    if cache is not None:
+        _cache_metrics(w, cache, prefix)
+    if queue is not None:
+        _queue_metrics(w, queue, prefix)
+    if not w.lines:
+        w.header(f"{prefix}_up", "gauge", "Exporter liveness.")
+        w.sample(f"{prefix}_up", None, 1)
+    return w.text()
+
+
+class MetricsServer:
+    """Daemon HTTP server exposing `/metrics` (Prometheus text) and
+    `/healthz` (JSON liveness).
+
+    Args:
+        render: zero-arg callable returning the exposition text —
+            typically `lambda: metrics_text(sink=..., tracer=...)`.
+        host / port: bind address; port 0 picks a free port (read it
+            back from `.port`).
+        health: optional zero-arg callable returning a JSON-serialisable
+            health payload (merged over {"status": "ok"}).
+    """
+
+    def __init__(self, render: Callable[[], str], *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 health: Callable[[], dict] | None = None):
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+        outer = self
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802  (http.server API)
+                if self.path.split("?", 1)[0] == "/metrics":
+                    try:
+                        body = outer.render().encode()
+                    except Exception as e:   # surface, don't kill serving
+                        self._reply(500, f"# render error: {e}\n".encode(),
+                                    "text/plain; charset=utf-8")
+                        return
+                    self._reply(200, body,
+                                "text/plain; version=0.0.4; charset=utf-8")
+                elif self.path.split("?", 1)[0] == "/healthz":
+                    payload = {"status": "ok"}
+                    if outer.health is not None:
+                        try:
+                            payload.update(outer.health())
+                        except Exception as e:
+                            payload = {"status": "degraded",
+                                       "error": str(e)}
+                    self._reply(200, (json.dumps(payload) + "\n").encode(),
+                                "application/json")
+                else:
+                    self._reply(404, b"not found\n",
+                                "text/plain; charset=utf-8")
+
+            def _reply(self, code: int, body: bytes, ctype: str) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:   # silence access log
+                pass
+
+        self.render = render
+        self.health = health
+        self._srv = ThreadingHTTPServer((host, int(port)), _Handler)
+        self._srv.daemon_threads = True
+        self.host, self.port = self._srv.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._srv.serve_forever, name="ann-metrics",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self) -> None:
+        self._srv.shutdown()
+        self._srv.server_close()
+        self._thread.join(timeout=10)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.ann import engine
 from repro.ann import registry as registry_mod
+from repro.ann import trace
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult, exact_distances)
 from repro.ann.predicates import Predicate
@@ -72,16 +73,22 @@ class RouterService:
             ps, predicate, k, latency share, live generation) and offers
             queries to the audit reservoir. None (default) keeps the hot
             path telemetry-free.
+        tracer: optional `repro.ann.trace.Tracer`; when set, `search`
+            opens a request-scoped span tree (route → execute →
+            per-group / live-stage / store spans) with tail-based
+            sampling and the flight recorder. None (default) keeps the
+            hot path trace-free — the span calls below are no-ops.
     """
 
     def __init__(self, index: FilteredIndex, router, *, t: float = 0.9,
-                 methods=None, telemetry=None):
+                 methods=None, telemetry=None, tracer=None):
         self.index = index
         self.router = router
         self.t = float(t)
         self.methods = (methods if methods is not None
                         else registry_mod.candidate_methods())
         self.telemetry = telemetry
+        self.tracer = tracer
 
     @property
     def ds(self):
@@ -98,8 +105,12 @@ class RouterService:
               t: float | None = None) -> list[RoutingDecision]:
         """Per-query `RoutingDecision`s without executing the searches
         (Algorithm 2 at threshold `t`, default the service's)."""
-        r_hat = self.predict(batch)
-        return self._decide(r_hat, batch, t)
+        with trace.span("route", q=batch.q):
+            r_hat = self.predict(batch)
+            decisions = self._decide(r_hat, batch, t)
+            trace.annotate(table_version=getattr(
+                self.router.table, "version", None))
+            return decisions
 
     def _decide(self, r_hat, batch, t):
         t = self.t if t is None else t
@@ -123,6 +134,11 @@ class RouterService:
         pins every (method, ps) group to the same epoch — a compaction
         swapping mid-batch cannot make one result mix two id spaces.
         """
+        with trace.span("execute", q=batch.q):
+            return self._execute_impl(batch, decisions)
+
+    def _execute_impl(self, batch: QueryBatch,
+                      decisions: list[RoutingDecision]) -> SearchResult:
         t1 = time.perf_counter()
         ids = np.full((batch.q, batch.k), -1, dtype=np.int32)
         raw = np.full((batch.q, batch.k), np.inf, dtype=np.float32)
@@ -130,7 +146,13 @@ class RouterService:
         if callable(pop):
             pop()                        # clear this thread's stale slate
         snap_fn = getattr(self.index, "snapshot", None)
-        snap = snap_fn() if callable(snap_fn) else None
+        if callable(snap_fn):
+            with trace.span("snapshot_pin"):
+                snap = snap_fn()
+                trace.annotate(generation=int(getattr(
+                    snap, "generation", 0)))
+        else:
+            snap = None
         groups: dict = {}
         for qi, d in enumerate(decisions):
             groups.setdefault(d, []).append(qi)
@@ -142,11 +164,13 @@ class RouterService:
                 setting = engine.resolve_setting(method, ps_id)
                 idxs = np.asarray(idxs)
                 sub = batch.take(idxs)
-                g_ids, g_raw = (
-                    self.index.run_method(method, setting, sub,
-                                          snapshot=snap)
-                    if snap is not None
-                    else self.index.run_method(method, setting, sub))
+                with trace.span("group", method=m_name, ps=ps_id,
+                                q=int(idxs.size)):
+                    g_ids, g_raw = (
+                        self.index.run_method(method, setting, sub,
+                                              snapshot=snap)
+                        if snap is not None
+                        else self.index.run_method(method, setting, sub))
                 ids[idxs] = g_ids
                 raw[idxs] = g_raw
             # stable external keys resolve inside the batch snapshot, so
@@ -154,8 +178,9 @@ class RouterService:
             kf = getattr(self.index, "keys_of", None)
             keys = None
             if callable(kf):
-                keys = (kf(ids, snapshot=snap) if snap is not None
-                        else kf(ids))
+                with trace.span("resolve_keys"):
+                    keys = (kf(ids, snapshot=snap) if snap is not None
+                            else kf(ids))
         finally:
             if snap is not None:
                 snap.release()
@@ -163,15 +188,30 @@ class RouterService:
         timings = {"search_s": t2 - t1, "total_s": t2 - t1}
         if callable(pop):
             timings.update(pop())
+        generation = getattr(self.index, "generation", 0)
+        trace.annotate(
+            decisions=sorted({f"{m}/{ps}" for (m, ps) in groups}),
+            generation=int(generation),
+            table_version=getattr(self.router.table, "version", None))
         sink = self.telemetry
         if sink is not None:
             sink.record_batch(
                 batch, decisions, search_s=t2 - t1,
-                generation=getattr(self.index, "generation", 0),
+                generation=generation,
                 keys=keys if keys is not None else ids)
-            for stage in ("base_s", "delta_s", "merge_s"):
+            for stage in ("base_s", "delta_s", "merge_s", "shard_max_s"):
                 if stage in timings:
                     sink.note(stage, timings[stage])
+            # per-shard stage seconds (sharded handles emit shard{j}_s)
+            # fold into the sink's (shard, stage) skew cells
+            for stage, val in timings.items():
+                if (stage.startswith("shard") and stage.endswith("_s")
+                        and stage != "shard_max_s"):
+                    try:
+                        sh = int(stage[5:-2])
+                    except ValueError:
+                        continue
+                    sink.note_shard(sh, "exec", val, batch.q)
         return SearchResult(
             ids=ids,
             distances=exact_distances(raw, ids, batch.vectors),
@@ -193,16 +233,17 @@ class RouterService:
         Raises: ValueError on batch/dataset shape mismatch; RuntimeError
             if the underlying index is closed.
         """
-        t0 = time.perf_counter()
-        r_hat = self.predict(batch)
-        decisions = self._decide(r_hat, batch, t)
-        t1 = time.perf_counter()
-        res = self.execute(batch, decisions)
-        res.timings["route_s"] = t1 - t0
-        res.timings["total_s"] = res.timings["search_s"] + (t1 - t0)
-        if self.telemetry is not None:
-            self.telemetry.note("route_s", t1 - t0)
-        return res
+        with trace.maybe_trace(self.tracer, "search", q=batch.q,
+                               k=batch.k, pred=int(batch.pred)):
+            t0 = time.perf_counter()
+            decisions = self.route(batch, t=t)
+            t1 = time.perf_counter()
+            res = self.execute(batch, decisions)
+            res.timings["route_s"] = t1 - t0
+            res.timings["total_s"] = res.timings["search_s"] + (t1 - t0)
+            if self.telemetry is not None:
+                self.telemetry.note("route_s", t1 - t0)
+            return res
 
     def search_chunked(self, batch: QueryBatch, *,
                        chunk: int = engine.DEFAULT_QCHUNK,
@@ -282,7 +323,7 @@ class ShardedRouterService(RouterService):
     """
 
     def __init__(self, index, router, *, t: float = 0.9, methods=None,
-                 telemetry=None):
+                 telemetry=None, tracer=None):
         from repro.ann.live import ShardedLiveIndex
         from repro.ann.sharded import ShardedFilteredIndex
 
@@ -292,7 +333,7 @@ class ShardedRouterService(RouterService):
                 f"ShardedLiveIndex; got {type(index).__name__} (use "
                 f"RouterService for single-index handles)")
         super().__init__(index, router, t=t, methods=methods,
-                         telemetry=telemetry)
+                         telemetry=telemetry, tracer=tracer)
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +353,9 @@ class QueryResult(NamedTuple):
     * `cache` — how the query was served when the backend is a
       `repro.ann.cache.SemanticResultCache`: ``"exact"`` (bit-identical
       cached result), ``"semantic"`` (near-duplicate cached result,
-      re-scored), or None (full routed search).
+      re-scored), ``"transfer"`` (served from a looser-filter cached
+      entry whose rows all pass this query's filter), or None (full
+      routed search).
     """
     ids: np.ndarray
     distances: np.ndarray
@@ -424,6 +467,10 @@ class AsyncBatchQueue:
         self.service = service
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
+        # request-scoped tracing: roots are created at batch assembly in
+        # the worker thread and re-attached (explicit contextvar
+        # propagation) on the execution stage's thread
+        self._tracer = getattr(service, "tracer", None)
         if method is None:
             self._search = service.search
         else:
@@ -600,20 +647,45 @@ class AsyncBatchQueue:
     def _route_stage(self, take: list[_PendingQuery]) -> list:
         """Group requests into per-(pred, k) batches and, when the
         backend supports it, route them. Routing failures reject exactly
-        their group's futures here, before the execute stage."""
+        their group's futures here, before the execute stage.
+
+        With a tracer on the backend, each group gets a trace root
+        spanning submit → result: an `enqueue_wait` child reconstructed
+        from the oldest submit time, `batch_assembly`, the backend's
+        `route` span, and (on the executor thread, via `trace.attach`)
+        the whole execute subtree."""
         groups: dict = {}
         for req in take:
             groups.setdefault((req.pred, req.k), []).append(req)
         staged = []
+        tracer = self._tracer
         for (pred, k), reqs in groups.items():
+            root = None
             try:
-                batch = QueryBatch(np.stack([r.vector for r in reqs]),
-                                   np.stack([r.bitmap for r in reqs]),
-                                   pred, k)
-                decisions = (self.service.route(batch)
-                             if self._pipelined else None)
-                staged.append((reqs, batch, decisions))
+                if tracer is not None:
+                    t0 = min(r.t_submit for r in reqs)
+                    now = time.monotonic()
+                    root = tracer.start("request", q=len(reqs),
+                                        pred=int(pred), k=int(k))
+                    root.t0 = t0
+                    root.child(
+                        "enqueue_wait", t0=t0, t1=now,
+                        max_wait_ms=round((now - t0) * 1e3, 3),
+                        mean_wait_ms=round(sum(
+                            now - r.t_submit for r in reqs)
+                            / len(reqs) * 1e3, 3))
+                with trace.attach(root):
+                    with trace.span("batch_assembly", q=len(reqs)):
+                        batch = QueryBatch(
+                            np.stack([r.vector for r in reqs]),
+                            np.stack([r.bitmap for r in reqs]),
+                            pred, k)
+                    decisions = (self.service.route(batch)
+                                 if self._pipelined else None)
+                staged.append((reqs, batch, decisions, root))
             except BaseException as e:
+                if root is not None:
+                    tracer.finish(root, error=repr(e))
                 for req in reqs:
                     if not req.future.done():
                         req.future.set_exception(e)
@@ -623,7 +695,7 @@ class AsyncBatchQueue:
                     futs: list[Future]) -> None:
         try:
             with self._cv:
-                n = sum(len(reqs) for reqs, _, _ in staged)
+                n = sum(len(reqs) for reqs, *_ in staged)
                 self._stats["queries"] += n
                 self._stats["batches"] += 1
                 self._stats["max_batch_seen"] = max(
@@ -631,11 +703,16 @@ class AsyncBatchQueue:
                 rs = self._stats["flush_reasons"]
                 rs[reason] = rs.get(reason, 0) + 1
             sink = getattr(self.service, "telemetry", None)
-            for reqs, batch, decisions in staged:
+            tracer = self._tracer
+            for reqs, batch, decisions, root in staged:
                 try:
-                    res = (self.service.execute(batch, decisions)
-                           if decisions is not None
-                           else self._search(batch))
+                    # re-enter the group's trace on this thread — the
+                    # contextvar does not cross the executor hop itself
+                    with trace.attach(root):
+                        res = (self.service.execute(batch, decisions)
+                               if decisions is not None
+                               else self._search(batch))
+                        trace.annotate(flush_reason=reason)
                     if sink is not None:
                         # queue wait = submit -> result, folded as a
                         # counter pair (sum + count) per drain window
@@ -643,6 +720,8 @@ class AsyncBatchQueue:
                         wait = sum(now - r.t_submit for r in reqs)
                         sink.note("queue_wait_s", wait)
                         sink.note("queue_waits", len(reqs))
+                    if root is not None:
+                        tracer.finish(root)
                     for j, req in enumerate(reqs):
                         dec = (res.decisions[j]
                                if res.decisions is not None else None)
@@ -653,6 +732,8 @@ class AsyncBatchQueue:
                                 keys=(res.keys[j] if res.keys is not None
                                       else None)))
                 except BaseException as e:   # propagate to exactly this group
+                    if root is not None and root.t1 is None:
+                        tracer.finish(root, error=repr(e))
                     for req in reqs:
                         if not req.future.done():
                             req.future.set_exception(e)

@@ -30,9 +30,11 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.ann import trace
 from repro.ann.dataset import ANNDataset
 from repro.ann.distributed import shard_bounds, shard_devices
-from repro.ann.engine import ParamSetting, resolve_setting
+from repro.ann.engine import (ParamSetting, pop_stage_timings,
+                              resolve_setting, stage_add)
 from repro.ann.index import (FilteredIndex, QueryBatch, SearchResult,
                              exact_distances)
 
@@ -202,17 +204,50 @@ class ShardedFilteredIndex:
         ranking scores ‖v‖² − 2·q·v with +inf at −1) — identical contract
         to `FilteredIndex.run_method`, so the serving layer can't tell
         the difference.
+
+        Per-shard wall seconds accumulate on the calling thread's stage
+        slate (`shard{j}_s`, plus `shard_max_s` — the straggler that
+        bounds fan-out latency, which a sum across shards would hide —
+        and `merge_s`), drained by `pop_stage_timings()`.  Under an
+        active trace each shard's run is a `shard` child span attached
+        across the pool's threads.
         Raises: RuntimeError if closed; ValueError on shape mismatch.
         """
         self._check_open()
-        per = self._map_shards(
-            lambda fx: fx.run_method(method, setting, batch))
+        parent = trace.current()
+        times = [0.0] * len(self.shards)
+
+        def shard_run(jfx):
+            j, fx = jfx
+            s0 = time.perf_counter()
+            with trace.attach(parent):
+                with trace.span("shard", shard=j):
+                    out = fx.run_method(method, setting, batch)
+            times[j] = time.perf_counter() - s0
+            return out
+
+        if self._pool is not None:
+            per = list(self._pool.map(shard_run, enumerate(self.shards)))
+        else:
+            per = [shard_run(jfx) for jfx in enumerate(self.shards)]
         offs = self.bounds[:-1]
         parts = [(np.where(np.asarray(i) >= 0,
                            np.asarray(i) + np.int32(off), -1), r)
                  for (i, r), off in zip(per, offs)]
-        ids, raw = stack_candidates(parts)
-        return merge_candidates(ids, raw, batch.k)
+        t_merge = time.perf_counter()
+        with trace.span("merge", shards=len(per)):
+            ids, raw = stack_candidates(parts)
+            out = merge_candidates(ids, raw, batch.k)
+        for j, s in enumerate(times):
+            stage_add(f"shard{j}_s", s)
+        stage_add("shard_max_s", max(times))
+        stage_add("merge_s", time.perf_counter() - t_merge)
+        return out
+
+    def pop_stage_timings(self) -> dict[str, float]:
+        """Drain the calling thread's per-stage timings (`shard{j}_s`
+        fan-out seconds, `shard_max_s` straggler, `merge_s`)."""
+        return pop_stage_timings()
 
     def search(self, batch: QueryBatch, method,
                setting: ParamSetting | str | None = None) -> SearchResult:

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.ann import labels as lb
 from repro.ann import registry as registry_mod
+from repro.ann import trace
 from repro.ann.dataset import ANNDataset, fsync_path
 from repro.ann.live import (DEFAULT_DELTA_CHUNK, ChunkIndex,
                             LiveFilteredIndex, ShardedLiveIndex)
@@ -154,7 +155,8 @@ class WriteAheadLog:
                 return
             with self._mu:
                 target = self._seq        # all appended records are flushed
-            os.fsync(self._f.fileno())
+            with trace.span("wal.fsync", covered=target):
+                os.fsync(self._f.fileno())
             self._durable_seq = max(self._durable_seq, target)
 
     def commit(self, seq: int) -> None:
@@ -175,15 +177,18 @@ class WriteAheadLog:
     # ---- append ---------------------------------------------------------
     def _append(self, rtype: int, gen: int, payload: bytes) -> int:
         crc = zlib.crc32(payload) & 0xFFFFFFFF
-        with self._mu:
-            if self._closed:
-                raise RuntimeError(f"WAL {self.path!r} is closed")
-            self._f.write(_REC_HEADER.pack(_REC_MAGIC, rtype, int(gen),
-                                           len(payload), crc))
-            self._f.write(payload)
-            self._f.flush()
-            self._seq += 1
-            return self._seq
+        with trace.span("wal.append", rtype=rtype,
+                        payload_bytes=len(payload)):
+            with self._mu:
+                if self._closed:
+                    raise RuntimeError(f"WAL {self.path!r} is closed")
+                self._f.write(_REC_HEADER.pack(_REC_MAGIC, rtype,
+                                               int(gen),
+                                               len(payload), crc))
+                self._f.write(payload)
+                self._f.flush()
+                self._seq += 1
+                return self._seq
 
     def log_upsert(self, gen: int, keys: np.ndarray, vectors: np.ndarray,
                    bitmaps: np.ndarray) -> int:
@@ -770,6 +775,10 @@ class IndexStore:
         Returns the new store generation.
         """
         self._check_open()
+        with trace.span("store.checkpoint"):
+            return self._checkpoint_impl()
+
+    def _checkpoint_impl(self) -> int:
         index = self._index
         dim = index._dim if hasattr(index, "_dim") else index.ds.dim
         width = lb.n_words(index._universe)
@@ -973,14 +982,16 @@ class IndexStore:
 
     def _commit_manifest(self, manifest: dict) -> None:
         """Atomic manifest replace — the store's only commit point."""
-        tmp = os.path.join(self.path, MANIFEST + ".tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f, indent=1)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, os.path.join(self.path, MANIFEST))
-        fsync_path(self.path)                  # durable rename
-        self._manifest = manifest
+        with trace.span("store.commit_manifest",
+                        store_generation=manifest.get("store_generation")):
+            tmp = os.path.join(self.path, MANIFEST + ".tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.path, MANIFEST))
+            fsync_path(self.path)                  # durable rename
+            self._manifest = manifest
 
     def compact(self, timeout: float | None = None) -> int:
         """Live compaction + checkpoint: fold base+delta−tombstones into

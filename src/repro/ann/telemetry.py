@@ -67,7 +67,10 @@ class QueryEvent(NamedTuple):
     k: int
     search_us: float     # per-query share of the batch's execute time
     generation: int      # live-index generation at execute time (0 sealed)
-    t_wall: float        # wall-clock seconds (time.time())
+    t_wall: float        # wall-clock seconds (time.time()) — display only
+    # trailing defaulted fields keep positional construction compatible
+    t_mono: float = 0.0  # time.monotonic() — ordering / duration clock
+    shard: int = -1      # shard the query executed on (-1: unsharded)
 
 
 class AuditSample(NamedTuple):
@@ -109,6 +112,8 @@ class TelemetrySink:
         # per-cell aggregates: (method, ps_id, pred) -> [queries, lat_us]
         self._cells: dict[tuple, list] = {}    # cumulative (stats)
         self._fresh: dict[tuple, list] = {}    # since last drain_cells
+        # per-shard stage cells: (shard, stage) -> [calls, seconds]
+        self._shards: dict[tuple[int, str], list] = {}
         self._agg_lock = threading.Lock()
         self._batches = 0
         self._queries = 0
@@ -124,16 +129,20 @@ class TelemetrySink:
 
     def record_batch(self, batch: QueryBatch, decisions, *,
                      search_s: float, generation: int = 0,
-                     keys: np.ndarray | None = None) -> None:
+                     keys: np.ndarray | None = None,
+                     shard: int = -1) -> None:
         """Record one executed batch.  `decisions` is the [Q] list of
         `RoutingDecision` (or a single (method, ps_id) applied to all
         queries); `keys` are the served [Q, k] stable keys (row ids are
-        an acceptable stand-in for sealed indexes)."""
+        an acceptable stand-in for sealed indexes); `shard` stamps the
+        events when a shard-local service records its own traffic."""
         q = batch.q
         if q == 0:
             return
         per_q_us = search_s * 1e6 / q
         now = time.time()
+        now_m = time.monotonic()
+        shard = int(shard)
         one = not isinstance(decisions, (list, tuple)) or (
             len(decisions) != q)
         ring, cap, seq = self._ring, self.capacity, self._seq
@@ -141,7 +150,7 @@ class TelemetrySink:
         for i in range(q):
             d = decisions if one else decisions[i]
             ev = QueryEvent(d[0], d[1], int(batch.pred), batch.k,
-                            per_q_us, generation, now)
+                            per_q_us, generation, now, now_m, shard)
             ring[next(seq) % cap] = ev
             cell = local_cells.setdefault((d[0], d[1], int(batch.pred)),
                                           [0, 0.0])
@@ -162,6 +171,15 @@ class TelemetrySink:
         """Fold a named scalar counter (queue waits, stage timings...)."""
         with self._agg_lock:
             self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def note_shard(self, shard: int, stage: str, seconds: float,
+                   n: int = 1) -> None:
+        """Fold per-shard stage time into the (shard, stage) cell —
+        shard skew shows up in `stats()['shards']` and `/metrics`."""
+        with self._agg_lock:
+            agg = self._shards.setdefault((int(shard), stage), [0, 0.0])
+            agg[0] += n
+            agg[1] += seconds
 
     # ------------------------------------------------------- reservoir
 
@@ -220,6 +238,11 @@ class TelemetrySink:
             by_method: dict[str, int] = {}
             for (m, _ps, _p), (n, _us) in self._cells.items():
                 by_method[m] = by_method.get(m, 0) + n
+            shards = {f"shard{sh}/{stage}":
+                      {"calls": n, "total_s": round(s, 6),
+                       "mean_us": round(s / n * 1e6, 2)}
+                      for (sh, stage), (n, s) in sorted(
+                          self._shards.items()) if n > 0}
             counters = dict(self._counters)
             batches = self._batches
             queries = self._queries
@@ -235,9 +258,26 @@ class TelemetrySink:
                            "p99": round(_percentile(lat, 99), 2)},
             "by_method": by_method,
             "cells": cells,
+            "shards": shards,
             "counters": counters,
             "reservoir": res,
         }
+
+    # raw (unformatted) aggregate accessors for exporters -----------------
+
+    def cell_aggregates(self) -> dict:
+        """{(method, ps_id, pred): (queries, total_latency_us)} copy."""
+        with self._agg_lock:
+            return {k: (n, us) for k, (n, us) in self._cells.items()}
+
+    def shard_aggregates(self) -> dict:
+        """{(shard, stage): (calls, total_seconds)} copy."""
+        with self._agg_lock:
+            return {k: (n, s) for k, (n, s) in self._shards.items()}
+
+    def counter_values(self) -> dict:
+        with self._agg_lock:
+            return dict(self._counters)
 
     def seen_events(self) -> int:
         """Total queries recorded (monotone)."""
@@ -245,9 +285,11 @@ class TelemetrySink:
             return self._queries
 
     def recent(self, n: int = 64) -> list[QueryEvent]:
-        """Up to `n` most recently written events (best-effort order)."""
+        """Up to `n` most recently written events (best-effort order).
+        Ordered by the monotonic stamp — wall clock can step backwards
+        (NTP) and must never drive ordering or durations."""
         events = [e for e in self._ring if e is not None]
-        events.sort(key=lambda e: e.t_wall)
+        events.sort(key=lambda e: (e.t_mono, e.t_wall))
         return events[-n:]
 
 

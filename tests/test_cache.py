@@ -237,8 +237,9 @@ def test_semantic_hit_rescores_exactly(tiny_ds, tiny_queries, rng):
 
 
 def test_semantic_requires_identical_bitmap(tiny_ds):
-    """Near-identical vector under a *different* label set must miss —
-    results never transfer across predicates."""
+    """Near-identical vector under a *disjoint* label set must miss —
+    the subset/superset transfer rule only applies when one filter is
+    provably looser than the other, never across unrelated sets."""
     from repro.ann import labels as lb
 
     w = tiny_ds.bitmaps.shape[1]
@@ -267,6 +268,157 @@ def test_semantic_threshold_none_disables(tiny_ds, tiny_queries, rng):
         res = cache.search(QueryBatch(near.astype(np.float32),
                                       qs.bitmaps[:2], Predicate.AND, 5))
         assert res.cache == [None, None]
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# subset/superset transfer rule: serve across provably-looser filters
+# ---------------------------------------------------------------------------
+#
+# Controlled geometry: cluster A (4 rows, labels {0,1}) hugs the anchor,
+# cluster B (4 rows, labels {1}) sits farther out, 24 decoys (label {2})
+# far away. Which cached rows survive a tighter filter is then exact.
+
+def _transfer_ds():
+    from repro.ann.dataset import ANNDataset
+
+    rng = np.random.default_rng(11)
+    anchor = np.ones(8, np.float32)
+    a = anchor + rng.normal(0, 0.01, (4, 8)).astype(np.float32)
+    b = anchor + np.float32(0.5) \
+        + rng.normal(0, 0.02, (4, 8)).astype(np.float32)
+    far = rng.normal(5.0, 1.0, (24, 8)).astype(np.float32)
+    vecs = np.concatenate([a, b, far]).astype(np.float32)
+    labels = [[0, 1]] * 4 + [[1]] * 4 + [[2]] * 24
+    return ANNDataset.build("transfer", vecs, labels, 6), anchor
+
+
+def _one(vec, label_list, pred, k, universe=6):
+    from repro.ann import labels as lb
+
+    bm = lb.pack_one(label_list, universe)[None].astype(np.uint32)
+    return QueryBatch(vec[None], bm, pred, k)
+
+
+def test_transfer_or_superset_serves_oracle_topk():
+    """OR: a cached superset-label entry transfers when every cached
+    row passes the tighter filter — and then equals the oracle top-k."""
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        # k=4: the cached rows are exactly cluster A (labels {0,1})
+        cache.search(_one(anchor, [0, 1], Predicate.OR, 4))
+        probe = _one(anchor, [0], Predicate.OR, 4)
+        res = cache.search(probe)
+        assert res.cache == ["transfer"]
+        _assert_same_result(res, fx.search(probe, "prefilter"))
+        st = cache.stats()
+        assert st["hits_transfer"] == 1
+        assert st["hit_rate"] == pytest.approx(0.5)   # 1 hit / 1 miss
+        cache.close()
+
+
+def test_transfer_or_row_recheck_blocks_partial_entry():
+    """OR: k=6 caches 4×{0,1} + 2×{1}; probing OR {0} must MISS — two
+    cached rows fail the tighter filter, so the cached top-k is not the
+    query's top-k. The refill then matches the oracle."""
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        cache.search(_one(anchor, [0, 1], Predicate.OR, 6))
+        probe = _one(anchor, [0], Predicate.OR, 6)
+        res = cache.search(probe)
+        assert res.cache == [None]
+        assert cache.stats()["hits_transfer"] == 0
+        _assert_same_result(res, fx.search(probe, "prefilter"))
+        cache.close()
+
+
+def test_transfer_and_subset_serves_oracle_topk():
+    """AND: a cached subset-label entry (looser: fewer required labels)
+    transfers to a tighter query when every cached row carries all the
+    query labels."""
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        # AND {1} admits A u B; k=4 caches exactly cluster A
+        cache.search(_one(anchor, [1], Predicate.AND, 4))
+        probe = _one(anchor, [0, 1], Predicate.AND, 4)
+        res = cache.search(probe)
+        assert res.cache == ["transfer"]
+        _assert_same_result(res, fx.search(probe, "prefilter"))
+        assert cache.stats()["hits_transfer"] == 1
+        cache.close()
+
+
+def test_transfer_and_row_recheck_blocks_partial_entry():
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        cache.search(_one(anchor, [1], Predicate.AND, 6))  # 4xA + 2xB
+        probe = _one(anchor, [0, 1], Predicate.AND, 6)
+        res = cache.search(probe)                # B rows lack label 0
+        assert res.cache == [None]
+        assert cache.stats()["hits_transfer"] == 0
+        _assert_same_result(res, fx.search(probe, "prefilter"))
+        cache.close()
+
+
+def test_transfer_and_empty_cached_labels_never_serves():
+    """An empty AND filter matches everything but stamps no labels, so
+    the write clock could never invalidate it — the transfer rule must
+    refuse it outright."""
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        cache.search(_one(anchor, [], Predicate.AND, 4))
+        res = cache.search(_one(anchor, [0, 1], Predicate.AND, 4))
+        assert res.cache == [None]
+        assert cache.stats()["hits_transfer"] == 0
+        cache.close()
+
+
+def test_transfer_staleness_oracle_under_writes():
+    """Transfer hits obey the label write clock in the *cached* entry's
+    label set: an upsert touching label 0 (in the cached {0,1}) makes
+    the next tighter-filter probe miss and refill to the post-write
+    oracle — the pre-write top-k is never served."""
+    ds, anchor = _transfer_ds()
+    with LiveFilteredIndex(ds) as live:
+        cache = SemanticResultCache(live, method="prefilter",
+                                    threshold=0.95)
+        cache.search(_one(anchor, [0, 1], Predicate.OR, 4))
+        probe = _one(anchor, [0], Predicate.OR, 4)
+        assert cache.search(probe).cache == ["transfer"]
+        # distance-0 row with label {0}: enters the oracle top-k
+        from repro.ann import labels as lb
+        new = live.upsert(anchor[None],
+                          lb.pack_one([0], 6)[None].astype(np.uint32))
+        res = cache.search(probe)
+        assert res.cache == [None], \
+            "transfer served a pre-write entry after a relevant write"
+        assert int(new[0]) in res.ids[0]
+        _assert_same_result(res, live.search(probe, "prefilter"))
+        cache.close()
+
+
+def test_transfer_never_crosses_predicates():
+    """A cached OR entry never transfers to an AND probe (or vice
+    versa), even over the same label sets."""
+    ds, anchor = _transfer_ds()
+    with FilteredIndex(ds) as fx:
+        cache = SemanticResultCache(fx, method="prefilter",
+                                    threshold=0.95)
+        cache.search(_one(anchor, [0, 1], Predicate.OR, 4))
+        res = cache.search(_one(anchor, [0, 1], Predicate.AND, 4))
+        # identical bitmap + vector, different predicate: its own part
+        assert res.cache in ([None], ["exact"]) and res.cache == [None]
+        assert cache.stats()["hits_transfer"] == 0
         cache.close()
 
 

@@ -152,6 +152,66 @@ def test_sink_rejects_bad_sizes():
         TelemetrySink(reservoir=-1)
 
 
+# ------------------------------------------------------- per-shard cells
+
+
+def test_sink_shard_cells_fold_and_report():
+    sink = TelemetrySink(capacity=16, reservoir=0)
+    sink.note_shard(0, "exec", 2e-3, 4)
+    sink.note_shard(0, "exec", 4e-3, 4)
+    sink.note_shard(1, "exec", 1e-3, 4)
+    agg = sink.shard_aggregates()
+    assert agg[(0, "exec")] == (8, pytest.approx(6e-3))
+    assert agg[(1, "exec")] == (4, pytest.approx(1e-3))
+    s = sink.stats()["shards"]
+    assert s["shard0/exec"]["calls"] == 8
+    assert s["shard0/exec"]["total_s"] == pytest.approx(6e-3)
+    assert s["shard0/exec"]["mean_us"] == pytest.approx(750.0)
+    assert s["shard1/exec"]["mean_us"] == pytest.approx(250.0)
+
+
+def test_sink_events_carry_shard_and_monotonic_clock():
+    sink = TelemetrySink(capacity=16, reservoir=0)
+    bm = np.zeros((3, 1), np.uint32)
+    batch = QueryBatch(np.zeros((3, 4), np.float32), bm, Predicate.AND, 3)
+    sink.record_batch(batch, ("m", "p"), search_s=1e-3, shard=2)
+    sink.record_batch(batch, ("m", "p"), search_s=1e-3)
+    evs = sink.recent()
+    assert [e.shard for e in evs] == [2, 2, 2, -1, -1, -1]
+    # monotonic stamps order the ring even if the wall clock steps
+    monos = [e.t_mono for e in evs]
+    assert all(m > 0 for m in monos)
+    assert monos == sorted(monos)
+
+
+def test_sharded_execute_folds_per_shard_exec_cells(tiny_ds, toy_router,
+                                                    tiny_queries):
+    """ShardedFilteredIndex execution reports shard{j}_s wall seconds;
+    the service folds them into the sink's (shard, 'exec') cells and
+    keeps the straggler visible as the shard_max_s counter."""
+    from repro.ann.service import ShardedRouterService
+    from repro.ann.sharded import ShardedFilteredIndex
+
+    qs = tiny_queries[Predicate.AND]
+    batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 5)
+    with ShardedFilteredIndex(tiny_ds, 2) as sfx:
+        sink = TelemetrySink(capacity=64, reservoir=0)
+        svc = ShardedRouterService(sfx, toy_router, t=0.9, telemetry=sink)
+        res = svc.search(batch)
+        assert {"shard0_s", "shard1_s", "shard_max_s",
+                "merge_s"} <= res.timings.keys()
+        assert res.timings["shard_max_s"] == pytest.approx(
+            max(res.timings["shard0_s"], res.timings["shard1_s"]))
+        agg = sink.shard_aggregates()
+        assert (0, "exec") in agg and (1, "exec") in agg
+        assert agg[(0, "exec")][0] == batch.q      # q queries folded
+        assert agg[(0, "exec")][1] == pytest.approx(
+            res.timings["shard0_s"])
+        counters = sink.stats()["counters"]
+        assert counters["shard_max_s"] == pytest.approx(
+            res.timings["shard_max_s"])
+
+
 # --------------------------------------------------------------- auditor
 
 
