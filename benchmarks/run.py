@@ -81,19 +81,22 @@ def _keep_best(old: dict, new: dict) -> dict:
     converges the SHA's record to its noise floor (the cross-invocation
     extension of the best-of-N estimators inside each harness).
 
-    kernels rows take the per-metric min (speedup recomputed from the
-    mins); routing/sharded rows are kept whole from whichever run had
-    the faster gated primary, so their component columns stay coherent.
+    kernels, live_index and telemetry rows take the per-metric min
+    (speedup and the gated ratios recomputed from the mins — a ratio
+    kept whole from one run would carry that run's slow denominator);
+    routing/sharded rows are kept whole from whichever run had the
+    faster gated primary, so their component columns stay coherent.
     """
+    _TEL_CONFIGS = ("off", "on", "trace", "obslog")
     merged = dict(new)
     for section, key_cols, pick in [
             ("kernels", ("n", "q"), None),
             ("routing_latency", ("dataset", "pred", "q"), "batched_us"),
             ("sharded_service", ("shards", "n", "q"), "batch_us"),
-            ("live_index", ("n", "q"), "search_live_us"),
+            ("live_index", ("n", "q"), "live_index"),
             ("live_compaction", ("n_base",), "compact_ms"),
             ("store", ("n", "rows"), "cold_open_ms"),
-            ("telemetry", ("n", "q"), "routed_best_us_on"),
+            ("telemetry", ("n", "q"), "telemetry"),
             ("telemetry_adapt", ("n",), "time_to_reroute_ms"),
             ("cache", ("n", "q"), "hit_us")]:
         old_rows = {tuple(r[c] for c in key_cols): r
@@ -110,6 +113,32 @@ def _keep_best(old: dict, new: dict) -> dict:
                 best["fused_us"] = min(row["fused_us"], prev["fused_us"])
                 best["speedup"] = round(
                     best["two_pass_us"] / best["fused_us"], 2)
+                out.append(best)
+            elif pick == "live_index":  # per-metric min, ratio recomputed
+                best = dict(row)
+                for m in ("upsert_us_per_row", "search_compacted_us",
+                          "search_live_us"):
+                    if m in row and m in prev:
+                        best[m] = min(row[m], prev[m])
+                if best.get("search_compacted_us"):
+                    best["live_sealed_ratio"] = round(
+                        best["search_live_us"]
+                        / best["search_compacted_us"], 3)
+                out.append(best)
+            elif pick == "telemetry":   # per-config min, ratios recomputed
+                best = dict(row)
+                for cfg in _TEL_CONFIGS:
+                    m = f"routed_best_us_{cfg}"
+                    if m in row and m in prev:
+                        best[m] = min(row[m], prev[m])
+                off = best.get("routed_best_us_off")
+                for cfg, col in (("on", "overhead_pct"),
+                                 ("trace", "overhead_trace_pct"),
+                                 ("obslog", "overhead_obslog_pct")):
+                    m = f"routed_best_us_{cfg}"
+                    if off and best.get(m) is not None:
+                        best[col] = round(
+                            (best[m] / off - 1.0) * 100.0, 2)
                 out.append(best)
             else:                                   # whole faster row
                 # prev may predate a renamed gate metric: keep the new row
@@ -267,7 +296,7 @@ def run_check() -> None:
          ("snapshot_write_ms", "cold_open_ms", "wal_replay_ms")),
         ("telemetry", ("n", "q"),
          ("routed_best_us_off", "routed_best_us_on",
-          "routed_best_us_trace")),
+          "routed_best_us_trace", "routed_best_us_obslog")),
         ("cache", ("n", "q"), ("hit_us", "served_p50_us")),
     ]
     failures: list[str] = []
@@ -344,6 +373,13 @@ def run_check() -> None:
         if row.get("overhead_trace_pct") is not None:
             absolute_gate("telemetry", key, "overhead_trace_pct",
                           row["overhead_trace_pct"],
+                          TELEMETRY_OVERHEAD_MAX)
+        # the full observability stack (sink + tracer + wide-event log)
+        # shares the same absolute budget: emit is a ring-slot claim,
+        # serialisation and I/O belong to the writer thread
+        if row.get("overhead_obslog_pct") is not None:
+            absolute_gate("telemetry", key, "overhead_obslog_pct",
+                          row["overhead_obslog_pct"],
                           TELEMETRY_OVERHEAD_MAX)
     for row in last.get("cache", []):
         if row.get("speedup") is not None:

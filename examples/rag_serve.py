@@ -45,12 +45,26 @@ execute -> per-shard / live stages), the flight recorder keeps the
 worst trees, and the run prints the slowest one and dumps Perfetto
 JSON + the flight recorder under artifacts/serve/. `--metrics-port P`
 serves Prometheus `/metrics` (sink counters, per-shard cells, span
-histograms, cache/queue stats) and `/healthz` for the run's duration.
+histograms, cache/queue stats, ledger/SLO/obslog when attached),
+`/healthz` (degrades to 503 on queue/WAL backpressure), `/statusz`,
+`/debug/ledger` and `/debug/slo` for the run's duration.
+
+`--slo` attaches an `SLOEngine` (implies `--trace` so alerts carry
+flight-recorder trace ids): p99-latency, audited-recall-floor and
+availability objectives evaluated with multi-window burn-rate
+alerting; audit reports from `--online-router` feed the recall
+objective. `--obslog` attaches a `WideEventLog`: one JSONL wide event
+per request (trace id, route decision, cache provenance, shard
+timings, live generation, SLO state) under artifacts/serve/, plus a
+post-mortem dumper on SIGUSR2/exit writing flight + ledger + SLO
+state. The resource ledger (snapshot pins, retired generations, WAL
+backlog, queue depth, cache/delta bytes) is always on — both flags
+print its summary at shutdown.
 
     PYTHONPATH=src python examples/rag_serve.py [--requests 32] \
         [--shards 2] [--live] [--data-dir /tmp/rag-store] \
         [--cache] [--telemetry] [--online-router] \
-        [--trace] [--metrics-port 9100]
+        [--trace] [--metrics-port 9100] [--slo] [--obslog]
 """
 
 import argparse
@@ -78,7 +92,8 @@ from repro.launch.serve import generate
 from repro.models import common, lm
 
 
-def _open_or_create_store(args, sink=None, tracer=None):
+def _open_or_create_store(args, sink=None, tracer=None, slo=None,
+                          obslog=None):
     """Recover (or initialise) the durable corpus + router.
 
     Returns (store, router, service). A recovered store restores the
@@ -116,10 +131,10 @@ def _open_or_create_store(args, sink=None, tracer=None):
         print(f"created store at {args.data_dir}: {ds.n} vectors, "
               f"router artifact linked")
     svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink,
-                                tracer=tracer)
+                                tracer=tracer, slo=slo, obslog=obslog)
            if isinstance(lfx, ShardedLiveIndex)
            else RouterService(lfx, router, t=0.9, telemetry=sink,
-                              tracer=tracer))
+                              tracer=tracer, slo=slo, obslog=obslog))
     return store, router, svc
 
 
@@ -161,9 +176,22 @@ def main():
                     help="serve Prometheus /metrics and /healthz on this "
                          "port (0 = auto-pick) for the duration of the "
                          "run; composes with --telemetry/--trace/--cache")
+    ap.add_argument("--slo", action="store_true",
+                    help="attach an SLOEngine (implies --trace): p99 "
+                         "latency / audited-recall / availability "
+                         "objectives with multi-window burn-rate "
+                         "alerting; alerts carry trace ids + table "
+                         "version")
+    ap.add_argument("--obslog", action="store_true",
+                    help="write one JSONL wide event per request "
+                         "(trace id, route, cache, timings, SLO state) "
+                         "under artifacts/serve/, and install the "
+                         "SIGUSR2/atexit post-mortem dumper")
     args = ap.parse_args()
     if args.online_router:
         args.telemetry = True
+    if args.slo:
+        args.trace = True        # alerts want flight-recorder trace ids
     rng = np.random.default_rng(0)
 
     # --- corpus + router (offline stage, or store recovery) ---
@@ -177,9 +205,31 @@ def main():
         # flight recorder and Perfetto dump are never empty
         tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=32,
                         seed=11)
+    slo_eng = None
+    if args.slo:
+        from repro.ann.slo import Objective, SLOEngine
+        # demo-scale alert windows (seconds, not hours) so a single
+        # short run exercises the full observe -> burn -> alert path
+        slo_eng = SLOEngine(
+            [Objective(name="latency_p99", kind="latency", target=0.99,
+                       threshold_us=50_000.0,
+                       description="<=1% of queries slower than 50 ms"),
+             Objective(name="recall_floor", kind="recall", target=0.90,
+                       floor=0.80,
+                       description="<=10% of audited samples below 0.80"),
+             Objective(name="availability", kind="availability",
+                       target=0.999)],
+            windows=((60.0, 5.0, 2.0),), min_events=8, tracer=tracer)
+    obslog = None
+    if args.obslog:
+        from repro.ann.obslog import WideEventLog
+        from repro.common import artifacts_dir
+        obslog = WideEventLog(os.path.join(artifacts_dir("serve"),
+                                           "wide_events.jsonl"))
     store = None
     if args.data_dir:
-        store, router, svc = _open_or_create_store(args, sink, tracer)
+        store, router, svc = _open_or_create_store(args, sink, tracer,
+                                                   slo_eng, obslog)
         ds = svc.index.ds        # the recovered sealed base
     else:
         spec = DatasetSpec("corpus", 4000, 32, 48, 8, 12, 1.3, 2.0, 0.5,
@@ -194,31 +244,52 @@ def main():
             lfx = (ShardedLiveIndex(ds, args.shards) if args.shards > 1
                    else LiveFilteredIndex(ds))
             svc = (ShardedRouterService(lfx, router, t=0.9, telemetry=sink,
-                                        tracer=tracer)
+                                        tracer=tracer, slo=slo_eng,
+                                        obslog=obslog)
                    if args.shards > 1
                    else RouterService(lfx, router, t=0.9, telemetry=sink,
-                                      tracer=tracer))
+                                      tracer=tracer, slo=slo_eng,
+                                      obslog=obslog))
         elif args.shards > 1:
             fx.close()           # collect() is done; shards own their tensors
             sfx = ShardedFilteredIndex(ds, args.shards)
             svc = ShardedRouterService(sfx, router, t=0.9, telemetry=sink,
-                                       tracer=tracer)
+                                       tracer=tracer, slo=slo_eng,
+                                       obslog=obslog)
         else:
             svc = RouterService(fx, router, t=0.9, telemetry=sink,
-                                tracer=tracer)
+                                tracer=tracer, slo=slo_eng, obslog=obslog)
     serving = svc
     if args.cache:
         from repro.ann.cache import SemanticResultCache
         serving = SemanticResultCache(svc, threshold=0.98, capacity=2048)
+    from repro.ann.ledger import get_ledger
+    postmortem = None
+    if args.obslog:
+        from repro.ann.obslog import install_postmortem
+        postmortem = install_postmortem(tracer=tracer, ledger=get_ledger(),
+                                        slo=slo_eng, obslog=obslog)
+        print(f"obslog: wide events -> {obslog.path} "
+              f"(post-mortem on SIGUSR2/exit)")
     metrics_srv = None
     if args.metrics_port is not None:
-        from repro.ann.metrics import MetricsServer, metrics_text
+        from repro.ann.metrics import (MetricsServer, backpressure_health,
+                                       metrics_text)
         cache_obj = serving if args.cache else None
+        # service=svc late-binds the router's table: once the online
+        # adapter swaps in its OnlineBenchmarkTable, scrapes pick up
+        # the shard-keyed EWMA cells without rebuilding the closure
         metrics_srv = MetricsServer(
             lambda: metrics_text(sink=sink, tracer=tracer,
-                                 cache=cache_obj),
-            port=args.metrics_port)
-        print(f"metrics: {metrics_srv.url}/metrics + /healthz")
+                                 cache=cache_obj, ledger=get_ledger(),
+                                 slo=slo_eng, obslog=obslog,
+                                 service=svc),
+            port=args.metrics_port,
+            health=backpressure_health(
+                wal=getattr(store, "_wal", None)),
+            ledger=get_ledger(), slo=slo_eng, obslog=obslog)
+        print(f"metrics: {metrics_srv.url}/metrics + /healthz + "
+              f"/statusz + /debug/ledger + /debug/slo")
     print(f"corpus: {ds.n} vectors ({args.shards} shard(s), "
           f"live={args.live}, durable={bool(args.data_dir)}, "
           f"cache={args.cache}); router "
@@ -321,7 +392,7 @@ def main():
         adapter = OnlineRouterAdapter(svc, sink, store=store,
                                       drift_threshold=0.05,
                                       min_samples=16, retrain_epochs=40,
-                                      seed=3)
+                                      seed=3, slo=slo_eng)
         rep = adapter.step()
         print(f"adapter: audited {rep['samples']} sampled queries, "
               f"max_drift {rep['max_drift']:.3f}, table v"
@@ -385,6 +456,31 @@ def main():
             for child in root.children:
                 print(f"    {child.name}: {child.duration_s*1e3:.1f} ms "
                       f"{child.attrs}")
+    if slo_eng is not None:
+        slo_eng.evaluate()
+        alerts = slo_eng.alerts()
+        print(f"slo: state {slo_eng.state()}, "
+              f"{slo_eng.stats()['evaluations']} evaluation(s), "
+              f"{len(alerts)} alert(s)")
+        for a in alerts[-2:]:
+            print(f"  alert {a.objective} burn {a.burn_long:.1f}x "
+                  f"(window {a.window[0]:.0f}s/{a.window[1]:.0f}s), "
+                  f"{len(a.trace_ids)} trace id(s), "
+                  f"provenance {a.provenance}")
+    if obslog is not None:
+        obslog.flush()
+        os_ = obslog.stats()
+        print(f"obslog: {os_['emitted']} wide events emitted, "
+              f"{os_['written']} written, {os_['dropped']} dropped, "
+              f"{os_['file_bytes']} bytes -> {os_['path']}")
+    if args.slo or args.obslog:
+        snap = get_ledger().snapshot()
+        held = {k: sum(o["leases"] for o in v.values())
+                for k, v in snap["held"].items()}
+        print(f"ledger: held {held or '{}'}, "
+              f"{len(snap['gauges'])} collector(s), "
+              f"{len(snap['leaks'])} leak(s) past "
+              f"{get_ledger().leak_age_s:.0f}s")
     if metrics_srv is not None:
         import urllib.request
         n_lines = len(urllib.request.urlopen(
@@ -402,6 +498,8 @@ def main():
         store.close()
     else:
         svc.index.close()
+    if obslog is not None:
+        obslog.close()           # the atexit post-mortem still reads stats
 
 
 if __name__ == "__main__":

@@ -62,6 +62,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.ann import ledger as ledger_mod
 from repro.ann import trace
 from repro.ann.dataset import ANNDataset
 from repro.ann.index import FilteredIndex, QueryBatch, SearchResult
@@ -84,6 +85,12 @@ class _Entry:
     __slots__ = ("vector", "vnorm", "bitmap", "labels", "pred", "k",
                  "clock", "generation", "ids", "distances", "keys",
                  "expires_at", "alive", "ekey")
+
+    @property
+    def nbytes(self) -> int:
+        return (self.vector.nbytes + self.bitmap.nbytes
+                + self.labels.nbytes + self.ids.nbytes
+                + self.distances.nbytes + self.keys.nbytes)
 
     def __init__(self, vector, bitmap, pred, k, *, clock, generation,
                  ids, distances, keys, expires_at, ekey):
@@ -243,6 +250,18 @@ class SemanticResultCache:
             "hits_exact": 0, "hits_semantic": 0, "hits_transfer": 0,
             "misses": 0, "insertions": 0, "evictions_ttl": 0,
             "evictions_stale": 0, "evictions_capacity": 0}
+        # entries/bytes as pull gauges on the process ledger: collected
+        # only at scrape/snapshot time, zero cost on the serve path
+        self._ledger_key = f"cache:{id(self):x}"
+        ledger_mod.get_ledger().register_collector(
+            self._ledger_key, self._ledger_gauges)
+
+    def _ledger_gauges(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "capacity": self.capacity,
+                    "bytes": sum(e.nbytes
+                                 for e in self._entries.values())}
 
     # ---- facade ----------------------------------------------------------
     @property
@@ -262,9 +281,20 @@ class SemanticResultCache:
         """The wrapped service's tracer (the queue discovers it here)."""
         return getattr(self.service, "tracer", None)
 
+    @property
+    def slo(self):
+        """The wrapped service's SLO engine (hit-path observations)."""
+        return getattr(self.service, "slo", None)
+
+    @property
+    def obslog(self):
+        """The wrapped service's wide-event log (hit-path events)."""
+        return getattr(self.service, "obslog", None)
+
     def close(self) -> None:
         """Drop every entry and the built similarity indexes. The
         wrapped service is not closed — the cache doesn't own it."""
+        ledger_mod.get_ledger().deregister_collector(self._ledger_key)
         with self._lock:
             self._entries.clear()
             self._seen.clear()
@@ -494,7 +524,9 @@ class SemanticResultCache:
         if hit is None:
             return None
         ids, dists, keys, kind = hit
+        lat_us = (time.monotonic() - t0) * 1e6
         tracer = self.tracer
+        tid = None
         if tracer is not None:
             # hits never reach the batch pipeline, so they get their own
             # (tiny, retroactive) trace — cache provenance + latency
@@ -502,6 +534,17 @@ class SemanticResultCache:
                                 cache=kind)
             root.t0 = t0
             tracer.finish(root)
+            tid = root.trace_id
+        slo = self.slo
+        if slo is not None:
+            slo.observe_request(lat_us, pred=int(pred))
+        olog = self.obslog
+        if olog is not None:
+            olog.emit({"ts": round(time.time(), 6), "trace": tid,
+                       "pred": int(pred), "k": int(k), "batch_q": 1,
+                       "qi": 0, "lat_us": round(lat_us, 1),
+                       "cache": kind,
+                       "slo": slo.state() if slo is not None else None})
         return QueryResult(ids=ids, distances=dists, decision=None,
                            keys=keys, cache=kind)
 

@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.ann import engine as engine_mod
 from repro.ann import labels as lb
+from repro.ann import ledger as ledger_mod
 from repro.ann import registry as registry_mod
 from repro.ann import trace
 from repro.ann.dataset import ANNDataset
@@ -432,6 +433,14 @@ class DeltaSegment:
     def device_rows(self) -> int:
         return self._dev_rows
 
+    def host_bytes(self) -> int:
+        """Allocated host backing (includes growth headroom)."""
+        return self._vec.nbytes + self._bm.nbytes + self._norms.nbytes
+
+    def device_bytes(self) -> int:
+        """Mirror footprint: vectors + norms + bitmaps per covered row."""
+        return self._dev_rows * (self.dim * 4 + 4 + self.width * 4)
+
     def drop_device(self) -> None:
         with self._dev_lock:
             self._dev = None
@@ -642,7 +651,7 @@ class LiveSnapshot:
 
     __slots__ = ("generation", "base_n", "delta_rows", "tombstones",
                  "tombstone_version", "delta", "keys", "next_key",
-                 "_owner", "_released")
+                 "_owner", "_released", "_lease")
 
     def __init__(self, owner, generation, base_n, delta_rows, tombstones,
                  tombstone_version, delta, keys, next_key):
@@ -656,6 +665,7 @@ class LiveSnapshot:
         self.next_key = next_key
         self._owner = owner
         self._released = False
+        self._lease = None          # ledger pin, set by snapshot()
 
     @property
     def n_total(self) -> int:
@@ -672,6 +682,8 @@ class LiveSnapshot:
             if self._released:
                 return
             self._released = True
+        if self._lease is not None:
+            self._lease.release()
         self._owner._release_reader(self.generation)
 
     def __enter__(self) -> "LiveSnapshot":
@@ -770,6 +782,7 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         self._lock = threading.RLock()
         self._readers: dict[int, int] = {}      # generation -> pin count
         self._retired: dict[int, FilteredIndex | None] = {}
+        self._retired_leases: dict[int, object] = {}   # gen -> ledger lease
         self._compact_pool: ThreadPoolExecutor | None = None
         self._compacting: Future | None = None
         self._last_remap: np.ndarray | None = None
@@ -783,6 +796,25 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         self._prune_stats = {"calls": 0, "clusters": 0, "pruned": 0,
                              "label_pruned": 0}
         self._closed = False
+        # delta/device bytes + reader pins as pull gauges on the process
+        # ledger (collected only at scrape/snapshot time)
+        self._ledger_key = f"live:{self._name}:{id(self):x}"
+        ledger_mod.get_ledger().register_collector(
+            self._ledger_key, self._ledger_gauges)
+
+    def _ledger_gauges(self) -> dict:
+        with self._lock:
+            if self._closed:
+                return {"closed": 1}
+            d = self._delta
+            return {"generation": self._generation,
+                    "delta_rows": d.rows,
+                    "delta_host_bytes": d.host_bytes(),
+                    "delta_device_rows": d.device_rows(),
+                    "delta_device_bytes": d.device_bytes(),
+                    "tombstones": int(self._tomb.sum()),
+                    "pinned_readers": sum(self._readers.values()),
+                    "retired_generations": len(self._retired)}
 
     @classmethod
     def empty(cls, name: str, dim: int, universe: int,
@@ -833,6 +865,7 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
         """Stop the handle: wait out a running compaction (its swap is
         skipped once closed), close the base of every generation, drop
         the delta device mirror. Idempotent."""
+        ledger_mod.get_ledger().deregister_collector(self._ledger_key)
         with self._lock:
             if self._closed:
                 return
@@ -850,6 +883,9 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
                 if fx is not None:
                     fx.close()
             self._retired.clear()
+            for lease in self._retired_leases.values():
+                lease.release()
+            self._retired_leases.clear()
             self._delta.drop_device()
             self._features = None
         if self._compact_pool is not None:
@@ -1020,11 +1056,16 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
             # (concatenate on upsert, fresh array at the compaction
             # swap), never written in place, so the sliced object stays
             # frozen; tombstones mutate in place and must copy
-            return LiveSnapshot(self, gen, self._base_n, rows,
+            snap = LiveSnapshot(self, gen, self._base_n, rows,
                                 self._tomb[: self._base_n + rows].copy(),
                                 self._tomb_version, self._delta,
                                 self._keys[: self._base_n + rows],
                                 self._next_key)
+        # the pin lease carries the acquiring trace id + caller stack —
+        # a snapshot held past the ledger's leak age names its taker
+        snap._lease = ledger_mod.get_ledger().acquire(
+            "snapshot_pin", self._name, meta={"generation": int(gen)})
+        return snap
 
     def _release_reader(self, gen: int) -> None:
         with self._lock:
@@ -1033,7 +1074,12 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
                 self._readers[gen] = left
                 return
             self._readers.pop(gen, None)
+            had_retired = gen in self._retired
             fx = self._retired.pop(gen, None)
+            lease = (self._retired_leases.pop(gen, None)
+                     if had_retired else None)
+        if lease is not None:
+            lease.release()
         if fx is not None:
             fx.close()
 
@@ -1547,6 +1593,15 @@ class LiveFilteredIndex(_StableKeyMixin, _LabelClockMixin, _StageTimings):
                     # record the retirement even for an empty base (None)
                     # so pinned snapshots of generation 0 stay resolvable
                     self._retired[old_gen] = old_base
+                    old_ds = (old_base.ds if old_base is not None
+                              else None)
+                    self._retired_leases[old_gen] = \
+                        ledger_mod.get_ledger().acquire(
+                            "retired_generation", self._name,
+                            bytes=(old_ds.vectors.nbytes
+                                   + old_ds.bitmaps.nbytes
+                                   if old_ds is not None else 0),
+                            meta={"generation": int(old_gen)})
                 elif old_base is not None:
                     old_base.close()
                 return self._generation

@@ -37,8 +37,10 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.ann import engine
+from repro.ann import ledger as ledger_mod
 from repro.ann import registry as registry_mod
 from repro.ann import trace
+from repro.ann.obslog import request_events
 from repro.ann.index import (FilteredIndex, QueryBatch, RoutingDecision,
                              SearchResult, exact_distances)
 from repro.ann.predicates import Predicate
@@ -78,10 +80,18 @@ class RouterService:
             per-group / live-stage / store spans) with tail-based
             sampling and the flight recorder. None (default) keeps the
             hot path trace-free — the span calls below are no-ops.
+        slo: optional `repro.ann.slo.SLOEngine`; when set, every
+            executed batch folds latency/error observations into the
+            engine's sliding windows and stamps the router's table
+            version as alert provenance.
+        obslog: optional `repro.ann.obslog.WideEventLog`; when set,
+            every served query emits one wide event (trace id, route
+            decision, timings, generation, table version, SLO state).
     """
 
     def __init__(self, index: FilteredIndex, router, *, t: float = 0.9,
-                 methods=None, telemetry=None, tracer=None):
+                 methods=None, telemetry=None, tracer=None, slo=None,
+                 obslog=None):
         self.index = index
         self.router = router
         self.t = float(t)
@@ -89,6 +99,8 @@ class RouterService:
                         else registry_mod.candidate_methods())
         self.telemetry = telemetry
         self.tracer = tracer
+        self.slo = slo
+        self.obslog = obslog
 
     @property
     def ds(self):
@@ -135,7 +147,22 @@ class RouterService:
         swapping mid-batch cannot make one result mix two id spaces.
         """
         with trace.span("execute", q=batch.q):
-            return self._execute_impl(batch, decisions)
+            try:
+                return self._execute_impl(batch, decisions)
+            except BaseException as e:
+                # failed batches still count: availability SLOs and the
+                # wide-event log see the error before it propagates
+                if self.slo is not None:
+                    self.slo.observe_batch(batch.q, errors=batch.q,
+                                           pred=int(batch.pred))
+                olog = self.obslog
+                if olog is not None:
+                    for ev in request_events(
+                            batch, decisions, per_query_us=0.0,
+                            trace_id=trace.trace_id(),
+                            error=f"{type(e).__name__}: {e}"):
+                        olog.emit(ev)
+                raise
 
     def _execute_impl(self, batch: QueryBatch,
                       decisions: list[RoutingDecision]) -> SearchResult:
@@ -212,6 +239,25 @@ class RouterService:
                     except ValueError:
                         continue
                     sink.note_shard(sh, "exec", val, batch.q)
+        per_q_us = (t2 - t1) * 1e6 / max(batch.q, 1)
+        slo_eng = self.slo
+        if slo_eng is not None:
+            slo_eng.observe_batch(batch.q, per_query_us=per_q_us,
+                                  pred=int(batch.pred))
+            tv = getattr(self.router.table, "version", None)
+            if tv is not None:
+                slo_eng.note_provenance(table_version=tv)
+        olog = self.obslog
+        if olog is not None:
+            for ev in request_events(
+                    batch, decisions, per_query_us=per_q_us,
+                    trace_id=trace.trace_id(), timings=timings,
+                    generation=int(generation),
+                    table_version=getattr(self.router.table, "version",
+                                          None),
+                    slo_state=(slo_eng.state() if slo_eng is not None
+                               else None)):
+                olog.emit(ev)
         return SearchResult(
             ids=ids,
             distances=exact_distances(raw, ids, batch.vectors),
@@ -323,7 +369,7 @@ class ShardedRouterService(RouterService):
     """
 
     def __init__(self, index, router, *, t: float = 0.9, methods=None,
-                 telemetry=None, tracer=None):
+                 telemetry=None, tracer=None, slo=None, obslog=None):
         from repro.ann.live import ShardedLiveIndex
         from repro.ann.sharded import ShardedFilteredIndex
 
@@ -333,7 +379,8 @@ class ShardedRouterService(RouterService):
                 f"ShardedLiveIndex; got {type(index).__name__} (use "
                 f"RouterService for single-index handles)")
         super().__init__(index, router, t=t, methods=methods,
-                         telemetry=telemetry, tracer=tracer)
+                         telemetry=telemetry, tracer=tracer, slo=slo,
+                         obslog=obslog)
 
 
 # ---------------------------------------------------------------------------
@@ -488,6 +535,11 @@ class AsyncBatchQueue:
         self._stats = {"queries": 0, "batches": 0, "cache_hits": 0,
                        "max_batch_seen": 0, "max_queue_depth": 0,
                        "flush_reasons": {}}
+        # queue depth is a pull gauge on the process ledger — the
+        # /statusz + backpressure-health surface reads it from there
+        self._ledger_key = f"queue:{id(self):x}"
+        ledger_mod.get_ledger().register_collector(
+            self._ledger_key, self._ledger_gauges)
         self._exec = _DaemonExecutor("async-batch-exec")
         self._exec_fut: Future | None = None
         self._worker = threading.Thread(
@@ -570,6 +622,7 @@ class AsyncBatchQueue:
         hung backend search is abandoned rather than waited on.
         Idempotent."""
         t0 = time.monotonic()
+        ledger_mod.get_ledger().deregister_collector(self._ledger_key)
         with self._cv:
             self._closed = True
             self._cv.notify_all()
@@ -583,6 +636,12 @@ class AsyncBatchQueue:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    def _ledger_gauges(self) -> dict:
+        with self._cv:
+            return {"pending": len(self._pending),
+                    "inflight": len(self._inflight),
+                    "max_queue_depth": self._stats["max_queue_depth"]}
 
     def stats(self) -> dict:
         """Counters: queries/batches served, cache hits answered at

@@ -47,6 +47,7 @@ import zlib
 import numpy as np
 
 from repro.ann import labels as lb
+from repro.ann import ledger as ledger_mod
 from repro.ann import registry as registry_mod
 from repro.ann import trace
 from repro.ann.dataset import ANNDataset, fsync_path
@@ -119,7 +120,14 @@ class WriteAheadLog:
         self._fsync_mu = threading.Lock()  # serializes fsync leaders
         self._seq = 0                      # records appended (and flushed)
         self._durable_seq = 0              # records covered by an fsync
+        self._bytes = 0                    # payload+frame bytes appended
+        self._durable_bytes = 0            # bytes covered by an fsync
         self._closed = False
+        # fsync backlog (unsynced records + bytes) as a pull gauge on
+        # the process ledger — the backpressure-health surface reads it
+        self._ledger_key = f"wal:{os.path.basename(path)}:{id(self):x}"
+        ledger_mod.get_ledger().register_collector(
+            self._ledger_key, self.backlog)
 
     # ---- lifecycle ------------------------------------------------------
     @classmethod
@@ -155,9 +163,11 @@ class WriteAheadLog:
                 return
             with self._mu:
                 target = self._seq        # all appended records are flushed
+                target_bytes = self._bytes
             with trace.span("wal.fsync", covered=target):
                 os.fsync(self._f.fileno())
             self._durable_seq = max(self._durable_seq, target)
+            self._durable_bytes = max(self._durable_bytes, target_bytes)
 
     def commit(self, seq: int) -> None:
         """The ack point for record `seq`: durable before returning when
@@ -167,7 +177,15 @@ class WriteAheadLog:
         if self.sync_every == 1 or seq - self._durable_seq >= self.sync_every:
             self.wait_durable(seq)
 
+    def backlog(self) -> dict:
+        """Fsync backlog: records flushed to the OS but not yet durable,
+        and the byte span they cover. Both are the crash-loss window."""
+        with self._mu:
+            return {"records": self._seq - self._durable_seq,
+                    "bytes": self._bytes - self._durable_bytes}
+
     def close(self) -> None:
+        ledger_mod.get_ledger().deregister_collector(self._ledger_key)
         if not self._closed:
             self.sync()
             with self._fsync_mu, self._mu:
@@ -188,6 +206,7 @@ class WriteAheadLog:
                 self._f.write(payload)
                 self._f.flush()
                 self._seq += 1
+                self._bytes += _REC_HEADER.size + len(payload)
                 return self._seq
 
     def log_upsert(self, gen: int, keys: np.ndarray, vectors: np.ndarray,

@@ -114,6 +114,7 @@ class TelemetrySink:
         self._fresh: dict[tuple, list] = {}    # since last drain_cells
         # per-shard stage cells: (shard, stage) -> [calls, seconds]
         self._shards: dict[tuple[int, str], list] = {}
+        self._shards_fresh: dict[tuple[int, str], list] = {}
         self._agg_lock = threading.Lock()
         self._batches = 0
         self._queries = 0
@@ -177,9 +178,10 @@ class TelemetrySink:
         """Fold per-shard stage time into the (shard, stage) cell —
         shard skew shows up in `stats()['shards']` and `/metrics`."""
         with self._agg_lock:
-            agg = self._shards.setdefault((int(shard), stage), [0, 0.0])
-            agg[0] += n
-            agg[1] += seconds
+            for store in (self._shards, self._shards_fresh):
+                agg = store.setdefault((int(shard), stage), [0, 0.0])
+                agg[0] += n
+                agg[1] += seconds
 
     # ------------------------------------------------------- reservoir
 
@@ -220,6 +222,16 @@ class TelemetrySink:
             out = {k: (n, us / n) for k, (n, us) in self._fresh.items()
                    if n > 0}
             self._fresh = {}
+            return out
+
+    def drain_shards(self) -> dict:
+        """Per-shard {(shard, stage): (queries, total_seconds)} since the
+        last drain — the adapter's per-shard QPS feed.  Resets the fresh
+        accumulators (cumulative `shard_aggregates` is untouched)."""
+        with self._agg_lock:
+            out = {k: (n, s) for k, (n, s) in self._shards_fresh.items()
+                   if n > 0}
+            self._shards_fresh = {}
             return out
 
     # ----------------------------------------------------------- stats
@@ -329,6 +341,10 @@ class RecallAuditor:
         min_budget / max_budget: hard floor / cap on the per-pass budget
             when `sample_frac` is set.
         seed: RNG seed for the uniform subsample.
+        slo: optional `repro.ann.slo.SLOEngine` — every audit pass
+            pushes its per-sample exact recalls into the engine's
+            recall objectives (and stamps the table version as alert
+            provenance), so quality regressions page.
     """
 
     def __init__(self, index, sink: TelemetrySink, *,
@@ -336,7 +352,7 @@ class RecallAuditor:
                  ds_name: str | None = None,
                  sample_frac: float | None = None,
                  min_budget: int = 8, max_budget: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, slo=None):
         if sample_frac is not None and not (0.0 < sample_frac <= 1.0):
             raise ValueError(
                 f"sample_frac must be in (0, 1] or None; got {sample_frac}")
@@ -349,6 +365,7 @@ class RecallAuditor:
         self.table = table
         ds = getattr(index, "ds", None)
         self.ds_name = ds_name or (ds.name if ds is not None else "live")
+        self.slo = slo
         self.sample_frac = (None if sample_frac is None
                             else float(sample_frac))
         self.min_budget = int(min_budget)
@@ -433,8 +450,13 @@ class RecallAuditor:
         report_cells = {f"{m}/{ps}/{Predicate(p).name}":
                         {"n": n, "recall": round(tot / n, 4)}
                         for (m, ps, p), (n, tot) in cells.items()}
-        return {"samples": len(results), "cells": report_cells,
-                "results": results, "budget": budget}
+        report = {"samples": len(results), "cells": report_cells,
+                  "results": results, "budget": budget}
+        if self.slo is not None:
+            self.slo.ingest_audit(report)
+            if self.table is not None:
+                self.slo.note_provenance(table_version=self.table.version)
+        return report
 
     # background loop ----------------------------------------------------
 
@@ -491,6 +513,9 @@ class OnlineBenchmarkTable(BenchmarkTable):
         # audited-EWMA per cell (drift is audited-vs-offline, tracked
         # separately so QPS-only observations don't register as drift)
         self._audited: dict[tuple, dict] = {}
+        # per-shard EWMA QPS cells (ds, shard) — shard-divergent
+        # throughput visible to routing and exported per shard
+        self._shard_cells: dict[tuple, dict] = {}
 
     # properties ---------------------------------------------------------
 
@@ -540,7 +565,41 @@ class OnlineBenchmarkTable(BenchmarkTable):
             self._version += 1
             self._ra_cache.clear()
 
+    def observe_shard(self, ds: str, shard: int, *, qps: float,
+                      stage: str = "exec", n: int = 1) -> None:
+        """Fold one measured per-shard QPS sample into the (ds, shard)
+        EWMA cell.  Same versioning discipline as `observe`: the entry
+        dict is replaced, the version advances, so exporters see a
+        consistent published view."""
+        key = (str(ds), int(shard), str(stage))
+        a = self._alpha
+        with self._lock:
+            cur = self._shard_cells.get(key)
+            if cur is None:
+                new = {"qps": float(qps), "n": int(n)}
+            else:
+                new = {"qps": (1 - a) * cur["qps"] + a * float(qps),
+                       "n": cur["n"] + int(n)}
+            self._shard_cells[key] = new
+            self._version += 1
+
     # reads --------------------------------------------------------------
+
+    def shard_cells(self, ds: str | None = None) -> dict:
+        """{(ds, shard, stage): {qps, n}} copy, optionally filtered."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._shard_cells.items()
+                    if ds is None or k[0] == ds}
+
+    def shard_divergence(self, ds: str | None = None,
+                         stage: str = "exec") -> float:
+        """max/min EWMA QPS ratio across shards (1.0 = perfectly even;
+        0.0 when fewer than two shards have cells)."""
+        qps = [v["qps"] for k, v in self.shard_cells(ds).items()
+               if k[2] == stage and v["qps"] > 0]
+        if len(qps) < 2:
+            return 0.0
+        return max(qps) / min(qps)
 
     def routing_arrays(self, ds: str, pt, methods, t: float):
         key = (ds, int(pt), tuple(methods), float(t))
@@ -606,7 +665,7 @@ class OnlineRouterAdapter:
                  alpha: float = 0.25, drift_threshold: float = 0.05,
                  min_samples: int = 16, holdout_frac: float = 0.5,
                  retrain_epochs: int = 60, retrain_hidden=(32, 16),
-                 seed: int = 0, retrain_fn=None, ds_name=None):
+                 seed: int = 0, retrain_fn=None, ds_name=None, slo=None):
         self.service = service
         self.sink = sink
         self.store = store
@@ -627,7 +686,8 @@ class OnlineRouterAdapter:
         # routing reads go through router.table per call
         service.router.table = self.table
         self.auditor = RecallAuditor(service.index, sink,
-                                     table=self.table, ds_name=ds_name)
+                                     table=self.table, ds_name=ds_name,
+                                     slo=slo)
         self.ds_name = self.auditor.ds_name
         self._train: list = []      # (sample, recall, exact_keys)
         self._holdout: list = []
@@ -660,6 +720,12 @@ class OnlineRouterAdapter:
             if mean_us > 0:
                 self.table.observe(self.ds_name, pred, m, ps,
                                    qps=1e6 / mean_us)
+        # per-shard telemetry aggregates -> shard-keyed EWMA table cells
+        # (shard-divergent QPS becomes visible to routing + /metrics)
+        for (sh, stage), (n, sec) in self.sink.drain_shards().items():
+            if sec > 0:
+                self.table.observe_shard(self.ds_name, sh, qps=n / sec,
+                                         stage=stage, n=n)
         drift = self.table.max_drift()
         report = {"samples": audit["samples"],
                   "audited": self.auditor.audits,

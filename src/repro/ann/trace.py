@@ -45,6 +45,7 @@ __all__ = [
     "count",
     "attach",
     "current",
+    "trace_id",
     "maybe_trace",
     "perfetto_json",
     "BUCKET_BOUNDS_US",
@@ -82,7 +83,8 @@ class Span:
     appended from other threads (list.append is atomic under the GIL);
     the owner closes stragglers at :meth:`Tracer.finish`."""
 
-    __slots__ = ("name", "t0", "t1", "attrs", "children", "error")
+    __slots__ = ("name", "t0", "t1", "attrs", "children", "error",
+                 "trace_id")
 
     def __init__(self, name: str, attrs: dict | None = None,
                  t0: float | None = None):
@@ -92,6 +94,7 @@ class Span:
         self.attrs: dict = dict(attrs) if attrs else {}
         self.children: list[Span] = []
         self.error: str | None = None
+        self.trace_id: str | None = None
 
     # -- construction ------------------------------------------------------
     def child(self, name: str, *, t0: float | None = None,
@@ -101,6 +104,7 @@ class Span:
         s = Span(name, attrs, t0=t0)
         if t1 is not None:
             s.t1 = float(t1)
+        s.trace_id = self.trace_id
         self.children.append(s)
         return s
 
@@ -137,6 +141,8 @@ class Span:
         d: dict = {"name": self.name,
                    "t0_ms": round((self.t0 - origin) * 1e3, 4),
                    "dur_ms": round(self.duration_s * 1e3, 4)}
+        if self.trace_id is not None:
+            d["trace_id"] = self.trace_id
         if self.attrs:
             d["attrs"] = _jsonable(self.attrs)
         if self.error:
@@ -168,6 +174,7 @@ class _SpanCtx:
         if parent is None:
             return None
         s = Span(self._name, self._attrs)
+        s.trace_id = parent.trace_id
         parent.children.append(s)
         self._span = s
         self._token = _ACTIVE.set(s)
@@ -192,6 +199,15 @@ def span(name: str, **attrs) -> _SpanCtx:
 
 def current() -> Span | None:
     return _ACTIVE.get()
+
+
+def trace_id() -> str | None:
+    """Trace id of the ambient trace, ``None`` outside one (or for a
+    root created without a `Tracer`).  The id is assigned at the root
+    and inherited by every child span, so any layer can stamp logs or
+    resource leases with the request it served."""
+    s = _ACTIVE.get()
+    return s.trace_id if s is not None else None
 
 
 def annotate(**attrs) -> None:
@@ -245,6 +261,7 @@ class _RootCtx:
 
     def __enter__(self) -> Span:
         self._root = Span(self._name, self._attrs)
+        self._root.trace_id = self._tracer.new_trace_id()
         self._token = _ACTIVE.set(self._root)
         return self._root
 
@@ -342,14 +359,26 @@ class Tracer:
         self._hist: dict[str, LatencyHistogram] = {}
         self._seq = itertools.count()
         self._rng = random.Random(seed)
+        # separate stream for ids: drawing them from the sampling rng
+        # would shift the tail-sampling sequence under a fixed seed
+        self._id_rng = random.Random((int(seed) << 1) ^ 0x9E3779B9)
+        self._id_seq = itertools.count(1)
         self._counters = {"traces": 0, "kept": 0, "dropped": 0,
                           "slow": 0, "errors": 0}
 
     # -- roots -------------------------------------------------------------
+    def new_trace_id(self) -> str:
+        """Deterministic-under-seed unique id: ordinal + random tag."""
+        with self._lock:
+            return (f"t{next(self._id_seq):06d}-"
+                    f"{self._id_rng.getrandbits(32):08x}")
+
     def start(self, name: str, **attrs) -> Span:
         """Create a detached root; the caller attaches/finishes it
         explicitly (queue-style, where the root outlives one thread)."""
-        return Span(name, attrs)
+        s = Span(name, attrs)
+        s.trace_id = self.new_trace_id()
+        return s
 
     def trace(self, name: str, **attrs) -> _RootCtx:
         """Context manager: root + ambient attach + finish-on-exit."""
@@ -390,6 +419,7 @@ class Tracer:
                 c["kept"] += 1
                 self._flight.append({
                     "seq": next(self._seq),
+                    "trace_id": root.trace_id,
                     "t_wall": time.time(),
                     "duration_ms": dur_ms,
                     "reason": "error" if err is not None else "slow",

@@ -1,0 +1,175 @@
+"""PR-10 resource ledger: lease accounting (acquire/release, context
+manager, per-owner rollups), leak detection with caller stacks and
+trace ids, pull-time gauge collectors (including failure isolation),
+the scoped-ledger test harness, and the real registrations — a
+deliberately unreleased `LiveFilteredIndex` snapshot pin must show up
+as a leak, and the WAL's fsync backlog must surface as a collector
+gauge."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.ann.ledger import ResourceLedger, get_ledger, scoped, set_ledger
+from repro.ann.live import LiveFilteredIndex
+from repro.ann.store import WriteAheadLog
+from repro.ann.trace import Tracer
+
+
+# ------------------------------------------------------------- leases
+
+
+def test_acquire_release_accounting():
+    led = ResourceLedger()
+    a = led.acquire("pin", "ds0", count=2, bytes=100)
+    b = led.acquire("pin", "ds1", count=1, bytes=50)
+    c = led.acquire("cache", "ds0", bytes=7)
+    acc = led.accounting()
+    assert acc["pin"]["ds0"] == {"leases": 1, "count": 2, "bytes": 100}
+    assert acc["pin"]["ds1"] == {"leases": 1, "count": 1, "bytes": 50}
+    assert acc["cache"]["ds0"]["bytes"] == 7
+    b.release()
+    assert "ds1" not in led.accounting()["pin"]
+    assert led.counters()["pin"] == {"acquired": 2, "released": 1}
+    a.release()
+    c.release()
+    assert led.accounting() == {}
+    assert led.counters()["pin"] == {"acquired": 2, "released": 2}
+
+
+def test_lease_release_is_idempotent_and_scope_bound():
+    led = ResourceLedger()
+    with led.acquire("pin", "x") as lease:
+        assert led.leases("pin")
+    assert not led.leases("pin")
+    lease.release()                     # double release: no underflow
+    assert led.counters()["pin"] == {"acquired": 1, "released": 1}
+
+
+def test_leak_detection_carries_stack_and_trace_id():
+    led = ResourceLedger(leak_age_s=30.0)
+    tracer = Tracer(slow_ms=0.0, sample=1.0, seed=2)
+    with tracer.trace("request"):
+        led.acquire("pin", "ds0", meta={"generation": 3})
+    assert led.leaks() == []            # 30s default: nothing old yet
+    leaks = led.leaks(max_age_s=0.0)
+    assert len(leaks) == 1
+    (leak,) = leaks
+    assert leak["kind"] == "pin" and leak["meta"] == {"generation": 3}
+    # the acquiring call site is in this test file
+    assert any("test_ledger.py" in fr for fr in leak["stack"])
+    assert leak["trace_id"] and leak["trace_id"].startswith("t")
+
+
+def test_stack_capture_can_be_disabled():
+    led = ResourceLedger(capture_stacks=False)
+    led.acquire("pin", "x")
+    assert led.leaks(max_age_s=0.0)[0]["stack"] == []
+
+
+# ---------------------------------------------------------- collectors
+
+
+def test_collectors_pull_gauges_and_isolate_failures():
+    led = ResourceLedger()
+    led.register_collector("wal:a", lambda: {"records": 3, "bytes": 99})
+    led.register_collector("boom", lambda: 1 / 0)
+    g = led.gauges()
+    assert g["wal:a"] == {"records": 3.0, "bytes": 99.0}
+    assert g["boom"]["error"] == 1.0 and "_error_msg" in g["boom"]
+    snap = led.snapshot()
+    assert "boom" in snap["collector_errors"]
+    assert snap["gauges"]["wal:a"]["records"] == 3.0
+    led.deregister_collector("boom")
+    assert "boom" not in led.gauges()
+
+
+def test_snapshot_shape():
+    led = ResourceLedger()
+    led.acquire("pin", "x", bytes=10)
+    snap = led.snapshot(leak_age_s=0.0)
+    assert set(snap) >= {"t_wall", "held", "counters", "gauges", "leaks"}
+    assert snap["held"]["pin"]["x"]["bytes"] == 10
+    assert len(snap["leaks"]) == 1
+
+
+def test_scoped_ledger_isolates_and_restores():
+    outer = get_ledger()
+    with scoped() as led:
+        assert get_ledger() is led and led is not outer
+        led.acquire("pin", "x")
+        assert led.leases("pin")
+    assert get_ledger() is outer
+    assert not outer.leases("pin")
+    # explicit install/restore path
+    mine = ResourceLedger()
+    prev = set_ledger(mine)
+    try:
+        assert get_ledger() is mine
+    finally:
+        set_ledger(prev)
+
+
+# -------------------------------------- real registrations: live + WAL
+
+
+def test_unreleased_snapshot_pin_is_reported_as_leak(tiny_ds):
+    """Acceptance: a snapshot pin that is never released must show up
+    in the leak report, attributed to its acquiring call site."""
+    with scoped() as led:
+        lfx = LiveFilteredIndex(tiny_ds)
+        try:
+            snap = lfx.snapshot()            # deliberately not released
+            held = led.leases("snapshot_pin")
+            assert len(held) == 1
+            leaks = led.leaks(max_age_s=0.0)
+            assert len(leaks) == 1
+            (leak,) = leaks
+            assert leak["kind"] == "snapshot_pin"
+            assert leak["meta"]["generation"] == 0
+            assert any("live.py" in fr or "test_ledger.py" in fr
+                       for fr in leak["stack"])
+            snap.release()                   # the fix the leak points to
+            assert led.leaks(max_age_s=0.0) == []
+            assert led.counters()["snapshot_pin"]["released"] == 1
+        finally:
+            lfx.close()
+
+
+def test_live_index_registers_resource_collector(tiny_ds):
+    with scoped() as led:
+        lfx = LiveFilteredIndex(tiny_ds)
+        try:
+            sources = [s for s in led.gauges() if s.startswith("live:")]
+            assert len(sources) == 1
+            g = led.gauges()[sources[0]]
+            assert g["generation"] == 0.0 and g["pinned_readers"] == 0.0
+            assert "delta_host_bytes" in g and "retired_generations" in g
+            snap = lfx.snapshot()
+            assert led.gauges()[sources[0]]["pinned_readers"] == 1.0
+            snap.release()
+        finally:
+            lfx.close()
+        assert sources[0] not in led.gauges()   # close deregisters
+
+
+def test_wal_backlog_surfaces_through_ledger(tmp_path):
+    with scoped() as led:
+        wal = WriteAheadLog.create(str(tmp_path / "ops.wal"), dim=4,
+                                   width=1, generation=0, sync_every=100)
+        try:
+            keys = np.arange(3, dtype=np.int64)
+            vecs = np.zeros((3, 4), np.float32)
+            bms = np.zeros((3, 1), np.uint32)
+            wal.log_upsert(0, keys, vecs, bms)
+            bl = wal.backlog()
+            assert bl["records"] == 1 and bl["bytes"] > 0
+            (src,) = [s for s in led.gauges() if s.startswith("wal:")]
+            assert led.gauges()[src]["records"] == 1.0
+            wal.sync()
+            assert wal.backlog() == {"records": 0, "bytes": 0}
+            assert led.gauges()[src]["records"] == 0.0
+        finally:
+            wal.close()
+        assert not [s for s in led.gauges() if s.startswith("wal:")]

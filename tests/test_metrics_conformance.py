@@ -1,0 +1,389 @@
+"""PR-10 Prometheus exposition conformance: a strict text-format 0.0.4
+parser is applied to `metrics_text()` rendered over every surface at
+once — HELP/TYPE pairing and ordering, metric/label name grammar,
+label-value and HELP escaping round-trips, histogram bucket cumulative
+monotonicity with a terminal `+Inf` equal to `_count`, and no
+duplicate samples.  Plus the serving-side contracts of
+`MetricsServer`: concurrent scrape-vs-serve consistency, and the
+`/healthz` endpoint degrading to HTTP 503 on queue/WAL backpressure
+(formerly it answered 200 unconditionally)."""
+
+import json
+import re
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.ledger import ResourceLedger
+from repro.ann.metrics import (MetricsServer, _esc, _esc_help,
+                               backpressure_health, metrics_text)
+from repro.ann.obslog import WideEventLog
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.slo import Objective, SLOEngine
+from repro.ann.telemetry import TelemetrySink, constant_router
+from repro.ann.trace import Tracer
+from repro.core import features as F
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import make_queries
+
+_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+_TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def _unescape(s: str, *, help_text: bool = False) -> str:
+    out, i = [], 0
+    while i < len(s):
+        c = s[i]
+        if c == "\\":
+            assert i + 1 < len(s), f"dangling backslash in {s!r}"
+            n = s[i + 1]
+            if n == "\\":
+                out.append("\\")
+            elif n == "n":
+                out.append("\n")
+            elif n == '"' and not help_text:
+                out.append('"')
+            else:
+                raise AssertionError(f"invalid escape \\{n} in {s!r}")
+            i += 2
+        else:
+            assert c != "\n"
+            if not help_text:
+                assert c != '"' or True
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def _parse_labels(body: str) -> dict:
+    """Strict label-block parser: name="value" pairs, comma separated,
+    escapes limited to \\\\ \\" \\n inside values."""
+    labels: dict[str, str] = {}
+    i = 0
+    while i < len(body):
+        m = re.match(r"[a-zA-Z_][a-zA-Z0-9_]*", body[i:])
+        assert m, f"bad label name at {body[i:]!r}"
+        name = m.group(0)
+        assert name not in labels, f"duplicate label {name}"
+        i += len(m.group(0))
+        assert body[i] == "=", body
+        assert body[i + 1] == '"', body
+        i += 2
+        raw = []
+        while True:
+            assert i < len(body), f"unterminated label value in {body!r}"
+            c = body[i]
+            if c == "\\":
+                raw.append(body[i:i + 2])
+                i += 2
+            elif c == '"':
+                i += 1
+                break
+            else:
+                raw.append(c)
+                i += 1
+        labels[name] = _unescape("".join(raw))
+        if i < len(body):
+            assert body[i] == ",", f"junk after label value: {body[i:]!r}"
+            i += 1
+    return labels
+
+
+def parse_exposition(text: str):
+    """Returns (samples, helps, types); raises AssertionError on any
+    conformance violation."""
+    assert text.endswith("\n"), "exposition must end with a newline"
+    helps: dict[str, str] = {}
+    types: dict[str, str] = {}
+    samples: list[tuple[str, tuple, float]] = []
+    seen_keys: set[tuple] = set()
+    for line in text.splitlines():
+        assert line == line.strip(), f"stray whitespace: {line!r}"
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            rest = line[len("# HELP "):]
+            name, _, help_ = rest.partition(" ")
+            assert _NAME.match(name), name
+            assert name not in helps, f"duplicate HELP for {name}"
+            helps[name] = _unescape(help_, help_text=True)
+            continue
+        if line.startswith("# TYPE "):
+            rest = line[len("# TYPE "):]
+            name, _, mtype = rest.partition(" ")
+            assert _NAME.match(name), name
+            assert mtype in _TYPES, mtype
+            assert name not in types, f"duplicate TYPE for {name}"
+            assert name in helps, f"TYPE before HELP for {name}"
+            types[name] = mtype
+            continue
+        assert not line.startswith("#"), f"unknown comment: {line!r}"
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})? (\S+)$",
+                     line)
+        assert m, f"unparseable sample: {line!r}"
+        name, _, lab_body, value = m.groups()
+        labels = _parse_labels(lab_body) if lab_body else {}
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        family = base if base in types else name
+        assert family in types, f"sample {name} without TYPE"
+        assert family in helps, f"sample {name} without HELP"
+        if value in ("+Inf", "-Inf", "NaN"):
+            val = float(value.replace("Inf", "inf"))
+        else:
+            val = float(value)
+        key = (name, tuple(sorted(labels.items())))
+        assert key not in seen_keys, f"duplicate sample {key}"
+        seen_keys.add(key)
+        samples.append((name, tuple(sorted(labels.items())), val))
+    return samples, helps, types
+
+
+def _check_histograms(samples, types):
+    """Cumulative bucket monotonicity and +Inf == _count per series."""
+    hist_families = {n for n, t in types.items() if t == "histogram"}
+    checked = 0
+    for fam in hist_families:
+        series: dict[tuple, list] = {}
+        counts: dict[tuple, float] = {}
+        for name, labels, val in samples:
+            lab = dict(labels)
+            grouping = tuple(sorted((k, v) for k, v in lab.items()
+                                    if k != "le"))
+            if name == f"{fam}_bucket":
+                series.setdefault(grouping, []).append((lab["le"], val))
+            elif name == f"{fam}_count":
+                counts[grouping] = val
+        for grouping, buckets in series.items():
+            vals = [v for _le, v in buckets]      # exposition order
+            assert vals == sorted(vals), f"non-cumulative {fam}"
+            assert buckets[-1][0] == "+Inf", f"{fam} missing +Inf"
+            assert buckets[-1][1] == counts[grouping], \
+                f"{fam}: +Inf bucket != _count"
+            checked += 1
+    return checked
+
+
+# ---------------------------------------------------------- unit: escaping
+
+
+def test_label_and_help_escaping_round_trip():
+    tricky = 'sla\\sh "quote"\nnewline'
+    assert _unescape(_esc(tricky)) == tricky
+    assert _unescape(_esc_help(tricky), help_text=True) == tricky
+    led = ResourceLedger()
+    led.register_collector(tricky, lambda: {"v": 1})
+    samples, helps, _ = parse_exposition(metrics_text(ledger=led))
+    sources = [dict(lab)["source"] for n, lab, _v in samples
+               if n == "ann_ledger_gauge"]
+    assert sources == [tricky]                    # exact round-trip
+
+
+def test_help_text_newline_is_escaped_on_the_wire():
+    from repro.ann.metrics import _Writer
+    w = _Writer()
+    w.header("m_total", "counter", 'line one\nline "two" \\ three')
+    w.sample("m_total", None, 1)
+    text = w.text()
+    # the embedded newline must be escaped, not split the HELP line
+    assert len(text.splitlines()) == 3            # HELP, TYPE, sample
+    _, helps, _ = parse_exposition(text)
+    assert helps["m_total"] == 'line one\nline "two" \\ three'
+
+
+# ---------------------------------------- full-surface strict conformance
+
+
+def _two_method_table(ds_name):
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for s in cand["ivf_gamma"].param_settings():
+            table.add(ds_name, pt, "ivf_gamma", s.ps_id, 0.97, 5000.0)
+        for s in cand["postfilter"].param_settings():
+            table.add(ds_name, pt, "postfilter", s.ps_id, 0.95, 500.0)
+    return table
+
+
+@pytest.fixture()
+def observed_service(tiny_ds, tmp_path):
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"],
+                             _two_method_table(tiny_ds.name))
+    sink = TelemetrySink(capacity=256, reservoir=32, seed=5)
+    tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=8, seed=9)
+    slo = SLOEngine([Objective(name="lat", kind="latency", target=0.99,
+                               threshold_us=5e6)], min_events=1,
+                    tracer=tracer)
+    led = ResourceLedger()
+    led.acquire("pin", "tiny", bytes=64)
+    with FilteredIndex(tiny_ds) as fx, \
+            WideEventLog(str(tmp_path / "ev.jsonl")) as log:
+        svc = RouterService(fx, router, t=0.9, telemetry=sink,
+                            tracer=tracer, slo=slo, obslog=log)
+        qs = make_queries(tiny_ds, Predicate.AND, 8, seed=3)
+        batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 5)
+        svc.search(batch)
+        yield svc, led, batch
+
+
+def test_full_surface_exposition_is_conformant(observed_service):
+    svc, led, _batch = observed_service
+    text = metrics_text(service=svc, ledger=led)
+    samples, helps, types = parse_exposition(text)
+    assert _check_histograms(samples, types) >= 1   # span histograms
+    names = {n for n, _l, _v in samples}
+    for expected in ("ann_queries_total", "ann_traces_total",
+                     "ann_span_latency_us_bucket", "ann_ledger_leases_held",
+                     "ann_slo_firing", "ann_obslog_events_total"):
+        assert expected in names, f"missing {expected}"
+    # counters end in _total per convention (ledger gauges excepted)
+    for fam, t in types.items():
+        if t == "counter" and fam != "ann_counter":
+            assert fam.endswith("_total"), fam
+
+
+def test_exposition_has_no_duplicate_samples_under_traffic(
+        observed_service):
+    svc, led, batch = observed_service
+    for _ in range(3):
+        svc.search(batch)
+    samples, _h, _t = parse_exposition(metrics_text(service=svc,
+                                                    ledger=led))
+    keys = [(n, l) for n, l, _v in samples]
+    assert len(keys) == len(set(keys))
+
+
+def test_concurrent_scrape_vs_serve_race(observed_service):
+    """Scrapes taken while the serve path mutates every surface must
+    all parse strictly — torn reads would show as grammar violations
+    or non-cumulative histograms."""
+    svc, led, batch = observed_service
+    srv = MetricsServer(lambda: metrics_text(service=svc, ledger=led),
+                        ledger=led, slo=svc.slo, obslog=svc.obslog)
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def serve_loop():
+        try:
+            while not stop.is_set():
+                svc.search(batch)
+        except BaseException as e:     # surfaced in the main thread
+            errors.append(e)
+
+    t = threading.Thread(target=serve_loop, daemon=True)
+    t.start()
+    try:
+        for _ in range(10):
+            body = urllib.request.urlopen(srv.url + "/metrics",
+                                          timeout=10).read().decode()
+            samples, _h, types = parse_exposition(body)
+            _check_histograms(samples, types)
+            for route in ("/statusz", "/debug/ledger", "/debug/slo"):
+                payload = json.loads(urllib.request.urlopen(
+                    srv.url + route, timeout=10).read())
+                assert isinstance(payload, dict)
+    finally:
+        stop.set()
+        t.join(timeout=30)
+        srv.close()
+    assert not errors
+
+
+def test_online_table_shard_cells_export_per_shard(tiny_ds):
+    from repro.ann.telemetry import OnlineBenchmarkTable
+    ot = OnlineBenchmarkTable(_two_method_table(tiny_ds.name))
+    ot.observe_shard(tiny_ds.name, 0, qps=1000.0)
+    ot.observe_shard(tiny_ds.name, 1, qps=250.0)
+    samples, _h, types = parse_exposition(metrics_text(table=ot))
+    assert types["ann_table_shard_qps"] == "gauge"
+    qps = {dict(lab)["shard"]: v for n, lab, v in samples
+           if n == "ann_table_shard_qps"}
+    assert set(qps) == {"0", "1"}           # one series per shard
+    assert qps["0"] == pytest.approx(1000.0)
+    div = [v for n, _l, v in samples if n == "ann_table_shard_divergence"]
+    assert div == [pytest.approx(4.0)]
+    # service introspection reaches the table behind the router
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], ot)
+    svc = type("S", (), {"router": router, "telemetry": None,
+                         "tracer": None, "slo": None, "obslog": None})()
+    names = {n for n, _l, _v in
+             parse_exposition(metrics_text(service=svc))[0]}
+    assert "ann_table_shard_qps" in names
+
+
+# ------------------------------------------------- healthz backpressure
+
+
+class _FakeQueue:
+    def __init__(self, pending):
+        self.pending = pending
+
+    def stats(self):
+        return {"pending": self.pending}
+
+
+class _FakeWAL:
+    def __init__(self, records=0, bytes=0):
+        self._bl = {"records": records, "bytes": bytes}
+
+    def backlog(self):
+        return self._bl
+
+
+def _get(url):
+    try:
+        r = urllib.request.urlopen(url, timeout=10)
+        return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_healthz_degrades_on_queue_backpressure():
+    q = _FakeQueue(pending=0)
+    health = backpressure_health(queue=q, queue_high_water=4)
+    with MetricsServer(lambda: "ann_up 1\n", health=health) as srv:
+        code, payload = _get(srv.url + "/healthz")
+        assert code == 200 and payload["status"] == "ok"
+        q.pending = 100                  # saturated, no exception raised
+        code, payload = _get(srv.url + "/healthz")
+        assert code == 503
+        assert payload["status"] == "degraded"
+        assert any("queue_pending" in r for r in payload["reasons"])
+
+
+def test_healthz_degrades_on_wal_fsync_backlog():
+    wal = _FakeWAL()
+    health = backpressure_health(wal=wal, wal_records_max=10,
+                                 wal_bytes_max=1000)
+    with MetricsServer(lambda: "ann_up 1\n", health=health) as srv:
+        assert _get(srv.url + "/healthz")[0] == 200
+        wal._bl = {"records": 11, "bytes": 0}
+        code, payload = _get(srv.url + "/healthz")
+        assert code == 503 and "reasons" in payload
+        wal._bl = {"records": 0, "bytes": 2000}
+        assert _get(srv.url + "/healthz")[0] == 503
+        wal._bl = {"records": 0, "bytes": 0}
+        assert _get(srv.url + "/healthz")[0] == 200   # recovers
+
+
+def test_healthz_still_degrades_on_exception():
+    def health():
+        raise RuntimeError("probe exploded")
+    with MetricsServer(lambda: "ann_up 1\n", health=health) as srv:
+        code, payload = _get(srv.url + "/healthz")
+        assert code == 503 and payload["status"] == "degraded"
+
+
+def test_debug_endpoints_404_without_handles():
+    with MetricsServer(lambda: "ann_up 1\n") as srv:
+        assert _get(srv.url + "/debug/ledger")[0] == 404
+        assert _get(srv.url + "/debug/slo")[0] == 404
+        code, payload = _get(srv.url + "/statusz")
+        assert code == 200 and payload["health"]["status"] == "ok"

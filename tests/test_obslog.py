@@ -1,0 +1,249 @@
+"""PR-10 wide-event log: ring/writer round-trip and ordering, rotation,
+overrun shedding (counted drops, never blocking), serialisation-error
+isolation, per-request event construction, the parse-and-join
+acceptance test against the flight recorder (every wide event's trace
+id must resolve to a recorded span tree), and post-mortem dumps via
+explicit call, SIGUSR2 and the atexit hook."""
+
+import json
+import os
+import signal
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.ledger import ResourceLedger
+from repro.ann.obslog import (PostmortemDumper, WideEventLog,
+                              install_postmortem, read_events,
+                              request_events)
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.telemetry import TelemetrySink, constant_router
+from repro.ann.trace import Tracer
+from repro.core import features as F
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import make_queries
+
+
+# ------------------------------------------------------ ring + writer
+
+
+def test_emit_flush_read_round_trip(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with WideEventLog(path, capacity=64, autostart=False) as log:
+        for i in range(10):
+            log.emit({"qi": i, "method": "m"})
+        log.flush()
+        s = log.stats()
+        assert s["emitted"] == 10 and s["written"] == 10
+        assert s["dropped"] == 0
+    events = list(read_events(path))
+    assert [e["qi"] for e in events] == list(range(10))
+
+
+def test_background_writer_drains_without_flush(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with WideEventLog(path, capacity=64, flush_interval_s=0.01) as log:
+        for i in range(5):
+            log.emit({"qi": i})
+        deadline = 200
+        while log.stats()["written"] < 5 and deadline:
+            deadline -= 1
+            threading.Event().wait(0.01)
+    assert len(list(read_events(path))) == 5
+
+
+def test_overrun_sheds_oldest_and_counts_drops(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with WideEventLog(path, capacity=8, autostart=False) as log:
+        for i in range(20):
+            log.emit({"qi": i})
+        log.flush()
+        s = log.stats()
+        assert s["emitted"] == 20
+        assert s["dropped"] == 12 and s["written"] == 8
+    # the survivors are the 8 newest, in order
+    assert [e["qi"] for e in read_events(path)] == list(range(12, 20))
+
+
+def test_rotation_keeps_bounded_generations(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with WideEventLog(path, capacity=64, rotate_bytes=120,
+                      rotate_keep=2, autostart=False) as log:
+        for i in range(30):
+            log.emit({"qi": i, "pad": "x" * 40})
+            log.flush()
+        s = log.stats()
+    assert s["rotations"] >= 3
+    assert os.path.exists(f"{path}.1") and os.path.exists(f"{path}.2")
+    assert not os.path.exists(f"{path}.3")        # older ones deleted
+    seen = [e["qi"] for e in read_events(path)]
+    assert seen == sorted(seen)                   # oldest -> newest
+    assert seen[-1] == 29
+    # the active file alone is just the newest tail
+    active = [e["qi"] for e in read_events(path, include_rotated=False)]
+    assert active == seen[len(seen) - len(active):]
+
+
+def test_unserialisable_event_counts_error_not_crash(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    loop = {}
+    loop["self"] = loop                           # circular: json raises
+    with WideEventLog(path, capacity=8, autostart=False) as log:
+        log.emit({"qi": 0})
+        log.emit(loop)
+        log.emit({"qi": 2})
+        log.flush()
+        s = log.stats()
+    assert s["write_errors"] == 1
+    assert [e["qi"] for e in read_events(path)] == [0, 2]
+
+
+def test_read_events_skips_torn_tail_line(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"qi": 0}) + "\n")
+        f.write('{"qi": 1, "meth')                # torn mid-crash write
+    assert [e["qi"] for e in read_events(path)] == [0]
+
+
+# -------------------------------------------------- event construction
+
+
+def test_request_events_builds_one_row_per_query():
+    from types import SimpleNamespace
+    batch = SimpleNamespace(q=3, pred=Predicate.AND, k=5)
+    decisions = [SimpleNamespace(method="sieve", ps_id="s1"),
+                 SimpleNamespace(method="ivf_gamma", ps_id="g0"),
+                 SimpleNamespace(method="sieve", ps_id="s1")]
+    evs = request_events(batch, decisions, per_query_us=123.4,
+                         trace_id="t1-abc",
+                         timings={"search_s": 0.002, "total_s": 0.003,
+                                  "queries": 3},
+                         generation=2, table_version=5,
+                         slo_state="firing:lat",
+                         cache=[None, "exact", None])
+    assert len(evs) == 3
+    assert [e["qi"] for e in evs] == [0, 1, 2]
+    for e in evs:
+        assert e["trace"] == "t1-abc" and e["batch_q"] == 3
+        assert e["generation"] == 2 and e["table_version"] == 5
+        assert e["slo"] == "firing:lat"
+        assert e["timings_ms"] == {"search": 2.0, "total": 3.0}
+    assert evs[1]["method"] == "ivf_gamma" and evs[1]["cache"] == "exact"
+    assert evs[0]["cache"] is None
+    assert json.loads(json.dumps(evs[0]))["lat_us"] == 123.4
+
+
+# ------------------------------------- acceptance: join against flight
+
+
+def _two_method_table(ds_name):
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for s in cand["ivf_gamma"].param_settings():
+            table.add(ds_name, pt, "ivf_gamma", s.ps_id, 0.97, 5000.0)
+        for s in cand["postfilter"].param_settings():
+            table.add(ds_name, pt, "postfilter", s.ps_id, 0.95, 500.0)
+    return table
+
+
+def test_wide_events_join_flight_recorder_on_trace_id(tiny_ds, tmp_path):
+    """Acceptance: serve through a traced service with the wide-event
+    log attached, then parse the JSONL back and join every event to its
+    flight-recorder span tree by trace id."""
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"],
+                             _two_method_table(tiny_ds.name))
+    tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=16, seed=7)
+    path = str(tmp_path / "wide.jsonl")
+    with FilteredIndex(tiny_ds) as fx, WideEventLog(path) as log:
+        svc = RouterService(fx, router, t=0.9, tracer=tracer, obslog=log)
+        qs = make_queries(tiny_ds, Predicate.AND, 12, seed=3)
+        batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+        svc.search(batch)
+        svc.search(batch)
+        log.flush()
+        events = list(read_events(path))
+        assert len(events) == 24                  # one row per query
+        flight = {r["trace_id"]: r for r in tracer.flight()}
+        assert all(f is not None for f in flight)
+        joined = 0
+        for ev in events:
+            assert ev["trace"], "wide event without trace id"
+            rec = flight[ev["trace"]]             # KeyError = join broken
+            assert rec["duration_ms"] > 0
+            assert ev["method"] in {"ivf_gamma", "postfilter"}
+            joined += 1
+        assert joined == 24
+        # both batches share per-batch rows but have distinct trace ids
+        assert len({ev["trace"] for ev in events}) == 2
+
+
+# ------------------------------------------------------- post-mortems
+
+
+def _tiny_slo():
+    from repro.ann.slo import Objective, SLOEngine
+    eng = SLOEngine([Objective(name="lat", kind="latency", target=0.9,
+                               threshold_us=1.0)], min_events=1)
+    eng.observe_batch(4, per_query_us=100.0)
+    return eng
+
+
+def test_postmortem_dump_contains_all_sections(tmp_path):
+    tracer = Tracer(slow_ms=0.0, sample=1.0, seed=1)
+    with tracer.trace("request"):
+        pass
+    led = ResourceLedger()
+    led.acquire("pin", "x")
+    with WideEventLog(str(tmp_path / "ev.jsonl"), autostart=False) as log:
+        log.emit({"qi": 0})
+        dumper = PostmortemDumper(tracer=tracer, ledger=led,
+                                  slo=_tiny_slo(), obslog=log,
+                                  out_dir=str(tmp_path),
+                                  extra=lambda: {"note": "hi"})
+        path = dumper.dump("unit-test")
+        with open(path) as f:
+            d = json.load(f)
+    assert d["reason"] == "unit-test"
+    assert d["flight"] and d["flight"][0]["trace_id"]
+    assert d["ledger"]["held"]["pin"]["x"]["leases"] == 1
+    assert d["slo"]["state"].startswith("firing")
+    assert d["obslog"]["written"] == 1
+    assert d["extra"] == {"note": "hi"}
+
+
+@pytest.mark.skipif(not hasattr(signal, "SIGUSR2"),
+                    reason="platform has no SIGUSR2")
+def test_sigusr2_writes_postmortem(tmp_path):
+    dumper = install_postmortem(ledger=ResourceLedger(),
+                                out_dir=str(tmp_path),
+                                install_atexit=False)
+    try:
+        os.kill(os.getpid(), signal.SIGUSR2)
+        files = [f for f in os.listdir(tmp_path)
+                 if f.startswith("postmortem-")]
+        assert len(files) == 1
+        with open(tmp_path / files[0]) as f:
+            assert json.load(f)["reason"] == "SIGUSR2"
+    finally:
+        dumper.uninstall()
+
+
+def test_atexit_hook_dumps_once(tmp_path):
+    dumper = PostmortemDumper(ledger=ResourceLedger(),
+                              out_dir=str(tmp_path))
+    dumper.install(install_signal=False, install_atexit=True)
+    try:
+        dumper._atexit_dump()
+        dumper._atexit_dump()                    # second call is a no-op
+        files = [f for f in os.listdir(tmp_path)
+                 if f.startswith("postmortem-")]
+        assert len(files) == 1
+    finally:
+        dumper.uninstall()

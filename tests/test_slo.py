@@ -1,0 +1,272 @@
+"""PR-10 SLO engine: objective validation, sliding-window burn-rate
+math, multi-window multi-burn-rate alerting semantics (both windows
+must burn, rising-edge alerts, min-event cold-start guard), audit
+ingestion, and the end-to-end acceptance path — an injected recall
+regression (`DegradedMethod`) flows through the `RecallAuditor` into
+the engine and fires within three evaluation passes with flight-
+recorder trace ids and table-version provenance attached."""
+
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.ann.index import FilteredIndex, QueryBatch
+from repro.ann.predicates import Predicate
+from repro.ann.registry import candidate_methods
+from repro.ann.service import RouterService
+from repro.ann.slo import DEFAULT_WINDOWS, Objective, SLOEngine
+from repro.ann.telemetry import (DegradedMethod, OnlineBenchmarkTable,
+                                 RecallAuditor, TelemetrySink,
+                                 constant_router)
+from repro.ann.trace import Tracer
+from repro.core import features as F
+from repro.core.table import BenchmarkTable
+from repro.data.ann_synth import make_queries
+
+
+class FakeClock:
+    def __init__(self, t: float = 1000.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, s: float) -> None:
+        self.t += s
+
+
+def _latency_engine(clock, *, target=0.9, threshold_us=1000.0,
+                    windows=((10.0, 2.0, 2.0),), min_events=1, **kw):
+    return SLOEngine([Objective(name="lat", kind="latency", target=target,
+                                threshold_us=threshold_us)],
+                     windows=windows, min_events=min_events,
+                     clock=clock, **kw)
+
+
+# ----------------------------------------------------------- objectives
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        Objective(name="x", kind="throughput", target=0.9)
+    with pytest.raises(ValueError):
+        Objective(name="x", kind="latency", target=0.9)   # no threshold
+    with pytest.raises(ValueError):
+        Objective(name="x", kind="recall", target=0.9)    # no floor
+    with pytest.raises(ValueError):
+        Objective(name="x", kind="availability", target=1.0)
+    o = Objective(name="x", kind="latency", target=0.99,
+                  threshold_us=500.0)
+    assert o.budget == pytest.approx(0.01)
+
+
+def test_engine_rejects_duplicate_names_and_bad_windows():
+    o = Objective(name="a", kind="availability", target=0.99)
+    with pytest.raises(ValueError):
+        SLOEngine([o, o])
+    with pytest.raises(ValueError):
+        SLOEngine([o], windows=((5.0, 5.0, 2.0),))   # short >= long
+    with pytest.raises(ValueError):
+        SLOEngine([])
+
+
+# ------------------------------------------------------- burn-rate math
+
+
+def test_burn_rate_is_bad_fraction_over_budget():
+    clk = FakeClock()
+    eng = _latency_engine(clk, target=0.9)   # budget 0.1
+    # 5 of 10 queries over threshold -> bad_frac 0.5 -> burn 5.0
+    eng.observe_batch(5, per_query_us=2000.0)
+    eng.observe_batch(5, per_query_us=100.0)
+    st = eng.evaluate()
+    win = st["lat"]["windows"][0]
+    assert win["burn_long"] == pytest.approx(5.0)
+    assert win["burn_short"] == pytest.approx(5.0)
+    assert st["lat"]["firing"] is True       # 5.0 >= factor 2.0
+    assert eng.state() == "firing:lat"
+
+
+def test_alert_needs_both_windows_burning():
+    clk = FakeClock()
+    eng = _latency_engine(clk, windows=((10.0, 2.0, 2.0),))
+    eng.observe_batch(8, per_query_us=5000.0)     # all bad
+    clk.advance(3.0)                               # past the short window
+    st = eng.evaluate()
+    # long window still sees the burn; short window has no events
+    assert st["lat"]["windows"][0]["burn_long"] > 2.0
+    assert st["lat"]["firing"] is False
+    eng.observe_batch(1, per_query_us=5000.0)     # confirm in short window
+    assert eng.evaluate()["lat"]["firing"] is True
+
+
+def test_min_events_guards_cold_start():
+    clk = FakeClock()
+    eng = _latency_engine(clk, min_events=10)
+    eng.observe_batch(5, per_query_us=9000.0)     # 5 bad < min_events
+    assert eng.evaluate()["lat"]["firing"] is False
+    eng.observe_batch(5, per_query_us=9000.0)
+    assert eng.evaluate()["lat"]["firing"] is True
+
+
+def test_window_eviction_clears_firing():
+    clk = FakeClock()
+    eng = _latency_engine(clk, windows=((10.0, 2.0, 2.0),))
+    eng.observe_batch(6, per_query_us=9000.0)
+    assert eng.evaluate()["lat"]["firing"] is True
+    clk.advance(30.0)                  # both windows age out entirely
+    st = eng.evaluate()
+    assert st["lat"]["firing"] is False
+    assert eng.state() == "ok"
+
+
+def test_alerts_fire_on_rising_edge_only():
+    clk = FakeClock()
+    eng = _latency_engine(clk, windows=((10.0, 2.0, 2.0),))
+    eng.observe_batch(6, per_query_us=9000.0)
+    eng.evaluate()
+    eng.observe_batch(6, per_query_us=9000.0)
+    eng.evaluate()                     # still firing: no second alert
+    assert len(eng.alerts()) == 1
+    clk.advance(30.0)
+    eng.evaluate()                     # cleared
+    eng.observe_batch(6, per_query_us=9000.0)
+    eng.evaluate()                     # second rising edge
+    assert len(eng.alerts()) == 2
+
+
+def test_availability_and_pred_filter():
+    clk = FakeClock()
+    eng = SLOEngine(
+        [Objective(name="avail", kind="availability", target=0.9),
+         Objective(name="and_lat", kind="latency", target=0.9,
+                   threshold_us=100.0, pred=int(Predicate.AND))],
+        windows=((10.0, 2.0, 2.0),), min_events=1, clock=clk)
+    eng.observe_batch(4, per_query_us=50.0, errors=4,
+                      pred=int(Predicate.OR))
+    st = eng.evaluate()
+    assert st["avail"]["firing"] is True
+    # the OR batch never reached the AND-scoped latency objective
+    assert st["and_lat"]["observed"] == 0
+    eng.observe_request(9000.0, pred=int(Predicate.AND))
+    assert eng.evaluate()["and_lat"]["firing"] is True
+
+
+def test_observe_recall_and_ingest_audit():
+    clk = FakeClock()
+    eng = SLOEngine([Objective(name="rec", kind="recall", target=0.9,
+                               floor=0.8)],
+                    windows=((10.0, 2.0, 2.0),), min_events=2, clock=clk)
+    report = {"results": [(SimpleNamespace(pred=0), 0.5, None),
+                          (SimpleNamespace(pred=1), 0.4, None),
+                          (SimpleNamespace(pred=2), 0.95, None)]}
+    eng.ingest_audit(report)
+    st = eng.evaluate()
+    assert st["rec"]["observed"] == 3
+    assert st["rec"]["firing"] is True       # 2/3 bad, burn 6.7 >= 2
+
+
+def test_alert_carries_trace_ids_and_provenance():
+    clk = FakeClock()
+    tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=8, seed=3)
+    with tracer.trace("request"):
+        pass
+    eng = _latency_engine(clk, tracer=tracer,
+                          provenance=lambda: {"generation": 4})
+    eng.note_provenance(table_version=7)
+    eng.observe_batch(6, per_query_us=9000.0)
+    eng.evaluate()
+    (alert,) = eng.alerts()
+    assert alert.trace_ids, "flight-recorder evidence missing"
+    assert all(t.startswith("t") for t in alert.trace_ids)
+    assert alert.provenance == {"table_version": 7, "generation": 4}
+    d = alert.to_dict()
+    assert d["window"]["long_s"] == 10.0 and d["trace_ids"]
+
+
+def test_status_and_stats_shapes():
+    clk = FakeClock()
+    eng = _latency_engine(clk)
+    eng.observe_batch(4, per_query_us=10.0)
+    st = eng.status()
+    assert st["state"] == "ok" and st["objectives"]["lat"]["windows"]
+    assert st["alerts"] == []
+    assert eng.stats()["observed"]["lat"] == 4
+
+
+def test_background_evaluator_thread_fires():
+    eng = SLOEngine([Objective(name="lat", kind="latency", target=0.9,
+                               threshold_us=100.0)],
+                    windows=((60.0, 5.0, 2.0),), min_events=1)
+    eng.observe_batch(8, per_query_us=9000.0)
+    eng.start(interval_s=0.01)
+    try:
+        deadline = time.monotonic() + 2.0
+        while eng.state() == "ok" and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        eng.stop()
+    assert eng.state() == "firing:lat"
+    assert eng.alerts()
+
+
+def test_default_windows_are_sre_shaped():
+    for long_s, short_s, factor in DEFAULT_WINDOWS:
+        assert short_s < long_s and factor > 1.0
+
+
+# --------------------------------------------- e2e: degradation -> page
+
+
+def _two_method_table(ds_name):
+    cand = candidate_methods()
+    table = BenchmarkTable.new()
+    for pt in range(3):
+        for s in cand["ivf_gamma"].param_settings():
+            table.add(ds_name, pt, "ivf_gamma", s.ps_id, 0.97, 5000.0)
+        for s in cand["postfilter"].param_settings():
+            table.add(ds_name, pt, "postfilter", s.ps_id, 0.95, 500.0)
+    return table
+
+
+def test_degraded_method_fires_recall_slo_within_three_evals(tiny_ds):
+    """Acceptance: inject a recall regression on the routed method; the
+    auditor's exact-recall reports must trip the recall SLO within
+    three evaluation windows, and the alert must carry trace ids and
+    the online table version."""
+    table = _two_method_table(tiny_ds.name)
+    router = constant_router(F.MINIMAL_FEATURES,
+                             ["ivf_gamma", "postfilter"], table)
+    serving = dict(candidate_methods())
+    serving["ivf_gamma"] = DegradedMethod(serving["ivf_gamma"], keep=1)
+    tracer = Tracer(slow_ms=0.0, sample=1.0, flight_capacity=8, seed=1)
+    slo = SLOEngine([Objective(name="recall_floor", kind="recall",
+                               target=0.9, floor=0.8)],
+                    windows=((60.0, 5.0, 2.0),), min_events=4,
+                    tracer=tracer)
+    with FilteredIndex(tiny_ds) as fx:
+        sink = TelemetrySink(capacity=512, reservoir=64, seed=5)
+        svc = RouterService(fx, router, t=0.9, methods=serving,
+                            telemetry=sink, tracer=tracer, slo=slo)
+        ot = OnlineBenchmarkTable(table)
+        auditor = RecallAuditor(fx, sink, table=ot,
+                                ds_name=tiny_ds.name, slo=slo)
+        qs = make_queries(tiny_ds, Predicate.AND, 32, seed=3)
+        batch = QueryBatch(qs.vectors, qs.bitmaps, Predicate.AND, 10)
+        fired_at = None
+        for i in range(3):
+            svc.search(batch)
+            auditor.run_once()
+            slo.evaluate()
+            if slo.state() != "ok":
+                fired_at = i
+                break
+        assert fired_at is not None, "recall SLO never fired"
+        alerts = slo.alerts()
+        assert alerts and alerts[0].objective == "recall_floor"
+        assert alerts[0].kind == "recall"
+        assert alerts[0].trace_ids, "alert lacks flight trace ids"
+        assert alerts[0].provenance.get("table_version") is not None
+        assert slo.stats()["observed"]["recall_floor"] >= 4
